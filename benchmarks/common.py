@@ -1,0 +1,171 @@
+"""Shared benchmark scaffolding.
+
+The paper's I/O metrics depend on (n_neurons, bundle_bytes, sparsity, layout)
+— all taken from Table 3. Activation traces are the planted-cluster synthetic
+workload (core/trace.py) calibrated to each model's Table-3 sparsity; weights
+are synthetic (payload values don't affect I/O metrics). Two layers per model
+are simulated and per-token I/O scales linearly with layer count (layers are
+independent, as the paper exploits for its offline parallelism).
+
+Result row format: (name, us_per_call, derived).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.paper_models import PAPER_MODELS, PAPER_NEURONS, PAPER_SPARSITY
+from repro.core import (EngineConfig, OffloadEngine, PlacementResult,
+                        identity_placement, search_placement, stats_from_masks)
+from repro.core.storage import UFS40, UFSDevice
+from repro.core.trace import SyntheticTraceConfig, synthetic_masks
+
+Row = Tuple[str, float, str]
+
+N_CALIB_TOKENS = 300
+N_SERVE_TOKENS = 120
+N_SIM_LAYERS = 2
+N_CLUSTERS = 64
+BYTES_PER_PARAM = 2        # fp16, the paper's default precision
+
+
+def model_geometry(model_id: str) -> Tuple[int, int, int, float, int]:
+    """(n_neurons_per_block, n_mats, d_model, sparsity, n_layers)."""
+    cfg = PAPER_MODELS[model_id]
+    n, n_mats = PAPER_NEURONS[model_id]
+    return n, n_mats, cfg.d_model, PAPER_SPARSITY[model_id], cfg.n_layers
+
+
+def trace_config(model_id: str, layer: int = 0, seed: int = 0, zipf: float = 1.1,
+                 popularity_seed: int = 0) -> SyntheticTraceConfig:
+    """Cluster membership is keyed on (model, layer) — a MODEL property that
+    calibration and serving share; token sampling + popularity are the
+    'dataset' (paper Fig. 15)."""
+    n, _, _, sparsity, _ = model_geometry(model_id)
+    cpt = max(1, round(sparsity * N_CLUSTERS / 0.9))
+    structure = abs(hash((model_id, layer))) % (2 ** 31)
+    return SyntheticTraceConfig(
+        n_neurons=n, n_clusters=N_CLUSTERS, clusters_per_token=min(cpt, N_CLUSTERS),
+        member_p=0.9, noise_p=0.005, zipf_alpha=zipf, seed=seed,
+        structure_seed=structure, popularity_seed=popularity_seed)
+
+
+@dataclasses.dataclass
+class SimModel:
+    model_id: str
+    calib: List[np.ndarray]          # per layer [T, n] masks
+    serve: List[np.ndarray]
+    bundles: np.ndarray              # [n, bundle_width] shared across sim layers
+    n_mats: int
+    n_layers_real: int
+
+    @property
+    def n_neurons(self) -> int:
+        return self.bundles.shape[0]
+
+
+_SIM_CACHE: Dict[Tuple, SimModel] = {}
+
+
+def build_sim_model(model_id: str, calib_seed: int = 0, serve_seed: int = 1000,
+                    zipf: float = 1.1, serve_zipf: Optional[float] = None,
+                    calib_pop: int = 0, serve_pop: int = 0) -> SimModel:
+    key = (model_id, calib_seed, serve_seed, zipf, serve_zipf, calib_pop, serve_pop)
+    if key in _SIM_CACHE:
+        return _SIM_CACHE[key]
+    n, n_mats, d, sparsity, L = model_geometry(model_id)
+    calib, serve = [], []
+    for layer in range(N_SIM_LAYERS):
+        calib.append(synthetic_masks(
+            trace_config(model_id, layer, seed=calib_seed + layer, zipf=zipf,
+                         popularity_seed=calib_pop), N_CALIB_TOKENS))
+        serve.append(synthetic_masks(
+            trace_config(model_id, layer, seed=serve_seed + layer,
+                         zipf=serve_zipf if serve_zipf is not None else zipf,
+                         popularity_seed=serve_pop), N_SERVE_TOKENS))
+    # synthetic fp16 payloads: [n, n_mats * d]
+    bundles = np.zeros((n, n_mats * d), dtype=np.float16)
+    sim = SimModel(model_id=model_id, calib=calib, serve=serve, bundles=bundles,
+                   n_mats=n_mats, n_layers_real=L)
+    _SIM_CACHE[key] = sim
+    return sim
+
+
+_PLACEMENT_CACHE: Dict[Tuple, List[PlacementResult]] = {}
+
+
+def ripple_placements(sim: SimModel, key_extra: Tuple = ()) -> List[PlacementResult]:
+    key = (sim.model_id, id(sim)) + key_extra
+    if key in _PLACEMENT_CACHE:
+        return _PLACEMENT_CACHE[key]
+    placements = []
+    for masks in sim.calib:
+        stats = stats_from_masks(masks)
+        placements.append(search_placement(stats.distance_matrix(), mode="auto"))
+    _PLACEMENT_CACHE[key] = placements
+    return placements
+
+
+# -- the three systems under comparison --------------------------------------
+
+def make_engines(sim: SimModel, system: str, device: Optional[UFSDevice] = None,
+                 cache_ratio: float = 0.1) -> List[OffloadEngine]:
+    """system: llama.cpp | llmflash | ripple | ripple-offline | ripple-online."""
+    n = sim.n_neurons
+    device = device or UFSDevice(**UFS40)
+    if system == "llama.cpp":
+        cfg = EngineConfig(cache_ratio=cache_ratio, collapse=False,
+                           linking_aligned_cache=False, reads_per_bundle=sim.n_mats)
+        pls = [identity_placement(n) for _ in range(N_SIM_LAYERS)]
+    elif system == "llmflash":    # row-column bundling, S3-FIFO, structure layout
+        cfg = EngineConfig(cache_ratio=cache_ratio, collapse=False,
+                           linking_aligned_cache=False, reads_per_bundle=1)
+        pls = [identity_placement(n) for _ in range(N_SIM_LAYERS)]
+    elif system == "ripple-offline":   # placement only
+        cfg = EngineConfig(cache_ratio=cache_ratio, collapse=False,
+                           linking_aligned_cache=False, reads_per_bundle=1)
+        pls = ripple_placements(sim)
+    elif system == "ripple-online":    # collapse + cache policy only
+        cfg = EngineConfig(cache_ratio=cache_ratio, collapse=True,
+                           linking_aligned_cache=True, reads_per_bundle=1)
+        pls = [identity_placement(n) for _ in range(N_SIM_LAYERS)]
+    elif system == "ripple":
+        cfg = EngineConfig(cache_ratio=cache_ratio, collapse=True,
+                           linking_aligned_cache=True, reads_per_bundle=1)
+        pls = ripple_placements(sim)
+    else:
+        raise ValueError(system)
+    return [OffloadEngine(sim.bundles, placement=pl, device=device, config=cfg)
+            for pl in pls]
+
+
+def serve_and_summarise(sim: SimModel, system: str, device: Optional[UFSDevice] = None,
+                        cache_ratio: float = 0.1) -> Dict[str, float]:
+    engines = make_engines(sim, system, device, cache_ratio)
+    for eng, masks in zip(engines, sim.serve):
+        eng.run_trace(masks)
+    per_layer = [e.summary() for e in engines]
+    scale = sim.n_layers_real / N_SIM_LAYERS
+    return {
+        "io_s_per_token": sum(s["io_seconds_per_token"] for s in per_layer) * scale,
+        "effective_bandwidth": float(np.mean([s["effective_bandwidth"] for s in per_layer])),
+        "raw_bandwidth": float(np.mean([s["raw_bandwidth"] for s in per_layer])),
+        "iops": float(np.mean([s["iops"] for s in per_layer])),
+        "ops_per_token": sum(s["ops_per_token"] for s in per_layer) * scale,
+        "mean_run_length": float(np.mean([s["mean_run_length"] for s in per_layer])),
+        "max_run_length": int(max(s["max_run_length"] for s in per_layer)),
+        "waste_ratio": float(np.mean([s["waste_ratio"] for s in per_layer])),
+        "cache_hit_rate": float(np.mean([s["cache_hit_rate"] for s in per_layer])),
+        "bytes_per_token": sum(
+            sum(t.io.bytes_read for t in e.history) / max(len(e.history), 1)
+            for e in engines) * scale,
+    }
+
+
+def timed_rows(fn, name: str) -> Tuple[List[Row], float]:
+    t0 = time.perf_counter()
+    rows = fn()
+    return rows, time.perf_counter() - t0

@@ -1,0 +1,121 @@
+"""§Perf hillclimb driver: run named variants of the three selected pairs and
+report before/after roofline-relevant numbers.
+
+Must run in its own process (forces 512 host devices like dryrun). Results go
+to experiments/perf/ as JSON, one file per variant.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [--case A|B|C|extra]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+import argparse
+import dataclasses
+import json
+
+from repro.launch.dryrun import run_case
+from repro.launch.mesh import make_production_mesh
+
+
+def _run(tag, arch, shape, overrides=None, options=None, microbatches=None, mesh=None):
+    r = run_case(arch, shape, mesh=mesh, microbatches=microbatches,
+                 config_overrides=overrides, options=options,
+                 save_dir="experiments/perf", tag_suffix="_" + tag)
+    row = {
+        "variant": tag,
+        "flops_body": r["cost_analysis"].get("flops", 0.0),
+        "bytes_body": r["cost_analysis"].get("bytes accessed", 0.0),
+        "coll_body": r["collective_bytes"].get("total", 0),
+        "coll_by_kind": {k: v for k, v in r["collective_bytes"].items() if k != "total"},
+        "temp_gib": r["memory_analysis"].get("temp_size_in_bytes", 0) / 2 ** 30,
+        "arg_gib": r["memory_analysis"].get("argument_size_in_bytes", 0) / 2 ** 30,
+        "compile_s": r["compile_seconds"],
+    }
+    print(f"  -> {tag}: flops={row['flops_body']:.3e} bytes={row['bytes_body']:.3e} "
+          f"coll={row['coll_body']:.3e} temp={row['temp_gib']:.2f}GiB")
+    return row
+
+
+def case_A(mesh):
+    """internlm2-20b x long_500k — the paper's regime (B=1 decode)."""
+    print("== A: internlm2-20b x long_500k (memory-bound decode) ==")
+    rows = [_run("A0_baseline_dense", "internlm2-20b", "long_500k", mesh=mesh)]
+    rows.append(_run("A1_sparse_ffn", "internlm2-20b", "long_500k",
+                     overrides=dict(serve_sparse=True, sparse_frac=0.15), mesh=mesh))
+    rows.append(_run("A2_sparse_frac30", "internlm2-20b", "long_500k",
+                     overrides=dict(serve_sparse=True, sparse_frac=0.30), mesh=mesh))
+    return rows
+
+
+def case_B(mesh):
+    """jamba-1.5-large-398b x train_4k — compute-bound (worst fraction)."""
+    print("== B: jamba x train_4k (compute-bound) ==")
+    rows = [_run("B0_baseline", "jamba-1.5-large-398b", "train_4k", mesh=mesh)]
+    import repro.configs as C
+    cfg = C.get_config("jamba-1.5-large-398b", param_dtype="bfloat16",
+                       compute_dtype="bfloat16")
+    cfg_cf = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                              capacity_factor=1.05))
+    from repro.launch.dryrun import build_lowered, _memory_analysis_dict, \
+        _cost_analysis_dict, parse_collective_bytes
+    import time
+    lowered, _ = build_lowered("jamba-1.5-large-398b", "train_4k", mesh, cfg=cfg_cf)
+    with mesh:
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        tc = time.perf_counter() - t0
+    ca = _cost_analysis_dict(compiled)
+    ma = _memory_analysis_dict(compiled)
+    coll = parse_collective_bytes(compiled.as_text())
+    row = {"variant": "B1_capacity_1.05", "flops_body": ca.get("flops", 0),
+           "bytes_body": ca.get("bytes accessed", 0), "coll_body": coll.get("total", 0),
+           "coll_by_kind": {k: v for k, v in coll.items() if k != "total"},
+           "temp_gib": ma.get("temp_size_in_bytes", 0) / 2 ** 30,
+           "arg_gib": ma.get("argument_size_in_bytes", 0) / 2 ** 30, "compile_s": tc}
+    print(f"  -> B1_capacity_1.05: flops={row['flops_body']:.3e} "
+          f"bytes={row['bytes_body']:.3e} coll={row['coll_body']:.3e} "
+          f"temp={row['temp_gib']:.2f}GiB")
+    rows.append(row)
+    rows.append(_run("B2_triangular_flash", "jamba-1.5-large-398b", "train_4k",
+                     overrides=dict(flash_triangular=True), mesh=mesh))
+    return rows
+
+
+def case_C(mesh):
+    """xlstm-125m x prefill_32k — most collective-bound."""
+    print("== C: xlstm x prefill_32k (collective-bound) ==")
+    rows = [_run("C0_baseline", "xlstm-125m", "prefill_32k", mesh=mesh)]
+    rows.append(_run("C1_replicate_small", "xlstm-125m", "prefill_32k",
+                     options=dict(replicate_below=2_000_000), mesh=mesh))
+    return rows
+
+
+def case_extra(mesh):
+    """Beyond-paper fixes measured on non-hillclimb pairs."""
+    print("== extra: seamless train memory fix; decode cache S-sharding ==")
+    rows = [_run("X0_seamless_train_flashxattn", "seamless-m4t-medium", "train_4k",
+                 mesh=mesh)]
+    rows.append(_run("X1_decode32k_baseline", "internlm2-20b", "decode_32k", mesh=mesh))
+    rows.append(_run("X2_decode32k_shardseq", "internlm2-20b", "decode_32k",
+                     options=dict(cache_shard_seq=True), mesh=mesh))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", default="all", choices=["A", "B", "C", "extra", "all"])
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False)
+    os.makedirs("experiments/perf", exist_ok=True)
+    all_rows = {}
+    cases = {"A": case_A, "B": case_B, "C": case_C, "extra": case_extra}
+    todo = cases if args.case == "all" else {args.case: cases[args.case]}
+    for name, fn in todo.items():
+        all_rows[name] = fn(mesh)
+        with open(f"experiments/perf/summary_{name}.json", "w") as f:
+            json.dump(all_rows[name], f, indent=2)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

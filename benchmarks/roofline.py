@@ -1,0 +1,163 @@
+"""Roofline analysis per (arch x input shape) on the single-pod mesh.
+
+Three terms per case (v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI):
+
+    compute_s    = HLO_FLOPs / (chips x peak)
+    memory_s     = HLO_bytes / (chips x HBM_bw)
+    collective_s = collective_bytes / (chips x link_bw)
+
+ACCOUNTING NOTE (documented in EXPERIMENTS.md): XLA-CPU's cost_analysis counts
+while-loop bodies ONCE (verified empirically), so raw compiled numbers
+understate scanned-layer programs by the trip count. The roofline therefore
+uses ANALYTIC terms derived from the model config and shapes — the exact
+napkin-math the perf methodology calls for — including known compiled-graph
+waste (masked flash-attention blocks compute the full rectangle = 2x causal
+FLOPs; MoE capacity factor = 1.25x active FLOPs). The raw parsed values are
+carried alongside for before/after deltas within an identical program shape.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+CHIPS = 256                  # single-pod roofline table
+BYTES = 2                    # bf16
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for k in cfg.layer_kinds() if k == "attn")
+
+
+def _d_attn(cfg: ModelConfig) -> int:
+    return cfg.n_heads * cfg.head_dim
+
+
+def analytic_terms(cfg: ModelConfig, shape: InputShape, swa: bool,
+                   mesh_model: int = 16, mesh_dp: int = 16) -> Dict[str, float]:
+    """Global FLOPs / bytes / per-chip collective bytes for one case."""
+    B, S = shape.global_batch, shape.seq_len
+    N_act = cfg.active_param_count()
+    N_tot = cfg.param_count()
+    L_attn = _attn_layers(cfg)
+    d_att = _d_attn(cfg)
+    L = cfg.n_layers
+    d = cfg.d_model
+    cf_waste = (cfg.moe.capacity_factor if cfg.moe else 1.0)
+    dp_local_B = max(B // mesh_dp, 1)
+
+    if shape.kind == "train":
+        tokens = B * S
+        model_flops = 6 * N_act * tokens + 6 * L_attn * B * S * S * d_att
+        # compiled waste: flash computes full rectangle (2x causal) + MoE cf
+        hlo_flops = 6 * N_act * tokens * cf_waste + 12 * L_attn * B * S * S * d_att
+        # bytes: params read fwd+bwd, grads written, opt moments rw, activations
+        hlo_bytes = (N_tot * BYTES * 4 + N_tot * 4 * 2
+                     + 24 * tokens * d * L * BYTES)
+        # collectives per chip: megatron 2 AR/layer fwd + 2 bwd of [B_loc,S,d]
+        # + grad reduce over dp of params/model_shard
+        ar_act = 4 * L * dp_local_B * S * d * BYTES * 2
+        ar_grad = 2 * (N_tot / mesh_model) * BYTES
+        coll_per_chip = ar_act + ar_grad
+    elif shape.kind == "prefill":
+        tokens = B * S
+        model_flops = 2 * N_act * tokens + 2 * L_attn * B * S * S * d_att
+        hlo_flops = 2 * N_act * tokens * cf_waste + 4 * L_attn * B * S * S * d_att
+        hlo_bytes = (N_tot * BYTES
+                     + 2 * L_attn * B * S * cfg.n_kv_heads * cfg.head_dim * BYTES
+                     + 8 * tokens * d * L * BYTES)
+        coll_per_chip = 2 * L * dp_local_B * S * d * BYTES * 2
+    else:  # decode: ONE token with a seq_len-deep cache
+        S_eff = min(S, cfg.sliding_window) if swa else S
+        attn_flops = 4 * L_attn * B * S_eff * d_att
+        model_flops = 2 * N_act * B + attn_flops
+        hlo_flops = 2 * N_act * B * cf_waste + attn_flops
+        kv_bytes = 2 * L_attn * B * S_eff * cfg.n_kv_heads * cfg.head_dim * BYTES
+        hlo_bytes = N_act * BYTES + kv_bytes * 2   # read + rewrite (observed copy)
+        coll_per_chip = 2 * L * dp_local_B * 1 * d * BYTES * 2
+
+    return {
+        "model_flops": float(model_flops),
+        "hlo_flops_est": float(hlo_flops),
+        "hlo_bytes_est": float(hlo_bytes),
+        "coll_bytes_per_chip": float(coll_per_chip),
+        "compute_s": hlo_flops / (CHIPS * PEAK_FLOPS),
+        "memory_s": hlo_bytes / (CHIPS * HBM_BW),
+        "collective_s": coll_per_chip / LINK_BW,
+        "useful_ratio": model_flops / hlo_flops,
+    }
+
+
+def _advice(dominant: str, cfg: ModelConfig, shape: InputShape) -> str:
+    if dominant == "memory":
+        if shape.kind == "decode":
+            return ("decode is weight/KV-streaming bound: quantise KV or weights, "
+                    "or batch more tokens per weight read")
+        return "raise arithmetic intensity: fuse, remat less, larger microbatch"
+    if dominant == "collective":
+        return ("shrink per-layer all-reduces: 2D-shard activations, overlap "
+                "collectives with compute, or reduce-scatter+all-gather split")
+    if cfg.moe:
+        return "compute-bound: cut MoE capacity-factor waste / skip masked blocks"
+    return "compute-bound: skip masked flash blocks (causal), near roofline"
+
+
+def load_dryrun(save_dir: str = "experiments/dryrun") -> Dict[Tuple[str, str, str], dict]:
+    out = {}
+    for path in glob.glob(os.path.join(save_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        pod = "pod2" if r.get("mesh", {}).get("pod") else "pod1"
+        out[(r["arch"], r["shape"], pod)] = r
+    return out
+
+
+def roofline_table(save_dir: str = "experiments/dryrun",
+                   archs: Optional[List[str]] = None) -> List[dict]:
+    from repro.configs import ASSIGNED_CONFIGS
+    from repro.launch.specs import uses_swa_for
+    dry = load_dryrun(save_dir)
+    rows = []
+    for arch in (archs or sorted(ASSIGNED_CONFIGS)):
+        cfg = get_config(arch)
+        for shape_name, shape in INPUT_SHAPES.items():
+            swa = uses_swa_for(cfg, shape)
+            t = analytic_terms(cfg, shape, swa)
+            terms = {"compute": t["compute_s"], "memory": t["memory_s"],
+                     "collective": t["collective_s"]}
+            dominant = max(terms, key=terms.get)
+            raw = dry.get((arch, shape_name, "pod1"), {})
+            rows.append({
+                "arch": arch, "shape": shape_name, "swa": swa,
+                **{f"{k}_s": v for k, v in terms.items()},
+                "dominant": dominant,
+                "model_flops": t["model_flops"],
+                "hlo_flops_est": t["hlo_flops_est"],
+                "useful_ratio": t["useful_ratio"],
+                "raw_cost_flops": raw.get("cost_analysis", {}).get("flops"),
+                "raw_coll_bytes": raw.get("collective_bytes", {}).get("total"),
+                "raw_temp_gib": (raw.get("memory_analysis", {})
+                                 .get("temp_size_in_bytes", 0)) / 2**30,
+                "advice": _advice(dominant, cfg, shape),
+            })
+    return rows
+
+
+def rows_for_run() -> List[Tuple[str, float, str]]:
+    out = []
+    for r in roofline_table():
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dominant={r['dominant']} compute={r['compute_s']*1e3:.2f}ms "
+            f"memory={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
+            f"useful={r['useful_ratio']:.2f}"))
+    return out

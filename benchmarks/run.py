@@ -1,0 +1,58 @@
+"""Benchmark entry point. One function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (and a trailing wall-time line per
+suite). Run: PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on suite name")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, moe_expert_bench, paper_figures, roofline
+
+    suites = [
+        ("fig4_bandwidth", paper_figures.fig4_bandwidth),
+        ("table1_breakdown", paper_figures.table1_breakdown),
+        ("fig5_sparsity_latency", paper_figures.fig5_sparsity_latency),
+        ("fig10_overall", paper_figures.fig10_overall),
+        ("fig11_breakdown", paper_figures.fig11_breakdown),
+        ("fig12_access_length", paper_figures.fig12_access_length),
+        ("table4_search_time", paper_figures.table4_search_time),
+        ("fig13_collapse", paper_figures.fig13_collapse),
+        ("fig14_cache_ratio", paper_figures.fig14_cache_ratio),
+        ("fig15_sensitivity", paper_figures.fig15_sensitivity),
+        ("fig16_hardware", paper_figures.fig16_hardware),
+        ("fig17_precision", paper_figures.fig17_precision),
+        ("kernels", kernel_bench.kernel_bench),
+        ("moe_expert", moe_expert_bench.moe_expert_bench),
+        ("roofline", roofline.rows_for_run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,ERROR: {e!r}", flush=True)
+            continue
+        for rname, val, derived in rows:
+            print(f'{rname},{val:.3f},"{derived}"', flush=True)
+        print(f'{name}/_suite_seconds,{(time.perf_counter()-t0)*1e6:.0f},"wall time"',
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — RIPPLE/"Neuralink" neuron co-activation linking, as a multi-pod JAX
+framework. See README.md / DESIGN.md. Public API highlights:
+
+    from repro.configs import get_config, ASSIGNED_CONFIGS, INPUT_SHAPES
+    from repro.models import build_model
+    from repro.core import OffloadEngine, search_placement, CoActivationStats
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,33 @@
+"""RIPPLE core: neuron co-activation linking for flash-offloaded LLM inference.
+
+Offline stage: `coactivation` (pattern extraction) -> `placement` (greedy
+Hamiltonian-path search). Online stage: `collapse` (access collapse),
+`cache` (linking-aligned S3-FIFO), `storage` (UFS device model + neuron store),
+`predictor` (activation prediction), `engine` (the serving pipeline).
+"""
+from repro.core.cache import (CacheStats, FIFOCache, LRUCache,
+                              LinkingAlignedCache, S3FIFOCache)
+from repro.core.coactivation import CoActivationStats, expected_io_ops, stats_from_masks
+from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector,
+                                 collapse_extents, collapse_positions, runs_from_positions)
+from repro.core.engine import EngineConfig, OffloadEngine, TokenStats
+from repro.core.expert_placement import (expected_reads_per_token,
+                                         expert_coactivation,
+                                         hierarchical_moe_placement,
+                                         search_expert_placement,
+                                         synthetic_routing)
+from repro.core.placement import (PlacementResult, frequency_placement,
+                                  identity_placement, path_length, search_placement)
+from repro.core.predictor import (PredictorConfig, PredictorParams, init_predictor,
+                                  predict_mask, predictor_logits, recall_precision,
+                                  train_predictor)
+from repro.core.sparse_ffn import (FFNWeights, dense_ffn, ffn_pre_activation,
+                                   make_bundles, sparse_ffn_from_bundles,
+                                   sparse_ffn_gather)
+from repro.core.storage import (UFS31, UFS40, IOStats, ManagedReader, NeuronStore,
+                                UFSDevice)
+from repro.core.trace import (SyntheticTraceConfig, relu_activation_mask,
+                              synthetic_masks, topk_activation_mask,
+                              trace_model_activations)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

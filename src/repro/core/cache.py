@@ -1,0 +1,254 @@
+"""DRAM neuron cache: S3-FIFO base policy + linking-aligned admission (paper §5.2).
+
+The paper integrates the S3-FIFO cache (Yang et al., SOSP'23) into all baselines
+and adds, for RIPPLE, an *admission* layer that distinguishes
+
+  * sporadic neurons — activated with few contiguous neighbours: cached normally;
+  * continuous segments — runs of >= `segment_min_len` contiguous (in flash
+    layout) activated neurons: admitted with lower probability `segment_admit_p`,
+    because caching fragments of a segment punches holes in contiguous flash
+    runs (hurting continuity) while whole segments are cheap to re-read anyway.
+
+Only admission changes; eviction/promotion remain S3-FIFO ("we only control the
+caching admitting policy, yet leave the other unchanged").
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.utils import stable_uniform
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    evicted: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class S3FIFOCache:
+    """S3-FIFO: small FIFO (probation), main FIFO, ghost queue of evicted keys.
+
+    Keys are (layer, neuron) tuples or plain ints; capacity in entries.
+    """
+
+    def __init__(self, capacity: int, small_ratio: float = 0.1, ghost_ratio: float = 0.9) -> None:
+        self.capacity = max(capacity, 0)
+        self.small_cap = max(1, int(self.capacity * small_ratio)) if self.capacity else 0
+        self.main_cap = self.capacity - self.small_cap
+        self.small: "OrderedDict[object, int]" = OrderedDict()   # key -> freq
+        self.main: "OrderedDict[object, int]" = OrderedDict()
+        self.ghost: "OrderedDict[object, None]" = OrderedDict()
+        self.ghost_cap = max(1, int(self.capacity * ghost_ratio)) if self.capacity else 0
+        self.stats = CacheStats()
+
+    def __contains__(self, key: object) -> bool:
+        return key in self.small or key in self.main
+
+    def __len__(self) -> int:
+        return len(self.small) + len(self.main)
+
+    def access(self, key: object) -> bool:
+        """Lookup; bumps frequency on hit. Returns hit?"""
+        if key in self.small:
+            self.small[key] = min(self.small[key] + 1, 3)
+            self.stats.hits += 1
+            return True
+        if key in self.main:
+            self.main[key] = min(self.main[key] + 1, 3)
+            self.stats.hits += 1
+            return True
+        self.stats.misses += 1
+        return False
+
+    def insert(self, key: object) -> None:
+        if self.capacity == 0 or key in self:
+            return
+        self.stats.admitted += 1
+        if key in self.ghost:
+            del self.ghost[key]
+            self.main[key] = 0
+            self._evict_main()
+        else:
+            self.small[key] = 0
+            self._evict_small()
+
+    def _evict_small(self) -> None:
+        while len(self.small) > self.small_cap:
+            key, freq = self.small.popitem(last=False)
+            if freq > 0:                       # seen again while on probation
+                self.main[key] = 0
+                self._evict_main()
+            else:
+                self._ghost_insert(key)
+                self.stats.evicted += 1
+
+    def _evict_main(self) -> None:
+        while len(self.main) > self.main_cap:
+            key, freq = self.main.popitem(last=False)
+            if freq > 0:
+                self.main[key] = freq - 1       # reinsert at tail, decremented
+            else:
+                self._ghost_insert(key)
+                self.stats.evicted += 1
+
+    def _ghost_insert(self, key: object) -> None:
+        self.ghost[key] = None
+        while len(self.ghost) > self.ghost_cap:
+            self.ghost.popitem(last=False)
+
+
+class LRUCache:
+    """Classic LRU — a weaker baseline than S3-FIFO (paper cites S3-FIFO as
+    the strong cache it integrates into all systems; LRU is here for the
+    cache-policy ablation benchmark)."""
+
+    def __init__(self, capacity: int) -> None:
+        self.capacity = max(capacity, 0)
+        self.data: "OrderedDict[object, None]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __contains__(self, key: object) -> bool:
+        return key in self.data
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def access(self, key: object) -> bool:
+        if key in self.data:
+            self.data.move_to_end(key)
+            self.stats.hits += 1
+            return True
+        self.stats.misses += 1
+        return False
+
+    def insert(self, key: object) -> None:
+        if self.capacity == 0 or key in self.data:
+            return
+        self.stats.admitted += 1
+        self.data[key] = None
+        while len(self.data) > self.capacity:
+            self.data.popitem(last=False)
+            self.stats.evicted += 1
+
+
+class FIFOCache:
+    """Plain FIFO — the weakest baseline."""
+
+    def __init__(self, capacity: int) -> None:
+        self.capacity = max(capacity, 0)
+        self.queue: deque = deque()
+        self.members: Set[object] = set()
+        self.stats = CacheStats()
+
+    def __contains__(self, key: object) -> bool:
+        return key in self.members
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def access(self, key: object) -> bool:
+        if key in self.members:
+            self.stats.hits += 1
+            return True
+        self.stats.misses += 1
+        return False
+
+    def insert(self, key: object) -> None:
+        if self.capacity == 0 or key in self.members:
+            return
+        self.stats.admitted += 1
+        self.queue.append(key)
+        self.members.add(key)
+        while len(self.queue) > self.capacity:
+            self.members.discard(self.queue.popleft())
+            self.stats.evicted += 1
+
+
+class LinkingAlignedCache:
+    """S3-FIFO + the paper's linking-aligned admission policy.
+
+    `lookup(ids)` splits activated neuron ids into cache hits and misses;
+    `admit(ids, physical_positions)` classifies misses into sporadic neurons vs
+    continuous segments and admits segment members with probability
+    `segment_admit_p` (deterministic pseudo-random so runs are reproducible).
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        segment_min_len: int = 4,
+        segment_admit_p: float = 0.25,
+        linking_aligned: bool = True,
+        salt: int = 0,
+    ) -> None:
+        self.cache = S3FIFOCache(capacity)
+        self.segment_min_len = segment_min_len
+        self.segment_admit_p = segment_admit_p
+        self.linking_aligned = linking_aligned
+        self.salt = salt
+        self._tick = 0
+
+    @property
+    def stats(self) -> CacheStats:
+        return self.cache.stats
+
+    def lookup(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        ids = np.asarray(ids, dtype=np.int64)
+        hit_mask = np.fromiter((self.cache.access(int(i)) for i in ids), dtype=bool, count=len(ids))
+        return ids[hit_mask], ids[~hit_mask]
+
+    def classify(self, miss_ids: np.ndarray, physical: np.ndarray) -> Tuple[Set[int], Set[int]]:
+        """Split miss ids into (sporadic, segment_members) by run length in flash."""
+        order = np.argsort(physical)
+        phys_sorted = physical[order]
+        ids_sorted = np.asarray(miss_ids, dtype=np.int64)[order]
+        sporadic: Set[int] = set()
+        segment: Set[int] = set()
+        run: List[int] = []
+
+        def flush(run_ids: List[int]) -> None:
+            target = segment if len(run_ids) >= self.segment_min_len else sporadic
+            target.update(run_ids)
+
+        for k in range(len(ids_sorted)):
+            if run and phys_sorted[k] != phys_sorted[k - 1] + 1:
+                flush(run)
+                run = []
+            run.append(int(ids_sorted[k]))
+        if run:
+            flush(run)
+        return sporadic, segment
+
+    def admit(self, miss_ids: np.ndarray, physical: np.ndarray) -> None:
+        miss_ids = np.asarray(miss_ids, dtype=np.int64)
+        if miss_ids.size == 0:
+            return
+        self._tick += 1
+        if not self.linking_aligned:
+            for i in miss_ids:
+                self.cache.insert(int(i))
+            return
+        sporadic, segment = self.classify(miss_ids, np.asarray(physical, dtype=np.int64))
+        for i in sporadic:
+            self.cache.insert(i)
+        for i in segment:
+            if stable_uniform(self.salt, self._tick, i) < self.segment_admit_p:
+                self.cache.insert(i)
+            else:
+                self.cache.stats.rejected += 1
+
+    def resident_ids(self) -> np.ndarray:
+        keys = list(self.cache.small.keys()) + list(self.cache.main.keys())
+        return np.asarray(sorted(int(k) for k in keys), dtype=np.int64)

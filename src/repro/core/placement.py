@@ -1,0 +1,187 @@
+"""Offline neuron-placement search (paper §4.2-4.3, Algorithm 1).
+
+The problem: place neurons on a 1-D flash layout so frequently co-activated
+neurons are adjacent — i.e. find the shortest Hamiltonian path on the complete
+graph with dist(i, j) = 1 - P(ij). NP-hard (reduces to TSP), so Algorithm 1
+greedily merges neuron *links* (paths), nearest endpoints first, using a
+priority queue + union-find + per-node neighbour counts.
+
+Two modes:
+  * exact  — enumerate all O(n^2) pairs (paper's formulation). Fine to ~8k
+    neurons in numpy (the sort dominates).
+  * topk   — only the K nearest partners per neuron enter the queue. Pairs with
+    P(ij) == 0 all tie at distance 1 and contribute nothing to the objective, so
+    dropping them preserves the greedy's choices whenever each neuron has < K
+    co-activation partners; leftover path fragments are chained afterwards.
+    This keeps the largest paper models (n = 43k) tractable in pure Python.
+
+Complexity: O(E log E) for E queue entries (E = n^2 exact, nK topk) — matching
+the paper's O(n^2 log n).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Literal
+
+import numpy as np
+
+
+class _DSU:
+    """Union-find with path compression + union by size."""
+
+    def __init__(self, n: int) -> None:
+        self.parent = list(range(n))
+        self.size = [1] * n
+
+    def find(self, x: int) -> int:
+        root = x
+        while self.parent[root] != root:
+            root = self.parent[root]
+        while self.parent[x] != root:
+            self.parent[x], x = root, self.parent[x]
+        return root
+
+    def union(self, a: int, b: int) -> bool:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        if self.size[ra] < self.size[rb]:
+            ra, rb = rb, ra
+        self.parent[rb] = ra
+        self.size[ra] += self.size[rb]
+        return True
+
+
+@dataclasses.dataclass
+class PlacementResult:
+    placement: np.ndarray          # [n] neuron ids in physical order
+    inverse: np.ndarray            # [n] physical position of each neuron id
+    edges_used: int
+    search_seconds: float
+    mode: str
+
+    def physical_of(self, ids: np.ndarray) -> np.ndarray:
+        return self.inverse[ids]
+
+
+def _edge_candidates_exact(dist: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """All i<j pairs sorted by distance. Returns (us, vs) int32 arrays."""
+    n = dist.shape[0]
+    iu, ju = np.triu_indices(n, k=1)
+    order = np.argsort(dist[iu, ju], kind="stable")
+    return iu[order].astype(np.int32), ju[order].astype(np.int32)
+
+
+def _edge_candidates_topk(dist: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-node k nearest partners, deduped and sorted by distance."""
+    n = dist.shape[0]
+    k = min(k, n - 1)
+    nbr = np.argpartition(dist, kth=k - 1, axis=1)[:, :k]          # [n, k]
+    us = np.repeat(np.arange(n, dtype=np.int64), k)
+    vs = nbr.reshape(-1).astype(np.int64)
+    lo, hi = np.minimum(us, vs), np.maximum(us, vs)
+    keys = lo * n + hi
+    uniq = np.unique(keys)
+    lo, hi = (uniq // n).astype(np.int32), (uniq % n).astype(np.int32)
+    order = np.argsort(dist[lo, hi], kind="stable")
+    return lo[order], hi[order]
+
+
+def search_placement(
+    dist: np.ndarray,
+    mode: Literal["auto", "exact", "topk"] = "auto",
+    topk: int = 64,
+) -> PlacementResult:
+    """Algorithm 1: greedy link merging over the co-activation graph."""
+    t0 = time.perf_counter()
+    n = dist.shape[0]
+    if n == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return PlacementResult(empty, empty.copy(), 0, 0.0, mode)
+    if n == 1:
+        one = np.zeros(1, dtype=np.int64)
+        return PlacementResult(one, one.copy(), 0, 0.0, mode)
+    if mode == "auto":
+        mode = "exact" if n <= 4096 else "topk"
+    if mode == "exact":
+        us, vs = _edge_candidates_exact(dist)
+    else:
+        us, vs = _edge_candidates_topk(dist, topk)
+
+    nbr_cnt = np.zeros(n, dtype=np.int8)          # NbrCnt in Algorithm 1
+    adj = [[] for _ in range(n)]                  # path adjacency (degree <= 2)
+    dsu = _DSU(n)
+    edges_used = 0
+    for u, v in zip(us.tolist(), vs.tolist()):
+        if nbr_cnt[u] == 2 or nbr_cnt[v] == 2:    # skip if inside a link
+            continue
+        if not dsu.union(u, v):                   # would close a cycle
+            continue
+        nbr_cnt[u] += 1
+        nbr_cnt[v] += 1
+        adj[u].append(v)
+        adj[v].append(u)
+        edges_used += 1
+        if edges_used == n - 1:
+            break
+
+    # Chain any leftover path fragments (topk mode may exhaust candidates).
+    if edges_used < n - 1:
+        endpoints_by_root: dict[int, list[int]] = {}
+        for node in range(n):
+            if nbr_cnt[node] <= 1:
+                endpoints_by_root.setdefault(dsu.find(node), []).append(node)
+        frags = list(endpoints_by_root.values())
+        for a, b in zip(frags, frags[1:]):
+            u = a[-1] if len(a) > 1 else a[0]      # tail of previous fragment
+            v = b[0]
+            dsu.union(u, v)
+            nbr_cnt[u] += 1
+            nbr_cnt[v] += 1
+            adj[u].append(v)
+            adj[v].append(u)
+            edges_used += 1
+
+    # Walk the single remaining path from one endpoint.
+    start = next(i for i in range(n) if len(adj[i]) <= 1)
+    placement = np.empty(n, dtype=np.int64)
+    prev, cur = -1, start
+    for pos in range(n):
+        placement[pos] = cur
+        nxt = -1
+        for cand in adj[cur]:
+            if cand != prev:
+                nxt = cand
+                break
+        prev, cur = cur, nxt
+        if nxt == -1 and pos != n - 1:
+            raise AssertionError("placement walk ended early — path is broken")
+
+    inverse = np.empty(n, dtype=np.int64)
+    inverse[placement] = np.arange(n)
+    return PlacementResult(placement, inverse, edges_used, time.perf_counter() - t0, mode)
+
+
+# ---------------------------------------------------------------------------
+# Baseline placements (evaluation baselines in §6)
+# ---------------------------------------------------------------------------
+
+def identity_placement(n: int) -> PlacementResult:
+    """Model-structure order — llama.cpp / LLMFlash layout."""
+    p = np.arange(n, dtype=np.int64)
+    return PlacementResult(p, p.copy(), 0, 0.0, "identity")
+
+
+def frequency_placement(activation_rate: np.ndarray) -> PlacementResult:
+    """Hot-first layout: sort by activation frequency (a natural strawman)."""
+    p = np.argsort(-np.asarray(activation_rate), kind="stable").astype(np.int64)
+    inv = np.empty_like(p)
+    inv[p] = np.arange(len(p))
+    return PlacementResult(p, inv, 0, 0.0, "frequency")
+
+
+def path_length(dist: np.ndarray, placement: np.ndarray) -> float:
+    """Total Hamiltonian-path length under dist — the search objective."""
+    a, b = placement[:-1], placement[1:]
+    return float(dist[a, b].sum())

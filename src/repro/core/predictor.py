@@ -1,0 +1,114 @@
+"""Per-layer activation predictor (paper Fig. 3 step 1; à la Deja Vu / LLMFlash).
+
+A small bottleneck MLP maps the pre-FFN hidden state to per-neuron activation
+logits; neurons with sigmoid(logit) > threshold are predicted active. Trained
+in JAX with Adam on (hidden_state, activation_mask) pairs from traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Iterator, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PredictorParams(NamedTuple):
+    w1: jnp.ndarray   # [d_model, d_hidden]
+    b1: jnp.ndarray   # [d_hidden]
+    w2: jnp.ndarray   # [d_hidden, n_neurons]
+    b2: jnp.ndarray   # [n_neurons]
+
+
+@dataclasses.dataclass
+class PredictorConfig:
+    d_model: int
+    n_neurons: int
+    d_hidden: int = 128
+    threshold: float = 0.5
+    lr: float = 1e-3
+    pos_weight: float = 2.0   # recall matters more: a missed neuron corrupts output
+
+
+def init_predictor(cfg: PredictorConfig, key: jax.Array) -> PredictorParams:
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / np.sqrt(cfg.d_model)
+    s2 = 1.0 / np.sqrt(cfg.d_hidden)
+    return PredictorParams(
+        w1=jax.random.normal(k1, (cfg.d_model, cfg.d_hidden), jnp.float32) * s1,
+        b1=jnp.zeros(cfg.d_hidden),
+        w2=jax.random.normal(k2, (cfg.d_hidden, cfg.n_neurons), jnp.float32) * s2,
+        b2=jnp.zeros(cfg.n_neurons),
+    )
+
+
+def predictor_logits(params: PredictorParams, h: jnp.ndarray) -> jnp.ndarray:
+    z = jax.nn.relu(h @ params.w1 + params.b1)
+    return z @ params.w2 + params.b2
+
+
+def predict_mask(params: PredictorParams, h: jnp.ndarray, threshold: float = 0.5) -> jnp.ndarray:
+    return jax.nn.sigmoid(predictor_logits(params, h)) > threshold
+
+
+@partial(jax.jit, static_argnames=("pos_weight",))
+def _loss(params: PredictorParams, h, y, pos_weight: float = 2.0):
+    logits = predictor_logits(params, h)
+    y = y.astype(jnp.float32)
+    per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    w = jnp.where(y > 0, pos_weight, 1.0)
+    return jnp.mean(per * w)
+
+
+@partial(jax.jit, static_argnames=("lr", "pos_weight"))
+def _adam_step(params: PredictorParams, mu, nu, step, h, y, lr: float,
+               pos_weight: float):
+    loss, grads = jax.value_and_grad(_loss)(params, h, y, pos_weight)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, nu, grads)
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    new = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, mu, nu)
+    return new, mu, nu, step, loss
+
+
+def train_predictor(
+    cfg: PredictorConfig,
+    hiddens: np.ndarray,
+    masks: np.ndarray,
+    epochs: int = 5,
+    batch_size: int = 256,
+    seed: int = 0,
+) -> Tuple[PredictorParams, float]:
+    """Fit on [T, d_model] hiddens / [T, n] masks with Adam."""
+    params = init_predictor(cfg, jax.random.PRNGKey(seed))
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    mu, nu = zeros, zeros
+    step = jnp.zeros((), jnp.float32)
+    rng = np.random.default_rng(seed)
+    n = hiddens.shape[0]
+    loss = float("nan")
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n, batch_size):
+            idx = order[s : s + batch_size]
+            params, mu, nu, step, loss = _adam_step(
+                params, mu, nu, step, jnp.asarray(hiddens[idx]),
+                jnp.asarray(masks[idx]), cfg.lr, cfg.pos_weight)
+    return params, float(loss)
+
+
+def recall_precision(params: PredictorParams, hiddens: np.ndarray, masks: np.ndarray,
+                     threshold: float = 0.5) -> Tuple[float, float]:
+    pred = np.asarray(predict_mask(params, jnp.asarray(hiddens), threshold))
+    truth = np.asarray(masks, dtype=bool)
+    tp = float(np.sum(pred & truth))
+    recall = tp / max(float(truth.sum()), 1.0)
+    precision = tp / max(float(pred.sum()), 1.0)
+    return recall, precision

@@ -1,0 +1,105 @@
+"""Sparse FFN math — pure-jnp reference ops used by the offload engine.
+
+A "neuron" n of an FFN block is the bundle {W_gate[n, :], W_up[n, :], W_down[:, n]}
+(2-matrix models drop the gate). Activation sparsity: with ReLU, the FFN output
+is exactly preserved when computing only over neurons whose intermediate is > 0.
+
+These functions are the semantic oracles; kernels/sparse_ffn.py provides the
+Pallas segment-gather version for the TPU target.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class FFNWeights(NamedTuple):
+    w_up: jnp.ndarray            # [n_neurons, d_model]
+    w_down: jnp.ndarray          # [n_neurons, d_model]  (stored row-major per neuron)
+    w_gate: Optional[jnp.ndarray] = None   # [n_neurons, d_model] or None
+
+
+def dense_ffn(x: jnp.ndarray, w: FFNWeights, activation: str = "relu") -> jnp.ndarray:
+    """x: [..., d_model] -> [..., d_model]."""
+    pre = x @ w.w_up.T
+    act = _act(pre, activation)
+    if w.w_gate is not None:
+        act = act * (x @ w.w_gate.T)
+    return act @ w.w_down
+
+
+def ffn_pre_activation(x: jnp.ndarray, w: FFNWeights) -> jnp.ndarray:
+    return x @ w.w_up.T
+
+
+def _act(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+@partial(jax.jit, static_argnames=("activation",))
+def sparse_ffn_gather(
+    x: jnp.ndarray,
+    w: FFNWeights,
+    neuron_ids: jnp.ndarray,
+    activation: str = "relu",
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """FFN over a static-size activated subset (padded with `valid_mask`).
+
+    x: [B, d]; neuron_ids: [k] int32 (may contain padding); valid_mask: [k] bool.
+    Exact when the true activated set is a subset of neuron_ids (ReLU zeroes
+    the rest anyway); padding rows are masked to zero contribution.
+    """
+    up = w.w_up[neuron_ids]                      # [k, d]
+    pre = x @ up.T                               # [B, k]
+    act = _act(pre, activation)
+    if w.w_gate is not None:
+        act = act * (x @ w.w_gate[neuron_ids].T)
+    if valid_mask is not None:
+        act = act * valid_mask[None, :].astype(act.dtype)
+    return act @ w.w_down[neuron_ids]            # [B, d]
+
+
+def sparse_ffn_from_bundles(
+    x: jnp.ndarray,
+    bundles: jnp.ndarray,
+    d_model: int,
+    n_mats: int,
+    activation: str = "relu",
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """FFN computed directly from flash bundle payloads (engine read path).
+
+    bundles: [k, n_mats * d_model] rows as stored in flash —
+    layout per neuron: [up | down] (n_mats=2) or [gate | up | down] (n_mats=3).
+    """
+    k = bundles.shape[0]
+    parts = bundles.reshape(k, n_mats, d_model)
+    if n_mats == 3:
+        w = FFNWeights(w_up=parts[:, 1], w_down=parts[:, 2], w_gate=parts[:, 0])
+    else:
+        w = FFNWeights(w_up=parts[:, 0], w_down=parts[:, 1], w_gate=None)
+    pre = x @ w.w_up.T
+    act = _act(pre, activation)
+    if w.w_gate is not None:
+        act = act * (x @ w.w_gate.T)
+    if valid_mask is not None:
+        act = act * valid_mask[None, :].astype(act.dtype)
+    return act @ w.w_down
+
+
+def make_bundles(w: FFNWeights) -> jnp.ndarray:
+    """Pack FFN weights into per-neuron flash bundles [n, n_mats*d]."""
+    cols = [w.w_gate, w.w_up, w.w_down] if w.w_gate is not None else [w.w_up, w.w_down]
+    return jnp.concatenate(cols, axis=-1)

@@ -1,0 +1,165 @@
+"""Simulated UFS flash device + placement-aware neuron store.
+
+The paper's runtime reads neuron bundles from UFS flash. This container has no
+UFS device, so I/O cost comes from a calibrated device model implementing the
+paper's Figure-4 law: effective bandwidth grows ~linearly with continuous I/O
+size until the IOPS x io_size product reaches the link bandwidth (crossover at
+~24 KB for UFS 4.0), then flattens. The additive form
+
+    T(batch) = n_ops / IOPS_max + total_bytes / B_max        (+ fixed base)
+
+reproduces exactly that curve and both asymptotes. The *algorithms* (placement,
+collapse, caching) are the paper's, bit-for-bit; only the device is a model.
+
+`NeuronStore` owns the physical layout of one FFN block's neuron bundles and
+serves logical-id reads as contiguous extent reads, with optional access
+collapse. Actual bundle payloads are backed by a numpy array so the serving
+path computes with the very bytes it "read".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector, Extent,
+                                 collapse_extents, runs_from_positions)
+from repro.core.placement import PlacementResult, identity_placement
+
+
+# -- device models ----------------------------------------------------------
+
+UFS40 = dict(iops_max=150_000.0, bandwidth_max=3.6e9, base_latency=40e-6)   # OnePlus 12 / Ace 3
+UFS31 = dict(iops_max=90_000.0, bandwidth_max=1.9e9, base_latency=60e-6)    # OnePlus Ace 2
+
+
+@dataclasses.dataclass
+class UFSDevice:
+    """Additive IOPS + bandwidth latency model (paper Fig. 4)."""
+
+    iops_max: float = UFS40["iops_max"]
+    bandwidth_max: float = UFS40["bandwidth_max"]
+    base_latency: float = UFS40["base_latency"]
+
+    def read_time(self, n_ops: int, total_bytes: int) -> float:
+        if n_ops == 0:
+            return 0.0
+        return self.base_latency + n_ops / self.iops_max + total_bytes / self.bandwidth_max
+
+    def crossover_bytes(self) -> float:
+        """Continuous I/O size where IOPS cost == byte cost (~24 KB for UFS4.0)."""
+        return self.bandwidth_max / self.iops_max
+
+    def bandwidth_at_io_size(self, io_size_bytes: float, queue_depth: int = 32) -> float:
+        """Achieved bandwidth when streaming reads of a fixed size (Fig. 4)."""
+        t = self.read_time(queue_depth, int(io_size_bytes * queue_depth))
+        return queue_depth * io_size_bytes / t
+
+
+@dataclasses.dataclass
+class IOStats:
+    n_ops: int = 0
+    bytes_read: int = 0
+    bytes_useful: int = 0
+    seconds: float = 0.0
+    n_requests: int = 0
+
+    def add(self, other: "IOStats") -> None:
+        self.n_ops += other.n_ops
+        self.bytes_read += other.bytes_read
+        self.bytes_useful += other.bytes_useful
+        self.seconds += other.seconds
+        self.n_requests += other.n_requests
+
+    @property
+    def effective_bandwidth(self) -> float:
+        """Paper's metric: *useful* (activated) bytes per second."""
+        return self.bytes_useful / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def raw_bandwidth(self) -> float:
+        return self.bytes_read / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def iops(self) -> float:
+        return self.n_ops / self.seconds if self.seconds > 0 else 0.0
+
+
+class NeuronStore:
+    """Flash-resident neuron bundles for one FFN block under a physical layout.
+
+    data: [n_neurons, bundle_width] — bundle i holds the gate/up rows + down
+    column for neuron i, flattened. Physical layout is data[placement], i.e.
+    physical slot p stores logical neuron placement[p].
+    """
+
+    def __init__(
+        self,
+        data: np.ndarray,
+        placement: Optional[PlacementResult] = None,
+        device: Optional[UFSDevice] = None,
+        reads_per_bundle: int = 1,
+        bundle_bytes: Optional[int] = None,
+    ) -> None:
+        self.n_neurons, self.bundle_width = data.shape
+        self.placement = placement or identity_placement(self.n_neurons)
+        self.device = device or UFSDevice()
+        # llama.cpp stores each weight matrix separately -> an activated neuron
+        # costs `reads_per_bundle` scattered ops (2 for OPT, 3 for Llama).
+        # Bundled layouts (LLMFlash, RIPPLE) use 1.
+        self.reads_per_bundle = reads_per_bundle
+        # bundle_bytes may exceed the backing payload width (accounting-only
+        # runs with huge bundles, e.g. MoE experts, pass a small payload).
+        self.bundle_bytes = (int(bundle_bytes) if bundle_bytes
+                             else int(self.bundle_width * data.dtype.itemsize))
+        self._phys_data = np.ascontiguousarray(data[self.placement.placement])
+
+    # -- read planning -------------------------------------------------------
+    def plan_extents(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> List[Extent]:
+        phys = self.placement.physical_of(np.asarray(logical_ids, dtype=np.int64))
+        extents = runs_from_positions(phys)
+        if collapse_threshold > 0:
+            extents = collapse_extents(extents, collapse_threshold)
+        return extents
+
+    def read(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> Tuple[np.ndarray, IOStats]:
+        """Read bundles for logical ids; returns (data [k, w] in id order, stats)."""
+        logical_ids = np.asarray(logical_ids, dtype=np.int64)
+        stats = IOStats(n_requests=1)
+        if logical_ids.size == 0:
+            return np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype), stats
+        extents = self.plan_extents(logical_ids, collapse_threshold)
+        n_read = sum(length for _, length in extents)
+        stats.n_ops = len(extents) * self.reads_per_bundle
+        stats.bytes_read = n_read * self.bundle_bytes * self.reads_per_bundle
+        stats.bytes_useful = int(np.unique(logical_ids).size) * self.bundle_bytes * self.reads_per_bundle
+        stats.seconds = self.device.read_time(stats.n_ops, stats.bytes_read)
+        phys = self.placement.physical_of(logical_ids)
+        data = self._phys_data[phys]  # payload identical regardless of extent plan
+        return data, stats
+
+
+class ManagedReader:
+    """Read path with adaptive collapse + bottleneck detection (paper §5.1)."""
+
+    def __init__(self, store: NeuronStore, adaptive: bool = True, initial_threshold: int = 4) -> None:
+        self.store = store
+        self.adaptive = adaptive
+        break_even = store.device.bandwidth_max / (
+            store.device.iops_max * max(store.bundle_bytes, 1))
+        self.threshold = AdaptiveThreshold(initial=initial_threshold,
+                                           break_even=break_even)
+        self.detector = BottleneckDetector(store.device.bandwidth_max)
+        self.total = IOStats()
+
+    def read(self, logical_ids: np.ndarray) -> Tuple[np.ndarray, IOStats]:
+        thr = self.threshold.threshold if (self.adaptive and self.detector.collapse_enabled) else 0
+        data, stats = self.store.read(logical_ids, collapse_threshold=thr)
+        if self.adaptive and stats.n_ops:
+            op_cost = stats.n_ops / self.store.device.iops_max
+            byte_cost = stats.bytes_read / self.store.device.bandwidth_max
+            self.threshold.update(op_cost, byte_cost)
+            self.detector.record(stats.bytes_read, stats.seconds)
+        self.total.add(stats)
+        return data, stats

@@ -1,0 +1,104 @@
+"""Activation-trace capture and synthetic co-activation workloads.
+
+Two sources of FFN activation masks:
+  * `trace_model_activations` — run a real model (models/) over a token stream
+    and record per-layer FFN activation masks (ReLU > 0 or top-k magnitude).
+  * `synthetic_masks` — a planted-cluster generator matching the paper's
+    Figure-6 observation: neurons belong to co-activation groups; each token
+    activates a few groups plus background noise. Used by unit tests and
+    benchmarks so core results don't depend on model weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticTraceConfig:
+    n_neurons: int = 1024
+    n_clusters: int = 32
+    clusters_per_token: int = 3
+    member_p: float = 0.9       # P(neuron fires | its cluster fires)
+    noise_p: float = 0.01       # background activation probability
+    zipf_alpha: float = 1.1     # cluster popularity skew
+    seed: int = 0               # token sampling seed (the "dataset")
+    structure_seed: Optional[int] = None   # cluster membership (the "model");
+    #                                        defaults to `seed` if None
+    popularity_seed: Optional[int] = None  # which clusters are popular
+    #                                        (dataset-dependent); default fixed
+
+
+def synthetic_masks(cfg: SyntheticTraceConfig, n_tokens: int) -> np.ndarray:
+    """[n_tokens, n_neurons] bool planted-cluster activation masks.
+
+    Cluster membership is a *random* partition of neuron ids (seeded by
+    structure_seed — a MODEL property, per the paper's Fig. 15 finding that
+    co-activation is model-intrinsic), so the identity (model-structure)
+    layout scatters each cluster across the address space — exactly the
+    misalignment the paper describes. Token sampling (seed) and cluster
+    popularity (popularity_seed) are DATASET properties.
+    """
+    s_seed = cfg.structure_seed if cfg.structure_seed is not None else cfg.seed
+    struct_rng = np.random.default_rng(s_seed)
+    perm = struct_rng.permutation(cfg.n_neurons)
+    cluster_of = np.empty(cfg.n_neurons, dtype=np.int64)
+    for c in range(cfg.n_clusters):
+        members = perm[c::cfg.n_clusters]
+        cluster_of[members] = c
+    # zipf-ish popularity over clusters; which clusters are hot is dataset-driven
+    weights = 1.0 / np.arange(1, cfg.n_clusters + 1) ** cfg.zipf_alpha
+    weights /= weights.sum()
+    if cfg.popularity_seed is not None:
+        pop_rng = np.random.default_rng(cfg.popularity_seed)
+        weights = weights[pop_rng.permutation(cfg.n_clusters)]
+    rng = np.random.default_rng(cfg.seed)
+    masks = np.zeros((n_tokens, cfg.n_neurons), dtype=bool)
+    for t in range(n_tokens):
+        active_clusters = rng.choice(cfg.n_clusters, size=cfg.clusters_per_token, replace=False, p=weights)
+        in_active = np.isin(cluster_of, active_clusters)
+        fire = rng.random(cfg.n_neurons)
+        masks[t] = (in_active & (fire < cfg.member_p)) | (fire < cfg.noise_p)
+    return masks
+
+
+def relu_activation_mask(pre_act: jnp.ndarray) -> jnp.ndarray:
+    """ReLU-family sparsity: a neuron is activated iff its intermediate > 0."""
+    return pre_act > 0
+
+
+def topk_activation_mask(pre_act: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Magnitude top-k per token — used for non-ReLU (SiLU) models."""
+    thresh = -jax.lax.top_k(-(-jnp.abs(pre_act)), k)[0][..., -1:]
+    return jnp.abs(pre_act) >= thresh
+
+
+def trace_model_activations(
+    apply_fn: Callable[..., Dict[str, jnp.ndarray]],
+    params,
+    token_batches: List[np.ndarray],
+    sparsity_topk: Optional[int] = None,
+) -> List[np.ndarray]:
+    """Run `apply_fn(params, tokens, capture_activations=True)` over batches.
+
+    apply_fn must return a dict with key "ffn_pre_act": [L, B, T, N] (stacked
+    scan layers). Returns per-layer [total_tokens, N] bool masks.
+    """
+    per_layer: List[List[np.ndarray]] = []
+    for tokens in token_batches:
+        out = apply_fn(params, jnp.asarray(tokens), capture_activations=True)
+        pre = out["ffn_pre_act"]  # [L, B, T, N]
+        if sparsity_topk is None:
+            masks = np.asarray(relu_activation_mask(pre))
+        else:
+            masks = np.asarray(topk_activation_mask(pre, sparsity_topk))
+        L = masks.shape[0]
+        if not per_layer:
+            per_layer = [[] for _ in range(L)]
+        for l in range(L):
+            per_layer[l].append(masks[l].reshape(-1, masks.shape[-1]))
+    return [np.concatenate(chunks, axis=0) for chunks in per_layer]

@@ -1,0 +1,87 @@
+"""Sequence-pipelined recurrent prefill (§Perf C4 prototype).
+
+Problem: recurrent mixers (mLSTM/sLSTM/Mamba) cannot shard the time axis the
+way attention can — the state recurrence is sequential. The §Perf C-series
+showed that tensor parallelism for a 125 M xLSTM is pure collective overhead,
+and replication (C3) wastes the model axis entirely.
+
+This prototype pipelines the recurrence over sequence shards instead:
+  * the big, embarrassingly-parallel work (q/k/v/gate projections) runs on
+    SEQUENCE-SHARDED activations — no collectives at all;
+  * only the tiny per-step state recurrence serialises, as a P-stage pipeline
+    where each shard scans its local chunk and hands the final state to the
+    next shard via collective_permute.
+
+Wall-clock model: projections P-way parallel; recurrence T sequential steps
+total (inherent), but the recurrence is O(B·H·hd²) per step vs the
+projections' O(B·d·3Hhd) per token — the parallel part dominates FLOPs.
+
+Implemented with shard_map; numerically exact vs ssm.mlstm_forward
+(tests/test_seq_pipeline.py validates on 8 forced host devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _select_tree(pred, a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def pipelined_mlstm_forward(
+    p: Params,
+    x: jnp.ndarray,             # [B, T, d] — T sharded over `axis` outside
+    cfg: ModelConfig,
+    mesh: Mesh,
+    axis: str = "model",
+) -> jnp.ndarray:
+    """mLSTM over a sequence sharded on `axis`: projections collective-free,
+    recurrence as a P-stage state pipeline (one collective_permute per stage,
+    payload = one MLSTMState, ~B·H·hd² bytes — vs all-reducing [B,T,d])."""
+    n_stages = mesh.shape[axis]
+
+    def local_fn(p_rep, x_local):
+        B = x_local.shape[0]
+        q, k, v, i_log, f_log, o = ssm._mlstm_gates(p_rep, x_local, cfg)
+        tm = lambda a: jnp.moveaxis(a, 1, 0)
+        xs = (tm(q), tm(k), tm(v), tm(i_log), tm(f_log))
+        idx = jax.lax.axis_index(axis)
+        incoming = ssm.mlstm_init_state(B, cfg)     # valid for shard 0 at stage 0
+        out_ys = None
+        for stage in range(n_stages):
+            active = idx == stage
+            final_st, ys = jax.lax.scan(ssm._mlstm_step, incoming, xs)
+            out_ys = ys if out_ys is None else _select_tree(active, ys, out_ys)
+            # hand shard `stage`'s final state to shard `stage`+1
+            payload = _select_tree(active, final_st, incoming)
+            shifted = jax.tree_util.tree_map(
+                lambda a: jax.lax.ppermute(
+                    a, axis, [(s, (s + 1) % n_stages) for s in range(n_stages)]),
+                payload)
+            incoming = _select_tree(idx == stage + 1, shifted, incoming)
+        y = jnp.moveaxis(out_ys, 0, 1).reshape(B, x_local.shape[1], -1) * o
+        return y @ p_rep["out_proj"].astype(x_local.dtype)
+
+    # batch over the data axes, sequence over `axis`: the pipeline payload is
+    # then the LOCAL-batch state (B/dp · H · hd²), not the global one.
+    import math
+    dp = tuple(a for a in mesh.axis_names if a != axis)
+    dp_total = math.prod(mesh.shape[a] for a in dp)
+    b_axes = dp if x.shape[0] % dp_total == 0 else None
+    spec_x = P(b_axes, axis, None)
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(P(), spec_x), out_specs=spec_x,
+                   check_rep=False)
+    return fn(p, x)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: co-activation adjacency accumulation A += M^T M.
+
+The offline pattern-extraction hot spot (paper §4.1 Eq. 2): M is a [T, N]
+activation-mask block; the co-activation count matrix needs the N x N
+outer-product sum. Tiled so each grid step does a [tt, tn]^T @ [tt, tm]
+MXU matmul with an fp32 [tn, tm] accumulator tile resident in VMEM.
+
+Grid order (i, j, t): t innermost so the output tile (i, j) is revisited
+across t steps and accumulated in place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(m1_ref, m2_ref, o_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(m1_ref[...].T, m2_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def coact_accumulate_kernel(
+    masks: jnp.ndarray,      # [T, N] float (0/1)
+    *,
+    tile_n: int = 256,
+    tile_t: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    T, N = masks.shape
+    assert T % tile_t == 0 and N % tile_n == 0, "wrapper must pad to tiles"
+    grid = (N // tile_n, N // tile_n, T // tile_t)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, tile_n), lambda i, j, t: (t, i)),
+            pl.BlockSpec((tile_t, tile_n), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_n), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        interpret=interpret,
+    )(masks, masks)

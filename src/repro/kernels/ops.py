@@ -1,0 +1,113 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding/alignment (batch to 8, neuron axis to segment multiples, ring
+width to block multiples), append the zero pad segment, and select interpret
+mode automatically on CPU (the kernels TARGET TPU; interpret=True executes the
+kernel body faithfully on CPU for validation).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.coact import coact_accumulate_kernel
+from repro.kernels.sparse_ffn import sparse_ffn_segments_kernel
+from repro.kernels.swa_decode import swa_decode_kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = a.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@partial(jax.jit, static_argnames=("seg_size", "activation", "interpret"))
+def sparse_ffn_segments(
+    x: jnp.ndarray,              # [B, D]
+    w_up: jnp.ndarray,           # [N, D]
+    w_down: jnp.ndarray,         # [N, D]
+    seg_ids: jnp.ndarray,        # [S] int32 segment block-indices (pad with -1)
+    w_gate: Optional[jnp.ndarray] = None,
+    *,
+    seg_size: int = 128,
+    activation: str = "relu",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Segment-gather FFN. seg_ids entries of -1 are padding (contribute 0)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    B, D = x.shape
+    N = w_up.shape[0]
+    assert N % seg_size == 0, "neuron axis must be a segment multiple"
+    pad_block = N // seg_size            # index of the appended zero segment
+    zpad = jnp.zeros((seg_size, D), w_up.dtype)
+    w_up_p = jnp.concatenate([w_up, zpad], axis=0)
+    w_down_p = jnp.concatenate([w_down, zpad], axis=0)
+    w_gate_p = None if w_gate is None else jnp.concatenate([w_gate, zpad], axis=0)
+    ids = jnp.where(seg_ids < 0, pad_block, seg_ids).astype(jnp.int32)
+    x_p = _pad_axis(x, 0, 8)
+    out = sparse_ffn_segments_kernel(
+        x_p, w_up_p, w_down_p, ids, w_gate_p,
+        seg_size=seg_size, activation=activation, interpret=interpret)
+    return out[:B]
+
+
+@partial(jax.jit, static_argnames=("tile_n", "tile_t", "interpret"))
+def coact_accumulate(
+    masks: jnp.ndarray,          # [T, N] bool/float
+    *,
+    tile_n: int = 256,
+    tile_t: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """A = M^T M co-activation counts, fp32 [N, N] (zero padding is exact)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    T, N = masks.shape
+    m = masks.astype(jnp.float32)
+    m = _pad_axis(_pad_axis(m, 0, tile_t), 1, tile_n)
+    out = coact_accumulate_kernel(m, tile_n=tile_n, tile_t=tile_t, interpret=interpret)
+    return out[:N, :N]
+
+
+@partial(jax.jit, static_argnames=("window", "block_w", "interpret"))
+def swa_decode_attention(
+    q: jnp.ndarray,              # [B, H, hd] query for ONE new token
+    k_cache: jnp.ndarray,        # [B, W, KV, hd] ring buffer
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,            # [B, W] slot positions (-1 empty)
+    cur_pos: jnp.ndarray,        # scalar int32
+    *,
+    window: int,
+    block_w: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Returns [B, H, hd] attention output."""
+    interpret = _on_cpu() if interpret is None else interpret
+    B, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    kt = jnp.swapaxes(k_cache, 1, 2)     # [B, KV, W, hd]
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    block_w = min(block_w, W)
+    padW = (-W) % block_w
+    if padW:
+        kt = _pad_axis(kt, 2, block_w)
+        vt = _pad_axis(vt, 2, block_w)
+        pos = jnp.pad(pos, ((0, 0), (0, padW)), constant_values=-1)
+    out = swa_decode_kernel(
+        qg, kt, vt, pos.astype(jnp.int32),
+        jnp.reshape(cur_pos.astype(jnp.int32), (1,)),
+        window=window, block_w=block_w, interpret=interpret)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(pre, name: str):
+    if name == "relu":
+        return jnp.maximum(pre, 0.0)
+    if name == "relu2":
+        return jnp.square(jnp.maximum(pre, 0.0))
+    if name == "gelu":
+        return jax.nn.gelu(pre)
+    if name == "silu":
+        return jax.nn.silu(pre)
+    raise ValueError(name)
+
+
+def sparse_ffn_segments_ref(
+    x: jnp.ndarray,            # [B, D]
+    w_up: jnp.ndarray,         # [N, D]
+    w_down: jnp.ndarray,       # [N, D]
+    seg_ids: jnp.ndarray,      # [S] int32 (may repeat; repeats double-count by design)
+    w_gate: Optional[jnp.ndarray] = None,
+    *,
+    seg_size: int = 128,
+    activation: str = "relu",
+) -> jnp.ndarray:
+    """Sum over segments of act(x up_s^T)[* gate] down_s, in fp32."""
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros((x.shape[0], x.shape[1]), jnp.float32)
+    for s in list(seg_ids):
+        lo = int(s) * seg_size
+        up = w_up[lo : lo + seg_size].astype(jnp.float32)
+        down = w_down[lo : lo + seg_size].astype(jnp.float32)
+        pre = xf @ up.T
+        act = _act(pre, activation)
+        if w_gate is not None:
+            act = act * (xf @ w_gate[lo : lo + seg_size].astype(jnp.float32).T)
+        out = out + act @ down
+    return out
+
+
+def coact_accumulate_ref(masks: jnp.ndarray) -> jnp.ndarray:
+    m = masks.astype(jnp.float32)
+    return m.T @ m
+
+
+def swa_decode_ref(
+    q: jnp.ndarray,            # [B, KV, G, hd]
+    k: jnp.ndarray,            # [B, KV, W, hd]
+    v: jnp.ndarray,            # [B, KV, W, hd]
+    pos: jnp.ndarray,          # [B, W]
+    cur_pos: int,
+    *,
+    window: int,
+) -> jnp.ndarray:
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,bkwh->bkgw", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    valid = (pos >= 0) & (pos > cur_pos - window) & (pos <= cur_pos)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce uniform softmax; zero them like the kernel does
+    any_valid = jnp.any(valid, axis=-1)[:, None, None, None]
+    out = jnp.einsum("bkgw,bkwh->bkgh", p, v.astype(jnp.float32))
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)

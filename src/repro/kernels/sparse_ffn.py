@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: segment-gather sparse FFN.
+
+The TPU-native expression of RIPPLE's contiguous neuron links: the activated
+neuron set is delivered as *segment ids* (each segment = `seg` consecutive
+neurons in the permuted physical layout). A scalar-prefetch id array drives the
+BlockSpec index_map, so each grid step DMAs one contiguous [seg, d_model] tile
+of each weight matrix HBM->VMEM and feeds 128-aligned tiles to the MXU:
+
+    y = sum_s act(x @ W_up[seg_s]^T) [* (x @ W_gate[seg_s]^T)] @ W_down[seg_s]
+
+Contiguity => one DMA descriptor per segment per matrix — the same IOPS
+argument as the paper's flash reads, at the HBM->VMEM tier.
+
+Padding convention: the wrapper (ops.py) appends one all-zero segment at block
+index N/seg; padded entries of `seg_ids` point there and contribute exactly 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _apply_act(pre, name: str):
+    if name == "relu":
+        return jnp.maximum(pre, 0.0)
+    if name == "relu2":
+        return jnp.square(jnp.maximum(pre, 0.0))
+    if name == "gelu":
+        return jax.nn.gelu(pre)
+    if name == "silu":
+        return jax.nn.silu(pre)
+    raise ValueError(name)
+
+
+def _kernel(ids_ref, x_ref, up_ref, down_ref, o_ref, *, activation: str):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pre = jnp.dot(x_ref[...], up_ref[...].T,
+                  preferred_element_type=jnp.float32)          # [B, seg]
+    act = _apply_act(pre, activation)
+    o_ref[...] += jnp.dot(act.astype(down_ref.dtype), down_ref[...],
+                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _kernel_gated(ids_ref, x_ref, up_ref, gate_ref, down_ref, o_ref, *, activation: str):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pre = jnp.dot(x_ref[...], up_ref[...].T, preferred_element_type=jnp.float32)
+    gate = jnp.dot(x_ref[...], gate_ref[...].T, preferred_element_type=jnp.float32)
+    act = _apply_act(pre, activation) * gate
+    o_ref[...] += jnp.dot(act.astype(down_ref.dtype), down_ref[...],
+                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def sparse_ffn_segments_kernel(
+    x: jnp.ndarray,          # [B, D]
+    w_up: jnp.ndarray,       # [N + seg, D]  (zero pad segment appended)
+    w_down: jnp.ndarray,     # [N + seg, D]
+    seg_ids: jnp.ndarray,    # [S] int32 block indices into the segment axis
+    w_gate: jnp.ndarray | None = None,
+    *,
+    seg_size: int = 128,
+    activation: str = "relu",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, D = x.shape
+    S = seg_ids.shape[0]
+    wspec = pl.BlockSpec((seg_size, D), lambda s, ids: (ids[s], 0))
+    in_specs = [
+        pl.BlockSpec((B, D), lambda s, ids: (0, 0)),   # x resident in VMEM
+        wspec,                                         # up
+    ]
+    if w_gate is not None:
+        in_specs.append(wspec)                         # gate
+    in_specs.append(wspec)                             # down
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((B, D), lambda s, ids: (0, 0)),
+    )
+    kern = (functools.partial(_kernel_gated, activation=activation) if w_gate is not None
+            else functools.partial(_kernel, activation=activation))
+    args = (seg_ids, x, w_up) + ((w_gate,) if w_gate is not None else ()) + (w_down,)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(*args)

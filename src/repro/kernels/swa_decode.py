@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: sliding-window GQA decode attention (flash-decode style).
+
+One new token attends to a ring-buffer KV cache of width W under a sliding
+window — the long_500k dense decode path. Online-softmax accumulation over KV
+blocks; grid (B, KV_heads, W/blk) with fp32 (m, l, acc) scratch in VMEM.
+
+Slot validity is positional: slot j holds position pos[j]; it participates iff
+pos[j] >= 0 and cur - window < pos[j] <= cur. `cur` arrives via scalar prefetch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(cur_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, blocks: int, scale: float):
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                    # [G, hd]
+    k = k_ref[0, 0]                    # [blk, hd]
+    v = v_ref[0, 0]                    # [blk, hd]
+    pos = pos_ref[0]                   # [blk] int32
+    cur = cur_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale   # [G, blk]
+    valid = (pos >= 0) & (pos > cur - window) & (pos <= cur)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                # [G, 1]
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)
+    # exp(NEG_INF - NEG_INF) would be 1 for fully-masked blocks: force 0.
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new), 0.0)            # [G, blk]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(blk == blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def swa_decode_kernel(
+    q: jnp.ndarray,          # [B, KV, G, hd] — grouped query heads
+    k: jnp.ndarray,          # [B, KV, W, hd] — ring buffer
+    v: jnp.ndarray,          # [B, KV, W, hd]
+    pos: jnp.ndarray,        # [B, W] int32 position per slot (-1 empty)
+    cur_pos: jnp.ndarray,    # [1] int32 current position (scalar prefetch)
+    *,
+    window: int,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, KV, G, hd = q.shape
+    W = k.shape[2]
+    assert W % block_w == 0, "wrapper must pad ring to block multiple"
+    blocks = W // block_w
+    grid = (B, KV, blocks)
+    scale = hd ** -0.5
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, w, cur: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_w, hd), lambda b, h, w, cur: (b, h, w, 0)),
+            pl.BlockSpec((1, 1, block_w, hd), lambda b, h, w, cur: (b, h, w, 0)),
+            pl.BlockSpec((1, block_w), lambda b, h, w, cur: (b, w)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, w, cur: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),      # running max
+            pltpu.VMEM((G, 1), jnp.float32),      # running denom
+            pltpu.VMEM((G, hd), jnp.float32),     # output accumulator
+        ],
+    )
+    kern = functools.partial(_kernel, window=window, blocks=blocks, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(cur_pos, q, k, v, pos)

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each case this produces, with no device allocation beyond placeholders:
+  * compiled.memory_analysis()  — proves the per-device working set fits
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline terms
+  * collective bytes parsed from the partitioned HLO text (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+Run:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results are saved under experiments/dryrun/ as JSON for benchmarks/roofline.py.
+"""
+import argparse
+import json
+import re
+import time
+from collections import defaultdict
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_CONFIGS, INPUT_SHAPES, get_config
+from repro.distributed.sharding import (batch_spec, cache_specs, dp_axes,
+                                        named, param_specs)
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, AdamWState, init_adamw
+from repro.training.train import TrainState, make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 2)
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (output-shape accounting)."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:       # async pair: count the -start only
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, Any]:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+# per-arch gradient-accumulation defaults for train_4k (activation memory)
+TRAIN_MICROBATCHES = defaultdict(lambda: 8)
+
+
+def build_lowered(arch: str, shape_name: str, mesh,
+                  microbatches: Optional[int] = None,
+                  config_overrides: Optional[dict] = None,
+                  options: Optional[dict] = None,
+                  cfg=None):
+    """Returns (lowered, meta) for one (arch, shape, mesh) case.
+
+    options: perf-variant knobs — {"cache_shard_seq": bool,
+    "replicate_below": int}. config_overrides: ModelConfig field overrides
+    (e.g. flash_triangular=True, serve_sparse=True).
+    """
+    options = options or {}
+    if cfg is None:
+        cfg = get_config(arch, param_dtype="bfloat16", compute_dtype="bfloat16",
+                         **(config_overrides or {}))
+    model = build_model(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, mesh,
+                         replicate_below=options.get("replicate_below", 0))
+    meta: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": {a: int(s) for a, s in zip(mesh.axis_names, mesh.devices.shape)},
+        "param_count": int(cfg.param_count()),
+        "active_param_count": int(cfg.active_param_count()),
+    }
+
+    if shape.kind == "train":
+        mb = microbatches or TRAIN_MICROBATCHES[arch]
+        meta["microbatches"] = mb
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16")
+        state_shape = jax.eval_shape(
+            lambda p: TrainState(params=p, opt=init_adamw(p, opt_cfg)), params_shape)
+        state_specs = TrainState(
+            params=pspecs, opt=AdamWState(step=P(), mu=pspecs, nu=pspecs))
+        batch = specs_lib.batch_specs(cfg, shape)
+        batch_sh = {k: batch_spec(mesh, v.shape[0], len(v.shape)) for k, v in batch.items()}
+        step = make_train_step(model, opt_cfg, microbatches=mb)
+        metrics_shape = jax.eval_shape(step, state_shape, batch)[1]
+        metrics_specs = jax.tree_util.tree_map(lambda _: P(), metrics_shape)
+        jitted = jax.jit(
+            step,
+            in_shardings=(named(state_specs, mesh), named(batch_sh, mesh)),
+            out_shardings=(named(state_specs, mesh), named(metrics_specs, mesh)),
+            donate_argnums=(0,),      # train state updated in place
+        )
+        with mesh:
+            lowered = jitted.lower(state_shape, batch)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        batch = specs_lib.batch_specs(cfg, shape)
+        batch_sh = {k: batch_spec(mesh, v.shape[0], len(v.shape)) for k, v in batch.items()}
+        cache = specs_lib.cache_struct(cfg, shape, model)
+        cspecs = cache_specs(cache, mesh, shape.global_batch,
+                             shard_seq=options.get("cache_shard_seq", False),
+                             no_model=options.get("cache_no_model", False))
+        logits_spec = P(dp_axes(mesh) if shape.global_batch % mesh.shape["data"] == 0 else None,
+                        None, "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None)
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(named(pspecs, mesh), named(batch_sh, mesh), named(cspecs, mesh)),
+            out_shardings=(NamedSharding(mesh, logits_spec), named(cspecs, mesh)),
+            donate_argnums=(2,),      # cache filled in place
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, batch, cache)
+        return lowered, meta
+
+    # decode
+    swa = specs_lib.uses_swa_for(cfg, shape)
+    meta["swa"] = swa
+    window = cfg.sliding_window if swa else 0
+    toks = specs_lib.decode_token_specs(shape)
+    cache = specs_lib.cache_struct(cfg, shape, model)
+    cspecs = cache_specs(cache, mesh, shape.global_batch,
+                         shard_seq=options.get("cache_shard_seq", False),
+                         no_model=options.get("cache_no_model", False))
+    tok_sh = batch_spec(mesh, shape.global_batch, 2)
+    logits_spec = P(dp_axes(mesh) if shape.global_batch % mesh.shape["data"] == 0 else None,
+                    None, "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None)
+
+    def serve_step(params, tokens, position, cache):
+        return model.decode_step(params, tokens, position, cache, window=window)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(named(pspecs, mesh), NamedSharding(mesh, tok_sh),
+                      NamedSharding(mesh, P()), named(cspecs, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_spec), named(cspecs, mesh)),
+        donate_argnums=(3,),          # cache updated in place
+    )
+    with mesh:
+        lowered = jitted.lower(params_shape, toks["tokens"], toks["position"], cache)
+    return lowered, meta
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool = False,
+             microbatches: Optional[int] = None, save_dir: str = "experiments/dryrun",
+             mesh=None, config_overrides: Optional[dict] = None,
+             options: Optional[dict] = None, tag_suffix: str = "") -> Dict[str, Any]:
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    lowered, meta = build_lowered(arch, shape_name, mesh, microbatches,
+                                  config_overrides=config_overrides, options=options)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    with mesh:
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = _memory_analysis_dict(compiled)
+    cost = _cost_analysis_dict(compiled)
+    coll = parse_collective_bytes(compiled.as_text())
+    n_dev = int(mesh.devices.size)
+    result = {
+        **meta,
+        "n_devices": n_dev,
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if k in ("flops", "bytes accessed", "transcendentals",
+                                   "optimal_seconds", "bytes accessed output")},
+        "collective_bytes": coll,
+    }
+    print(f"[dryrun] {arch} x {shape_name} x {n_dev}dev: "
+          f"flops={cost.get('flops', 0):.3e} bytes={cost.get('bytes accessed', 0):.3e} "
+          f"coll={coll.get('total', 0):.3e} "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+    print("  memory_analysis:", mem)
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}" + tag_suffix
+        with open(os.path.join(save_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ASSIGNED_CONFIGS))
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) pairs")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--save-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = sorted(ASSIGNED_CONFIGS)
+        shapes = list(INPUT_SHAPES)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        archs, shapes = [args.arch], [args.shape]
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            try:
+                run_case(arch, shape, multi_pod=args.multi_pod,
+                         microbatches=args.microbatches, save_dir=args.save_dir,
+                         mesh=mesh)
+            except Exception as e:  # noqa: BLE001 — report every failing combo
+                failures.append((arch, shape, repr(e)[:200]))
+                print(f"[dryrun] FAIL {arch} x {shape}: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all cases compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+Follows the shannon/kernels pattern: weak-type-correct, shardable, zero device
+allocation. For VLM the text length is seq_len - n_prefix_tokens so the total
+decoder sequence matches the assigned shape; for audio the frames are the stub
+frontend output and tokens run the full assigned seq_len on the decoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, seq_len: int | None = None
+                ) -> Dict[str, Any]:
+    """Token/feature structs for a full-sequence pass (train or prefill)."""
+    B = shape.global_batch
+    S = seq_len if seq_len is not None else shape.seq_len
+    if cfg.family == "vlm":
+        return {
+            "tokens": SDS((B, S - cfg.n_prefix_tokens), jnp.int32),
+            "patch_feats": SDS((B, cfg.n_prefix_tokens, cfg.d_frontend), jnp.bfloat16),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": SDS((B, S), jnp.int32),
+            "frames": SDS((B, cfg.n_prefix_tokens, cfg.d_frontend), jnp.bfloat16),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_token_specs(shape: InputShape) -> Dict[str, Any]:
+    return {
+        "tokens": SDS((shape.global_batch, 1), jnp.int32),
+        "position": SDS((), jnp.int32),
+    }
+
+
+def uses_swa_for(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k decode needs sub-quadratic memory: SWA ring for attention-
+    dominated families; SSM/hybrid run natively (states / sparse attn layers)."""
+    return shape.name == "long_500k" and cfg.family in ("dense", "vlm", "audio")
+
+
+def cache_struct(cfg: ModelConfig, shape: InputShape, model) -> Any:
+    swa = uses_swa_for(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: model.init_cache(B, S, swa=swa, dtype=jnp.bfloat16))

@@ -1,0 +1,114 @@
+"""Distributed training driver.
+
+Builds a mesh over the available devices, shards the train state with the
+distributed/sharding.py rules, and runs the training loop under jit with
+explicit in/out shardings — the same program the dry-run lowers for the
+production mesh, executed for real on whatever devices exist (CPU here,
+TPU pod on the target).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --reduced --steps 50 --batch 8 --seq 128 [--model-axis 2] \
+      [--checkpoint ckpt/state.npz] [--resume]
+"""
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_CONFIGS, get_config
+from repro.data.pipeline import DataConfig, make_data_iter
+from repro.distributed.sharding import batch_spec, named, param_specs
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig, AdamWState, init_adamw
+from repro.training.train import TrainState, make_train_step
+from repro.utils import logger, pretty_bytes, tree_size_bytes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=sorted(ASSIGNED_CONFIGS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=0, help="override vocab (reduced runs)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.vocab:
+        overrides["vocab_size"] = args.vocab
+    cfg = get_config(args.arch, reduced=args.reduced, **overrides)
+    model = build_model(cfg)
+    mesh = make_host_mesh(model_axis=args.model_axis)
+    logger.info("mesh: %s over %d devices", dict(mesh.shape), mesh.devices.size)
+
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 2),
+                          total_steps=args.steps)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    state = TrainState(params=params, opt=init_adamw(params, opt_cfg))
+    logger.info("params: %s", pretty_bytes(tree_size_bytes(params)))
+
+    start_step = 0
+    if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
+        state, meta = load_checkpoint(args.checkpoint, state)
+        start_step = int(meta.get("step", 0))
+        logger.info("resumed from %s at step %d", args.checkpoint, start_step)
+
+    pspecs = param_specs(jax.eval_shape(model.init_params,
+                                        jax.random.PRNGKey(0)), mesh)
+    sspecs = TrainState(params=pspecs,
+                        opt=AdamWState(step=P(), mu=pspecs, nu=pspecs))
+    bspec = {"tokens": batch_spec(mesh, args.batch, 2)}
+    state = jax.device_put(state, named(sspecs, mesh))
+
+    step_fn = make_train_step(model, opt_cfg, microbatches=args.microbatches)
+    state_struct = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    metrics_shape = jax.eval_shape(
+        step_fn, state_struct,
+        {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32)})[1]
+    mspecs = jax.tree_util.tree_map(lambda _: P(), metrics_shape)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(named(sspecs, mesh), named(bspec, mesh)),
+                     out_shardings=(named(sspecs, mesh), named(mspecs, mesh)),
+                     donate_argnums=(0,))
+
+    data = make_data_iter(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                                     batch_size=args.batch, seed=args.seed))
+    t0 = time.perf_counter()
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = jax.device_put(next(data), named(bspec, mesh))
+            state, metrics = jitted(state, batch)
+            if step % max(args.steps // 20, 1) == 0 or step == args.steps - 1:
+                logger.info("step %4d  loss=%.4f  grad_norm=%.3f  lr=%.2e",
+                            step, float(metrics["loss"]),
+                            float(metrics["grad_norm"]), float(metrics["lr"]))
+            if (args.checkpoint and args.checkpoint_every
+                    and (step + 1) % args.checkpoint_every == 0):
+                save_checkpoint(args.checkpoint, jax.device_get(state),
+                                {"step": step + 1, "arch": args.arch})
+    dt = time.perf_counter() - t0
+    tokens = (args.steps - start_step) * args.batch * args.seq
+    logger.info("done: %.1fs, %.0f tokens/s", dt, tokens / dt)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, jax.device_get(state),
+                        {"step": args.steps, "arch": args.arch})
+        logger.info("final checkpoint: %s", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

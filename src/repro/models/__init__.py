@@ -1,0 +1,4 @@
+"""Model zoo: every assigned architecture family in pure JAX."""
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

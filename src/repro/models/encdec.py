@@ -1,0 +1,182 @@
+"""Encoder-decoder stack (seamless-m4t family).
+
+Encoder: bidirectional self-attention + FFN over stub frontend frame embeddings
+(the conv/mel frontend is a stub per the assignment — `input_specs` supplies
+[B, F, d_frontend] features; we implement the projector + transformer).
+Decoder: causal self-attention (cached), cross-attention to encoder memory
+(K/V precomputed at prefill), FFN. Both stacks are scanned over layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.kvcache import (KVCache, SWACache, attend_full_cache,
+                                  attend_swa_cache, init_kv_cache,
+                                  init_swa_cache, kv_write, swa_write)
+from repro.models.layers import (_project_qkv, apply_norm, attention_forward,
+                                 cross_attention_forward, ffn_forward,
+                                 init_attention, init_ffn, init_norm,
+                                 project_memory_kv, rope)
+
+Params = Dict[str, Any]
+
+
+def init_encoder(key: jax.Array, cfg: ModelConfig) -> Params:
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": init_norm(cfg), "attn": init_attention(k1, cfg),
+            "norm2": init_norm(cfg), "ffn": init_ffn(k2, cfg),
+        }
+    keys = jax.random.split(key, cfg.n_enc_layers)
+    layers = jax.vmap(one)(keys)
+    kp = jax.random.fold_in(key, 99)
+    return {
+        "frontend_proj": jax.random.normal(
+            kp, (cfg.d_frontend, cfg.d_model), cfg.pdtype()) * cfg.d_frontend ** -0.5,
+        "layers": layers,
+        "final_norm": init_norm(cfg),
+    }
+
+
+def encoder_forward(p: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: [B, F, d_frontend] stub features -> [B, F, d_model] memory."""
+    x = (frames.astype(cfg.dtype()) @ p["frontend_proj"].astype(cfg.dtype()))
+    B, F = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def layer_fn(h, lp):
+        a = attention_forward(lp["attn"], apply_norm(lp["norm1"], h, cfg),
+                              positions, cfg, causal=False)
+        h = h + a
+        y, _ = ffn_forward(lp["ffn"], apply_norm(lp["norm2"], h, cfg), cfg)
+        return h + y, None
+
+    fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    x, _ = jax.lax.scan(fn, x, p["layers"])
+    return apply_norm(p["final_norm"], x, cfg)
+
+
+def init_decoder(key: jax.Array, cfg: ModelConfig) -> Params:
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": init_norm(cfg), "self_attn": init_attention(k1, cfg),
+            "norm_x": init_norm(cfg), "cross_attn": init_attention(k2, cfg, cross=True),
+            "norm2": init_norm(cfg), "ffn": init_ffn(k3, cfg),
+        }
+    keys = jax.random.split(key, cfg.n_layers)
+    return {"layers": jax.vmap(one)(keys), "final_norm": init_norm(cfg)}
+
+
+def decoder_forward(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                    memory: jnp.ndarray, cfg: ModelConfig, window: int = 0) -> jnp.ndarray:
+    """Teacher-forced decode over full target sequence (training)."""
+
+    def layer_fn(h, lp):
+        a = attention_forward(lp["self_attn"], apply_norm(lp["norm1"], h, cfg),
+                              positions, cfg, causal=True, window=window)
+        h = h + a
+        mk, mv = project_memory_kv(lp["cross_attn"], memory, cfg)
+        c = cross_attention_forward(lp["cross_attn"], apply_norm(lp["norm_x"], h, cfg),
+                                    mk, mv, cfg)
+        h = h + c
+        y, _ = ffn_forward(lp["ffn"], apply_norm(lp["norm2"], h, cfg), cfg)
+        return h + y, None
+
+    fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    x, _ = jax.lax.scan(fn, x, p["layers"])
+    return apply_norm(p["final_norm"], x, cfg)
+
+
+class DecoderCache(NamedTuple):
+    self_kv: Any          # KVCache or SWACache, leaves stacked [L, ...]
+    mem_k: jnp.ndarray    # [L, B, F, KV, hd]
+    mem_v: jnp.ndarray
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_len: int, n_frames: int,
+                       swa: bool = False, dtype=None) -> DecoderCache:
+    dtype = dtype or cfg.dtype()
+    L = cfg.n_layers
+
+    def stacked(one):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)
+
+    self_kv = stacked(init_swa_cache(batch, cfg, dtype) if swa
+                      else init_kv_cache(batch, max_len, cfg, dtype))
+    mem = jnp.zeros((L, batch, n_frames, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return DecoderCache(self_kv=self_kv, mem_k=mem, mem_v=mem)
+
+
+def decoder_prefill(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                    memory: jnp.ndarray, cache: DecoderCache, cfg: ModelConfig,
+                    window: int = 0) -> Tuple[jnp.ndarray, DecoderCache]:
+    """Fill self-attn cache with the prompt and precompute cross K/V."""
+
+    def layer_fn(h, inp):
+        lp, kv, _, _ = inp
+        normed = apply_norm(lp["norm1"], h, cfg)
+        q, k, v = _project_qkv(lp["self_attn"], normed, normed, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        from repro.models.layers import (FLASH_SEQ_THRESHOLD, flash_gqa_attend,
+                                         gqa_attend)
+        if normed.shape[1] > FLASH_SEQ_THRESHOLD:
+            a = flash_gqa_attend(q, k, v, positions, positions, causal=True,
+                                 window=window, q_chunk=cfg.flash_q_chunk,
+                                 k_chunk=cfg.flash_k_chunk)
+        else:
+            a = gqa_attend(q, k, v, positions, positions, causal=True, window=window)
+        if isinstance(kv, SWACache):
+            kv = swa_write(kv, k, v, positions)
+        else:
+            kv = kv_write(kv, k, v, 0)
+        h = h + a @ lp["self_attn"]["wo"]
+        mk, mv = project_memory_kv(lp["cross_attn"], memory, cfg)
+        c = cross_attention_forward(lp["cross_attn"], apply_norm(lp["norm_x"], h, cfg),
+                                    mk, mv, cfg)
+        h = h + c
+        y, _ = ffn_forward(lp["ffn"], apply_norm(lp["norm2"], h, cfg), cfg)
+        return h + y, (kv, mk, mv)
+
+    x, (kv, mk, mv) = jax.lax.scan(layer_fn, x, (p["layers"], cache.self_kv,
+                                                 cache.mem_k, cache.mem_v))
+    x = apply_norm(p["final_norm"], x, cfg)
+    return x, DecoderCache(self_kv=kv, mem_k=mk, mem_v=mv)
+
+
+def decoder_decode_step(p: Params, x: jnp.ndarray, position: jnp.ndarray,
+                        cache: DecoderCache, cfg: ModelConfig,
+                        window: int = 0) -> Tuple[jnp.ndarray, DecoderCache]:
+    B = x.shape[0]
+    pos_arr = jnp.broadcast_to(position.astype(jnp.int32), (B, 1))
+
+    def layer_fn(h, inp):
+        lp, kv, mk, mv = inp
+        normed = apply_norm(lp["norm1"], h, cfg)
+        q, k, v = _project_qkv(lp["self_attn"], normed, normed, cfg)
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k = rope(k, pos_arr, cfg.rope_theta)
+        if isinstance(kv, SWACache):
+            kv = swa_write(kv, k, v, pos_arr)
+            a = attend_swa_cache(q, kv, pos_arr, window or cfg.sliding_window)
+        else:
+            kv = kv_write(kv, k, v, position)
+            a = attend_full_cache(q, kv, pos_arr)
+        h = h + a @ lp["self_attn"]["wo"]
+        c = cross_attention_forward(lp["cross_attn"], apply_norm(lp["norm_x"], h, cfg),
+                                    mk, mv, cfg)
+        h = h + c
+        y, _ = ffn_forward(lp["ffn"], apply_norm(lp["norm2"], h, cfg), cfg)
+        return h + y, kv
+
+    x, kv = jax.lax.scan(layer_fn, x, (p["layers"], cache.self_kv,
+                                       cache.mem_k, cache.mem_v))
+    x = apply_norm(p["final_norm"], x, cfg)
+    return x, DecoderCache(self_kv=kv, mem_k=cache.mem_k, mem_v=cache.mem_v)

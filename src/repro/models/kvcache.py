@@ -1,0 +1,135 @@
+"""KV caches (full and sliding-window ring) and cached-attention helpers."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import gqa_attend, rope
+
+
+class KVCache(NamedTuple):
+    """Full cache: slot s holds position s. k/v: [B, S_max, KV, hd]."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+class QuantKVCache(NamedTuple):
+    """int8 full cache (§Perf A3): halves the dominant KV-streaming bytes of
+    batched decode. Symmetric per-(slot, head) quantisation; scales bf16."""
+    k: jnp.ndarray        # int8 [B, S_max, KV, hd]
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # [B, S_max, KV]
+    v_scale: jnp.ndarray
+
+
+class SWACache(NamedTuple):
+    """Sliding-window ring: slot = pos % W. pos: [B, W] (-1 = empty)."""
+    k: jnp.ndarray   # [B, W, KV, hd]
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: ModelConfig, dtype=None) -> KVCache:
+    dtype = dtype or cfg.dtype()
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def init_swa_cache(batch: int, cfg: ModelConfig, dtype=None, window: int = 0) -> SWACache:
+    dtype = dtype or cfg.dtype()
+    W = window or cfg.sliding_window
+    shape = (batch, W, cfg.n_kv_heads, cfg.head_dim)
+    return SWACache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.full((batch, W), -1, jnp.int32),
+    )
+
+
+def init_quant_kv_cache(batch: int, max_len: int, cfg: ModelConfig,
+                        scale_dtype=jnp.bfloat16) -> QuantKVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return QuantKVCache(
+        k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+        k_scale=jnp.zeros(shape[:3], scale_dtype),
+        v_scale=jnp.zeros(shape[:3], scale_dtype),
+    )
+
+
+# -- writes -------------------------------------------------------------------
+
+def kv_write(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray, start) -> KVCache:
+    """Write [B, T, KV, hd] at slots [start, start+T)."""
+    idx = (0, start, 0, 0)
+    return KVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), idx),
+        v=jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), idx),
+    )
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, KV, hd] -> (int8 values, per-[B,T,KV] scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quant_kv_write(cache: QuantKVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                   start) -> QuantKVCache:
+    kq, ks = _quantize(k_new)
+    vq, vs = _quantize(v_new)
+    idx4 = (0, start, 0, 0)
+    idx3 = (0, start, 0)
+    return QuantKVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, kq, idx4),
+        v=jax.lax.dynamic_update_slice(cache.v, vq, idx4),
+        k_scale=jax.lax.dynamic_update_slice(
+            cache.k_scale, ks.astype(cache.k_scale.dtype), idx3),
+        v_scale=jax.lax.dynamic_update_slice(
+            cache.v_scale, vs.astype(cache.v_scale.dtype), idx3),
+    )
+
+
+def swa_write(cache: SWACache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+              positions: jnp.ndarray) -> SWACache:
+    """Scatter [B, T, KV, hd] at ring slots positions % W. positions: [B, T]."""
+    W = cache.k.shape[1]
+    T = k_new.shape[1]
+    slots = positions % W                                    # [B, T]
+    bidx = jnp.arange(cache.k.shape[0])[:, None]
+    # keep only the last W entries if T > W (earlier ones would be overwritten)
+    if T > W:
+        k_new, v_new = k_new[:, -W:], v_new[:, -W:]
+        positions, slots = positions[:, -W:], slots[:, -W:]
+    return SWACache(
+        k=cache.k.at[bidx, slots].set(k_new.astype(cache.k.dtype)),
+        v=cache.v.at[bidx, slots].set(v_new.astype(cache.v.dtype)),
+        pos=cache.pos.at[bidx, slots].set(positions),
+    )
+
+
+# -- cached attention ----------------------------------------------------------
+
+def attend_full_cache(q: jnp.ndarray, cache, q_pos: jnp.ndarray) -> jnp.ndarray:
+    """q: [B, T, H, hd] (rope applied); q_pos: [B, T]. Causal over filled slots.
+
+    Accepts KVCache or QuantKVCache (dequant fuses into the attention matmul)."""
+    B, S = cache.k.shape[0], cache.k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if isinstance(cache, QuantKVCache):
+        k = cache.k.astype(q.dtype) * cache.k_scale[..., None].astype(q.dtype)
+        v = cache.v.astype(q.dtype) * cache.v_scale[..., None].astype(q.dtype)
+        return gqa_attend(q, k, v, q_pos, k_pos, causal=True)
+    return gqa_attend(q, cache.k, cache.v, q_pos, k_pos, causal=True)
+
+
+def attend_swa_cache(q: jnp.ndarray, cache: SWACache, q_pos: jnp.ndarray,
+                     window: int) -> jnp.ndarray:
+    """Sliding-window attention against the ring buffer."""
+    valid = cache.pos >= 0
+    return gqa_attend(q, cache.k, cache.v, q_pos, cache.pos,
+                      k_valid=valid, causal=True, window=window)

@@ -1,0 +1,428 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, FFN, embeddings.
+
+Pure-function style: params are plain dicts of jnp arrays; every forward takes
+the ModelConfig. Attention covers full-causal, sliding-window, bidirectional
+(encoder), cross-attention, and single-step decode against a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.pdtype())}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype())
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"].astype(jnp.float32)
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- rotary position embedding ------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, T, N, hd]; positions: [B, T] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs          # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd, H, KV = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p: Params = {
+        "wq": jax.random.normal(ks[0], (d, H * hd), cfg.pdtype()) * std,
+        "wk": jax.random.normal(ks[1], (d, KV * hd), cfg.pdtype()) * std,
+        "wv": jax.random.normal(ks[2], (d, KV * hd), cfg.pdtype()) * std,
+        "wo": jax.random.normal(ks[3], (H * hd, d), cfg.pdtype()) * (H * hd) ** -0.5,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype())
+        p["bk"] = jnp.zeros((KV * hd,), cfg.pdtype())
+        p["bv"] = jnp.zeros((KV * hd,), cfg.pdtype())
+    return p
+
+
+def _project_qkv(p: Params, xq: jnp.ndarray, xkv: jnp.ndarray, cfg: ModelConfig):
+    B, T = xq.shape[0], xq.shape[1]
+    S = xkv.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, T, H, hd), k.reshape(B, S, KV, hd), v.reshape(B, S, KV, hd))
+
+
+def gqa_attend(
+    q: jnp.ndarray,                 # [B, T, H, hd]
+    k: jnp.ndarray,                 # [B, S, KV, hd]
+    v: jnp.ndarray,                 # [B, S, KV, hd]
+    q_pos: jnp.ndarray,             # [B, T]
+    k_pos: jnp.ndarray,             # [B, S]
+    k_valid: Optional[jnp.ndarray] = None,   # [B, S] bool
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    mask = jnp.ones((B, T, S), dtype=bool)
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    return out.reshape(B, T, H * hd)
+
+
+def flash_gqa_attend(
+    q: jnp.ndarray,                 # [B, T, H, hd]
+    k: jnp.ndarray,                 # [B, S, KV, hd]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,             # [B, T]
+    k_pos: jnp.ndarray,             # [B, S]
+    k_valid: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax chunked attention: O(T) memory (flash-attention in jnp).
+
+    Numerically matches gqa_attend; used whenever T x S would be too large to
+    materialise. Double scan: outer over query chunks, inner over KV chunks.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, T)
+    k_chunk = min(k_chunk, S)
+    padT, padS = (-T) % q_chunk, (-S) % k_chunk
+    if k_valid is None:
+        k_valid = jnp.ones((B, S), bool)
+    if padT:
+        q = jnp.pad(q, ((0, 0), (0, padT), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, padT)))
+    if padS:
+        k = jnp.pad(k, ((0, 0), (0, padS), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padS), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, padS)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, padS)))
+    nq, nk = (T + padT) // q_chunk, (S + padS) // k_chunk
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, k_chunk, KV, hd)
+    vc = v.reshape(B, nk, k_chunk, KV, hd)
+    qp = q_pos.reshape(B, nq, q_chunk)
+    kp = k_pos.reshape(B, nk, k_chunk)
+    kval = k_valid.reshape(B, nk, k_chunk)
+    scale = hd ** -0.5
+
+    def q_step(_, qi):
+        q_i, qp_i = qi                                  # [B,qc,KV,G,hd], [B,qc]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_j, v_j, kp_j, kv_j = ki
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_j).astype(jnp.float32) * scale
+            mask = kv_j[:, None, :]
+            if causal:
+                mask = mask & (kp_j[:, None, :] <= qp_i[:, :, None])
+            if window > 0:
+                mask = mask & (qp_i[:, :, None] - kp_j[:, None, :] < window)
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pmat = jnp.where(mask[:, None, None, :, :], jnp.exp(s - m_new[..., None]), 0.0)
+            l = l * alpha + pmat.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", pmat.astype(v_j.dtype), v_j).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+             jnp.moveaxis(kp, 1, 0), jnp.moveaxis(kval, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)                # [B,KV,G,qc,hd]
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    # outs: [nq, B, KV, G, qc, hd] -> [B, T, H*hd]
+    out = jnp.moveaxis(outs, 0, 1)                               # [B,nq,KV,G,qc,hd]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * q_chunk, H * hd)
+    return out[:, :T]
+
+
+def flash_gqa_attend_triangular(
+    q: jnp.ndarray,                 # [B, T, H, hd]
+    k: jnp.ndarray,                 # [B, T, KV, hd] (self-attention: S == T)
+    v: jnp.ndarray,
+    positions: jnp.ndarray,         # [B, T] == arange
+    window: int = 0,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Causal flash that SKIPS fully-masked KV blocks (§Perf optimization).
+
+    The baseline flash scans all nq x nk blocks and masks — 2x the causal
+    FLOPs. Here the q-chunk loop is unrolled (python) and each q chunk only
+    visits k chunks <= its own index (and >= the window horizon), so the
+    compiled graph contains exactly the lower-triangle (band) blocks.
+    Requires T == S and aligned position chunks (self-attention prefill/train).
+    """
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    n = (T + pad) // chunk
+    qc = q.reshape(B, n, chunk, KV, G, hd)
+    kc = k.reshape(B, n, chunk, KV, hd)
+    vc = v.reshape(B, n, chunk, KV, hd)
+    pc = positions.reshape(B, n, chunk)
+    scale = hd ** -0.5
+    outs = []
+    for qi in range(n):
+        lo = 0 if window <= 0 else max(0, qi - (window - 1) // chunk - 1)
+        q_i, qp_i = qc[:, qi], pc[:, qi]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_j, v_j, kp_j = ki
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_j).astype(jnp.float32) * scale
+            mask = (kp_j[:, None, :] <= qp_i[:, :, None]) & (kp_j[:, None, :] >= 0)
+            if window > 0:
+                mask = mask & (qp_i[:, :, None] - kp_j[:, None, :] < window)
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pmat = jnp.where(mask[:, None, None, :, :], jnp.exp(s - m_new[..., None]), 0.0)
+            l = l * alpha + pmat.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", pmat.astype(v_j.dtype), v_j).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, chunk, hd), jnp.float32)
+        ks = jnp.moveaxis(kc[:, lo : qi + 1], 1, 0)
+        vs = jnp.moveaxis(vc[:, lo : qi + 1], 1, 0)
+        ps = jnp.moveaxis(pc[:, lo : qi + 1], 1, 0)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, ps))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, chunk, H * hd))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :T]
+
+
+FLASH_SEQ_THRESHOLD = 2048
+
+
+def attention_forward(
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    causal: bool = True,
+    window: int = 0,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill / encoder)."""
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if x.shape[1] > FLASH_SEQ_THRESHOLD:
+        if causal and cfg.flash_triangular:
+            out = flash_gqa_attend_triangular(q, k, v, positions, window=window,
+                                              chunk=cfg.flash_q_chunk)
+        else:
+            out = flash_gqa_attend(q, k, v, positions, positions,
+                                   causal=causal, window=window,
+                                   q_chunk=cfg.flash_q_chunk,
+                                   k_chunk=cfg.flash_k_chunk)
+    else:
+        out = gqa_attend(q, k, v, positions, positions, causal=causal, window=window)
+    return out @ p["wo"]
+
+
+def cross_attention_forward(
+    p: Params,
+    x: jnp.ndarray,
+    memory_k: jnp.ndarray,          # [B, S, KV, hd] — precomputed from encoder output
+    memory_v: jnp.ndarray,
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    B, T = x.shape[0], x.shape[1]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, H, hd)
+    S = memory_k.shape[1]
+    zeros_q = jnp.zeros((B, T), jnp.int32)
+    zeros_k = jnp.zeros((B, S), jnp.int32)
+    if T > FLASH_SEQ_THRESHOLD or S > FLASH_SEQ_THRESHOLD:
+        out = flash_gqa_attend(q, memory_k, memory_v, zeros_q, zeros_k,
+                               causal=False, q_chunk=cfg.flash_q_chunk,
+                               k_chunk=cfg.flash_k_chunk)
+    else:
+        out = gqa_attend(q, memory_k, memory_v, zeros_q, zeros_k, causal=False)
+    return out @ p["wo"]
+
+
+def project_memory_kv(p: Params, memory: jnp.ndarray, cfg: ModelConfig):
+    B, S = memory.shape[0], memory.shape[1]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (memory @ p["wk"]).reshape(B, S, KV, hd)
+    v = (memory @ p["wv"]).reshape(B, S, KV, hd)
+    return k, v
+
+
+# -- FFN -----------------------------------------------------------------------
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "w_up": jax.random.normal(ks[0], (d, f), cfg.pdtype()) * d ** -0.5,
+        "w_down": jax.random.normal(ks[1], (f, d), cfg.pdtype()) * f ** -0.5,
+    }
+    if cfg.activation in ("silu",):   # gated (SwiGLU-family) FFN
+        p["w_gate"] = jax.random.normal(ks[2], (d, f), cfg.pdtype()) * d ** -0.5
+    return p
+
+
+def apply_activation(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def ffn_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                capture: bool = False) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    pre = x @ p["w_up"]
+    act = apply_activation(pre, cfg.activation)
+    if "w_gate" in p:
+        act = act * (x @ p["w_gate"])
+    y = act @ p["w_down"]
+    return y, (pre if capture else None)
+
+
+# -- sparse (offloaded) decode FFN — the paper's technique at the HBM tier -----
+
+def init_ffn_predictor(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Per-layer activation predictor (paper Fig. 3 / Deja Vu) that scores
+    neuron SEGMENTS — contiguous groups in the co-activation-permuted layout —
+    so the decode step gathers a few large contiguous weight slabs instead of
+    scattered rows (kernels/sparse_ffn is the Pallas version of this gather)."""
+    n_seg = cfg.d_ff // cfg.sparse_seg
+    k1, k2 = jax.random.split(key)
+    h = 128
+    return {
+        "w1": jax.random.normal(k1, (cfg.d_model, h), cfg.pdtype()) * cfg.d_model ** -0.5,
+        "w2": jax.random.normal(k2, (h, n_seg), cfg.pdtype()) * h ** -0.5,
+    }
+
+
+def sparse_ffn_decode(p: Params, pred: Params, x: jnp.ndarray,
+                      cfg: ModelConfig) -> jnp.ndarray:
+    """x: [B, 1, d]. Segment-top-k FFN: only k = sparse_frac * n_seg segments
+    of W_up/W_gate/W_down are touched (union across the local batch), so HBM
+    weight traffic drops by ~sparse_frac — the RIPPLE flash argument, one tier
+    up. Exact for ReLU models whenever the predictor over-covers the true
+    support; top-k sparsification (Deja Vu-style) otherwise."""
+    B, T, d = x.shape
+    f = cfg.d_ff
+    seg = cfg.sparse_seg
+    n_seg = f // seg
+    k_seg = max(1, int(n_seg * cfg.sparse_frac))
+    scores = jax.nn.relu(x.reshape(B * T, d) @ pred["w1"].astype(x.dtype))
+    scores = scores @ pred["w2"].astype(x.dtype)                  # [B*T, n_seg]
+    union = scores.astype(jnp.float32).sum(axis=0)                # union over batch
+    _, seg_ids = jax.lax.top_k(union, k_seg)                      # [k_seg]
+    w_up = p["w_up"].reshape(d, n_seg, seg)
+    wu = jnp.take(w_up, seg_ids, axis=1).reshape(d, k_seg * seg)
+    pre = x @ wu
+    act = apply_activation(pre, cfg.activation)
+    if "w_gate" in p:
+        wg = jnp.take(p["w_gate"].reshape(d, n_seg, seg), seg_ids, axis=1)
+        act = act * (x @ wg.reshape(d, k_seg * seg))
+    w_down = p["w_down"].reshape(n_seg, seg, d)
+    wd = jnp.take(w_down, seg_ids, axis=0).reshape(k_seg * seg, d)
+    return act @ wd
+
+
+# -- embeddings ----------------------------------------------------------------
+
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> Params:
+    p: Params = {
+        "embedding": jax.random.normal(key, (cfg.vocab_size, cfg.d_model), cfg.pdtype()) * 0.02,
+    }
+    if not cfg.tie_embeddings:
+        key2 = jax.random.fold_in(key, 1)
+        p["lm_head"] = jax.random.normal(
+            key2, (cfg.d_model, cfg.vocab_size), cfg.pdtype()) * cfg.d_model ** -0.5
+    return p
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return p["embedding"][tokens].astype(cfg.dtype())
+
+
+def unembed(p: Params, h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return h @ p["embedding"].T.astype(cfg.dtype())
+    return h @ p["lm_head"].astype(cfg.dtype())

@@ -1,0 +1,219 @@
+"""Model facade: build any assigned architecture from its ModelConfig.
+
+Entry points (all pure functions of (params, batch)):
+  init_params(key)                       — real parameter init
+  forward(params, batch, capture=False)  — logits for training/eval
+  loss_fn(params, batch)                 — (loss, aux) next-token CE
+  init_cache(batch, max_len, swa=...)    — decode cache pytree
+  prefill(params, batch, cache)          — (logits_last, cache)
+  decode_step(params, tokens, position, cache) — (logits, cache)
+
+Batch dict keys: "tokens" [B,S] int32 (targets = tokens shifted, with
+batch.get("loss_mask")); "patch_feats" [B,P,d_frontend] (vlm);
+"frames" [B,F,d_frontend] (audio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.layers import (apply_norm, embed_tokens, init_embedding,
+                                 init_norm, unembed)
+
+Params = Dict[str, Any]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ----------------------------------------------------------------
+    def init_params(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_stack, k_extra = jax.random.split(key, 3)
+        params: Params = {"embed": init_embedding(k_emb, cfg)}
+        if cfg.is_encdec:
+            k_enc, k_dec = jax.random.split(k_stack)
+            params["encoder"] = encdec.init_encoder(k_enc, cfg)
+            params["decoder"] = encdec.init_decoder(k_dec, cfg)
+        else:
+            params["stack"] = transformer.init_stack(k_stack, cfg)
+            params["final_norm"] = init_norm(cfg)
+        if cfg.family == "vlm":
+            k1, k2 = jax.random.split(k_extra)
+            params["projector"] = {
+                "w1": jax.random.normal(k1, (cfg.d_frontend, cfg.d_model),
+                                        cfg.pdtype()) * cfg.d_frontend ** -0.5,
+                "w2": jax.random.normal(k2, (cfg.d_model, cfg.d_model),
+                                        cfg.pdtype()) * cfg.d_model ** -0.5,
+            }
+        return params
+
+    # -- shared pieces ---------------------------------------------------------
+    def _embed_inputs(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Token (+ prefix) embeddings and positions for decoder-only families."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = embed_tokens(params["embed"], tokens, cfg)
+        if cfg.family == "vlm":
+            pf = batch["patch_feats"].astype(cfg.dtype())
+            proj = jax.nn.gelu(pf @ params["projector"]["w1"].astype(cfg.dtype()))
+            proj = proj @ params["projector"]["w2"].astype(cfg.dtype())
+            x = jnp.concatenate([proj, x], axis=1)
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, positions
+
+    # -- training forward --------------------------------------------------------
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                capture_activations: bool = False, window: int = 0):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            memory = encdec.encoder_forward(params["encoder"], batch["frames"], cfg)
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            x = embed_tokens(params["embed"], tokens, cfg)
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            h = encdec.decoder_forward(params["decoder"], x, positions, memory, cfg,
+                                       window=window)
+            logits = unembed(params["embed"], h, cfg)
+            return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}
+        x, positions = self._embed_inputs(params, batch)
+        out = transformer.stack_forward(params["stack"], x, positions, cfg,
+                                        window=window,
+                                        capture_activations=capture_activations)
+        h = apply_norm(params["final_norm"], out.x, cfg)
+        if cfg.family == "vlm":           # only text positions produce logits
+            n_prefix = batch["patch_feats"].shape[1]
+            h = h[:, n_prefix:]
+        logits = unembed(params["embed"], h, cfg)
+        res = {"logits": logits, "aux_loss": out.aux_loss, "hidden": h}
+        if capture_activations:
+            res["ffn_pre_act"] = out.ffn_pre_act
+        return res
+
+    def _hidden_and_aux(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Final hidden states (pre-unembed) — the chunked-CE path avoids ever
+        materialising full-sequence logits (§Perf X3)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            memory = encdec.encoder_forward(params["encoder"], batch["frames"], cfg)
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            x = embed_tokens(params["embed"], tokens, cfg)
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            h = encdec.decoder_forward(params["decoder"], x, positions, memory, cfg)
+            return h, jnp.zeros((), jnp.float32)
+        x, positions = self._embed_inputs(params, batch)
+        out = transformer.stack_forward(params["stack"], x, positions, cfg)
+        h = apply_norm(params["final_norm"], out.x, cfg)
+        if cfg.family == "vlm":
+            h = h[:, batch["patch_feats"].shape[1]:]
+        return h, out.aux_loss
+
+    CE_CHUNK = 512
+
+    def loss_fn(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Next-token CE with a CHUNKED lm_head (§Perf X3): the vocab
+        projection + softmax statistics run per sequence-chunk inside a
+        rematerialised scan, so peak logits memory is [B, chunk, V] instead of
+        [B, T, V] — decisive for the 256 k-vocab archs (full-sequence f32
+        logits for seamless train_4k would be ~250 GiB/device).
+        The target logit uses an iota-compare select-reduce, never a vocab
+        gather (which would all-gather tensor-parallel lm_head shards)."""
+        cfg = self.cfg
+        h, aux = self._hidden_and_aux(params, batch)
+        tokens = batch["tokens"]
+        targets = tokens[:, 1:]
+        h = h[:, :-1]
+        mask = batch.get("loss_mask")
+        mask = (mask[:, 1:] if mask is not None
+                else jnp.ones_like(targets, jnp.float32)).astype(jnp.float32)
+        B, T, d = h.shape
+        chunk = min(self.CE_CHUNK, T)
+        pad = (-T) % chunk
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        n = (T + pad) // chunk
+        hc = jnp.moveaxis(h.reshape(B, n, chunk, d), 1, 0)
+        tc = jnp.moveaxis(targets.reshape(B, n, chunk), 1, 0)
+        mc = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+        @jax.checkpoint
+        def chunk_fn(carry, inp):
+            h_c, t_c, m_c = inp
+            logits = unembed(params["embed"], h_c, cfg)          # [B, chunk, V]
+            maxl = jax.lax.stop_gradient(
+                jnp.max(logits, axis=-1, keepdims=True)).astype(jnp.float32)
+            shifted = logits.astype(jnp.float32) - maxl
+            logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+            iota = jnp.arange(logits.shape[-1], dtype=t_c.dtype)
+            tgt = jnp.sum(jnp.where(t_c[..., None] == iota, shifted, 0.0), axis=-1)
+            ce_sum, m_sum = carry
+            ce_sum = ce_sum + jnp.sum((logz - tgt) * m_c)
+            return (ce_sum, m_sum + jnp.sum(m_c)), None
+
+        (ce_sum, m_sum), _ = jax.lax.scan(
+            chunk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hc, tc, mc))
+        loss = ce_sum / jnp.maximum(m_sum, 1.0)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_weight * aux
+        return loss, {"ce": loss, "aux_loss": aux}
+
+    # -- serving -------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, swa: bool = False,
+                   n_frames: int = 0, dtype=None) -> Any:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.init_decoder_cache(cfg, batch, max_len,
+                                             n_frames or cfg.n_prefix_tokens,
+                                             swa=swa, dtype=dtype)
+        return transformer.init_stack_cache(cfg, batch, max_len, swa=swa, dtype=dtype)
+
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray], cache: Any,
+                window: int = 0) -> Tuple[jnp.ndarray, Any]:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            memory = encdec.encoder_forward(params["encoder"], batch["frames"], cfg)
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            x = embed_tokens(params["embed"], tokens, cfg)
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            h, cache = encdec.decoder_prefill(params["decoder"], x, positions, memory,
+                                              cache, cfg, window=window)
+            logits = unembed(params["embed"], h[:, -1:], cfg)
+            return logits, cache
+        x, positions = self._embed_inputs(params, batch)
+        h, cache = transformer.stack_prefill(params["stack"], x, positions, cache,
+                                             cfg, window=window)
+        h = apply_norm(params["final_norm"], h[:, -1:], cfg)
+        logits = unembed(params["embed"], h, cfg)
+        return logits, cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray, position: jnp.ndarray,
+                    cache: Any, window: int = 0) -> Tuple[jnp.ndarray, Any]:
+        """tokens: [B, 1]; position: scalar int32 (position of these tokens)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        if cfg.is_encdec:
+            h, cache = encdec.decoder_decode_step(params["decoder"], x, position,
+                                                  cache, cfg, window=window)
+        else:
+            h, cache = transformer.stack_decode_step(params["stack"], x, position,
+                                                     cache, cfg, window=window)
+            h = apply_norm(params["final_norm"], h, cfg)
+        logits = unembed(params["embed"], h, cfg)
+        return logits, cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,340 @@
+"""State-space / recurrent mixers: Mamba (selective scan), xLSTM (mLSTM, sLSTM).
+
+All three expose:
+  init_*(key, cfg)                          -> params
+  *_forward(p, x, cfg)                      -> y            (full sequence)
+  *_decode_step(p, x_t, state, cfg)         -> (y_t, state) (one token)
+  *_init_state(batch, cfg, dtype)           -> state pytree
+
+Sequence forwards run a time scan in chunks of `SCAN_CHUNK` with jax.checkpoint
+on each chunk (sqrt-T activation memory for backward). States are exact — the
+decode step continues any prefix processed by the sequence forward.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+SCAN_CHUNK = 128
+
+
+def _chunked_time_scan(step_fn, carry, xs_time_major, chunk: int = SCAN_CHUNK):
+    """scan(step_fn) over leading time axis, checkpointed per chunk.
+
+    Padded steps are carry-IDENTITY (masked): zero-padded inputs are not
+    guaranteed to be no-ops for every recurrence (sLSTM's hidden recurrence
+    evolves on zero input), so the final state must ignore them.
+    """
+    T = jax.tree_util.tree_leaves(xs_time_major)[0].shape[0]
+    pad = (-T) % chunk
+    valid = jnp.arange(T + pad) < T
+    if pad:
+        xs_time_major = jax.tree_util.tree_map(
+            lambda a: jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]), xs_time_major)
+    nchunks = (T + pad) // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((nchunks, chunk) + a.shape[1:]), xs_time_major)
+    valid_c = valid.reshape(nchunks, chunk)
+
+    def masked_step(c, inp):
+        v, xs = inp
+        new_c, y = step_fn(c, xs)
+        new_c = jax.tree_util.tree_map(lambda a, b: jnp.where(v, a, b), new_c, c)
+        return new_c, y
+
+    @jax.checkpoint
+    def chunk_fn(c, inp):
+        return jax.lax.scan(masked_step, c, inp)
+
+    carry, ys = jax.lax.scan(chunk_fn, carry, (valid_c, xs_c))
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((nchunks * chunk,) + a.shape[2:])[:T], ys)
+    return carry, ys
+
+
+# ===========================================================================
+# Mamba (selective SSM)
+# ===========================================================================
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [B, d_conv-1, d_inner] — trailing inputs for the causal conv
+    ssm: jnp.ndarray    # [B, d_inner, d_state]
+
+
+def _mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba or MambaConfig()
+    di = m.expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return di, m.d_state, m.d_conv, dt_rank
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, N, dc, R = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    pd = cfg.pdtype()
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), pd) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (dc, di), pd) * dc ** -0.5,
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": jax.random.normal(ks[2], (di, R + 2 * N), pd) * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (R, di), pd) * R ** -0.5,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, pd))),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=pd), (di, 1))),
+        "D": jnp.ones((di,), pd),
+        "out_proj": jax.random.normal(ks[5], (di, d), pd) * di ** -0.5,
+    }
+
+
+def mamba_init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> MambaState:
+    di, N, dc, _ = _mamba_dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, dc - 1, di), dtype),
+        ssm=jnp.zeros((batch, di, N), jnp.float32),
+    )
+
+
+def _mamba_ssm_inputs(p: Params, x_conv: jnp.ndarray, cfg: ModelConfig):
+    """x_conv: [..., di] post-conv activations -> (dt, B_t, C_t)."""
+    di, N, _, R = _mamba_dims(cfg)
+    proj = x_conv @ p["x_proj"].astype(x_conv.dtype)
+    dt_r, B_t, C_t = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(x_conv.dtype)
+                         + p["dt_bias"].astype(x_conv.dtype))
+    return dt, B_t, C_t
+
+
+def _mamba_step(A, D):
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp      # [B,di], [B,di], [B,N], [B,N]
+        dtf = dt_t.astype(jnp.float32)
+        dA = jnp.exp(dtf[..., None] * A)                         # [B, di, N]
+        dBx = dtf[..., None] * B_t.astype(jnp.float32)[:, None, :] * x_t.astype(jnp.float32)[..., None]
+        h = dA * h + dBx
+        y = (h * C_t.astype(jnp.float32)[:, None, :]).sum(-1) + D * x_t.astype(jnp.float32)
+        return h, y.astype(x_t.dtype)
+    return step
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  return_state: bool = False):
+    """x: [B, T, d] -> [B, T, d] (and the final MambaState if requested)."""
+    B, T, d = x.shape
+    di, N, dc, _ = _mamba_dims(cfg)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)                           # [B, T, di]
+    # causal depthwise conv over time
+    x_pad = jnp.pad(x_in, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv_w = p["conv_w"].astype(x.dtype)
+    x_conv = sum(x_pad[:, k : k + T, :] * conv_w[k] for k in range(dc))
+    x_conv = jax.nn.silu(x_conv + p["conv_b"].astype(x.dtype))
+    dt, B_t, C_t = _mamba_ssm_inputs(p, x_conv, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    D = p["D"].astype(jnp.float32)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    tm = lambda a: jnp.moveaxis(a, 1, 0)                          # time-major
+    h_final, ys = _chunked_time_scan(_mamba_step(A, D), h0, (tm(x_conv), tm(dt), tm(B_t), tm(C_t)))
+    y = jnp.moveaxis(ys, 0, 1)                                    # [B, T, di]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, MambaState(conv=x_pad[:, T:, :], ssm=h_final)
+    return out
+
+
+def mamba_decode_step(p: Params, x_t: jnp.ndarray, state: MambaState,
+                      cfg: ModelConfig) -> Tuple[jnp.ndarray, MambaState]:
+    """x_t: [B, d] one token -> (y_t [B, d], new state)."""
+    di, N, dc, _ = _mamba_dims(cfg)
+    xz = x_t @ p["in_proj"].astype(x_t.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)                           # [B, di]
+    window = jnp.concatenate([state.conv, x_in[:, None, :]], axis=1)   # [B, dc, di]
+    conv_w = p["conv_w"].astype(x_t.dtype)
+    x_conv = (window * conv_w[None]).sum(axis=1) + p["conv_b"].astype(x_t.dtype)
+    x_conv = jax.nn.silu(x_conv)
+    dt, B_t, C_t = _mamba_ssm_inputs(p, x_conv, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    D = p["D"].astype(jnp.float32)
+    h, y = _mamba_step(A, D)(state.ssm, (x_conv, dt, B_t, C_t))
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x_t.dtype), MambaState(conv=window[:, 1:], ssm=h)
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray   # [B, H, hd, hd]
+    n: jnp.ndarray   # [B, H, hd]
+    m: jnp.ndarray   # [B, H]
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    pd = cfg.pdtype()
+    std = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, H * hd), pd) * std,
+        "wk": jax.random.normal(ks[1], (d, H * hd), pd) * std,
+        "wv": jax.random.normal(ks[2], (d, H * hd), pd) * std,
+        "w_i": jax.random.normal(ks[3], (d, H), pd) * std,
+        "b_i": jnp.zeros((H,), pd),
+        "w_f": jax.random.normal(ks[4], (d, H), pd) * std,
+        "b_f": jnp.full((H,), 3.0, pd),          # forget-gate bias: start remembering
+        "w_o": jax.random.normal(ks[5], (d, H * hd), pd) * std,
+        "out_proj": jax.random.normal(jax.random.fold_in(key, 7), (H * hd, d), pd) * (H * hd) ** -0.5,
+    }
+
+
+def mlstm_init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> MLSTMState:
+    H, hd = cfg.n_heads, cfg.head_dim
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_gates(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    H, hd = cfg.n_heads, cfg.head_dim
+    shp = x.shape[:-1]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(*shp, H, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(*shp, H, hd) * hd ** -0.5
+    v = (x @ p["wv"].astype(x.dtype)).reshape(*shp, H, hd)
+    i_log = (x @ p["w_i"].astype(x.dtype) + p["b_i"].astype(x.dtype)).astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        (x @ p["w_f"].astype(x.dtype) + p["b_f"].astype(x.dtype)).astype(jnp.float32))
+    o = jax.nn.sigmoid(x @ p["w_o"].astype(x.dtype))
+    return q, k, v, i_log, f_log, o
+
+
+def _mlstm_step(carry: MLSTMState, inp):
+    q, k, v, i_log, f_log = inp      # [B,H,hd] x3, [B,H] x2
+    C, n, m = carry
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_p = jnp.exp(i_log - m_new)[..., None]                        # [B,H,1]
+    f_p = jnp.exp(f_log + m - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f_p[..., None] * C + i_p[..., None] * vf[..., :, None] * kf[..., None, :]
+    n = f_p * n + i_p * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, qf)), 1.0)[..., None]
+    y = (num / den).astype(q.dtype)                                # [B,H,hd]
+    return MLSTMState(C, n, m_new), y
+
+
+def mlstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  return_state: bool = False):
+    B, T, d = x.shape
+    q, k, v, i_log, f_log, o = _mlstm_gates(p, x, cfg)
+    carry = mlstm_init_state(B, cfg)
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    final, ys = _chunked_time_scan(_mlstm_step, carry, (tm(q), tm(k), tm(v), tm(i_log), tm(f_log)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, -1) * o
+    out = y @ p["out_proj"].astype(x.dtype)
+    return (out, final) if return_state else out
+
+
+def mlstm_decode_step(p: Params, x_t: jnp.ndarray, state: MLSTMState,
+                      cfg: ModelConfig) -> Tuple[jnp.ndarray, MLSTMState]:
+    B, d = x_t.shape
+    q, k, v, i_log, f_log, o = _mlstm_gates(p, x_t, cfg)
+    state, y = _mlstm_step(state, (q, k, v, i_log, f_log))
+    y = y.reshape(B, -1) * o
+    return y @ p["out_proj"].astype(x_t.dtype), state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory block with true hidden recurrence)
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, H, hd]
+    n: jnp.ndarray   # [B, H, hd]
+    h: jnp.ndarray   # [B, H, hd]
+    m: jnp.ndarray   # [B, H, hd]
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    pd = cfg.pdtype()
+    p: Params = {}
+    for i, gate in enumerate(("z", "i", "f", "o")):
+        kw, kr = jax.random.split(jax.random.fold_in(key, i))
+        p[f"w_{gate}"] = jax.random.normal(kw, (d, H * hd), pd) * d ** -0.5
+        p[f"r_{gate}"] = jax.random.normal(kr, (H, hd, hd), pd) * hd ** -0.5
+        p[f"b_{gate}"] = (jnp.full((H * hd,), 3.0, pd) if gate == "f"
+                          else jnp.zeros((H * hd,), pd))
+    p["out_proj"] = jax.random.normal(jax.random.fold_in(key, 9), (H * hd, d), pd) * (H * hd) ** -0.5
+    return p
+
+
+def slstm_init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SLSTMState:
+    H, hd = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, h=z, m=jnp.full((batch, H, hd), -1e30, jnp.float32))
+
+
+def _slstm_step_fn(p: Params, cfg: ModelConfig):
+    H, hd = cfg.n_heads, cfg.head_dim
+
+    def rec(gate: str, h_prev: jnp.ndarray) -> jnp.ndarray:
+        return jnp.einsum("bhd,hde->bhe", h_prev, p[f"r_{gate}"].astype(h_prev.dtype))
+
+    def step(state: SLSTMState, wx):   # wx: dict of [B, H, hd] pre-projected inputs
+        hp = state.h
+        z = jnp.tanh(wx["z"] + rec("z", hp))
+        i_log = (wx["i"] + rec("i", hp)).astype(jnp.float32)
+        f_log = jax.nn.log_sigmoid((wx["f"] + rec("f", hp)).astype(jnp.float32))
+        o = jax.nn.sigmoid(wx["o"] + rec("o", hp))
+        m_new = jnp.maximum(f_log + state.m, i_log)
+        i_p = jnp.exp(i_log - m_new)
+        f_p = jnp.exp(f_log + state.m - m_new)
+        c = f_p * state.c + i_p * z.astype(jnp.float32)
+        n = f_p * state.n + i_p
+        h = (o.astype(jnp.float32) * c / jnp.maximum(n, 1e-6)).astype(z.dtype)
+        new = SLSTMState(c=c, n=n, h=h.astype(jnp.float32), m=m_new)
+        return new, h
+
+    return step
+
+
+def _slstm_wx(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    H, hd = cfg.n_heads, cfg.head_dim
+    shp = x.shape[:-1]
+    return {
+        g: (x @ p[f"w_{g}"].astype(x.dtype) + p[f"b_{g}"].astype(x.dtype)).reshape(*shp, H, hd)
+        for g in ("z", "i", "f", "o")
+    }
+
+
+def slstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  return_state: bool = False):
+    B, T, d = x.shape
+    wx = _slstm_wx(p, x, cfg)
+    carry = slstm_init_state(B, cfg)
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    final, ys = _chunked_time_scan(_slstm_step_fn(p, cfg), carry,
+                                   {k: tm(v) for k, v in wx.items()})
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, -1)
+    out = (y @ p["out_proj"].astype(y.dtype)).astype(x.dtype)
+    return (out, final) if return_state else out
+
+
+def slstm_decode_step(p: Params, x_t: jnp.ndarray, state: SLSTMState,
+                      cfg: ModelConfig) -> Tuple[jnp.ndarray, SLSTMState]:
+    B, d = x_t.shape
+    wx = _slstm_wx(p, x_t, cfg)
+    state, y = _slstm_step_fn(p, cfg)(state, wx)
+    y = y.reshape(B, -1)
+    return (y @ p["out_proj"].astype(y.dtype)).astype(x_t.dtype), state

@@ -1,0 +1,318 @@
+"""Decoder stack assembly: heterogeneous layers under a single lax.scan.
+
+The per-layer mixer/FFN pattern (cfg.layer_kinds / cfg.ffn_kinds) is detected
+to be periodic with period P; the stack is scanned over n_layers/P groups, each
+group applying P sublayers unrolled. This keeps HLO size O(P), which is what
+makes 88-layer configs compile quickly on one host and is standard MaxText
+practice. Parameters and caches are stacked [G, ...] along the scan axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.kvcache import (KVCache, QuantKVCache, SWACache,
+                                  attend_full_cache, attend_swa_cache,
+                                  init_kv_cache, init_quant_kv_cache,
+                                  init_swa_cache, kv_write, quant_kv_write,
+                                  swa_write)
+from repro.models.layers import (apply_norm, attention_forward, ffn_forward,
+                                 init_attention, init_ffn, init_ffn_predictor,
+                                 init_norm, rope, sparse_ffn_decode)
+
+Params = Dict[str, Any]
+
+
+def stack_period(cfg: ModelConfig) -> int:
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    L = cfg.n_layers
+    for P in range(1, L + 1):
+        if L % P:
+            continue
+        if all(kinds[i] == kinds[i % P] for i in range(L)) and \
+           all(ffns[i] == ffns[i % P] for i in range(L)):
+            return P
+    return L
+
+
+# -- init ---------------------------------------------------------------------
+
+def _init_sublayer(key: jax.Array, cfg: ModelConfig, kind: str, ffn: str) -> Params:
+    kmix, kffn = jax.random.split(key)
+    p: Params = {"norm1": init_norm(cfg)}
+    if kind == "attn":
+        p["mixer"] = init_attention(kmix, cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba(kmix, cfg)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(kmix, cfg)
+    elif kind == "slstm":
+        p["mixer"] = ssm.init_slstm(kmix, cfg)
+    else:
+        raise ValueError(kind)
+    if ffn == "dense":
+        p["norm2"] = init_norm(cfg)
+        p["ffn"] = init_ffn(kffn, cfg)
+        if cfg.serve_sparse:
+            p["ffn_pred"] = init_ffn_predictor(jax.random.fold_in(kffn, 7), cfg)
+    elif ffn == "moe":
+        p["norm2"] = init_norm(cfg)
+        p["ffn"] = moe_lib.init_moe(kffn, cfg)
+    return p
+
+
+def init_stack(key: jax.Array, cfg: ModelConfig) -> Params:
+    P = stack_period(cfg)
+    G = cfg.n_layers // P
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    stack: Params = {}
+    for j in range(P):
+        keys = jax.random.split(jax.random.fold_in(key, j), G)
+        stack[f"sub_{j}"] = jax.vmap(
+            lambda k: _init_sublayer(k, cfg, kinds[j], ffns[j]))(keys)
+    return stack
+
+
+# -- full-sequence forward ------------------------------------------------------
+
+class StackOutput(NamedTuple):
+    x: jnp.ndarray
+    aux_loss: jnp.ndarray                     # scalar (MoE load balance)
+    ffn_pre_act: Optional[jnp.ndarray]        # [L_dense, B, T, d_ff] if captured
+
+
+def stack_forward(
+    stack: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    window: int = 0,
+    capture_activations: bool = False,
+) -> StackOutput:
+    P = stack_period(cfg)
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+
+    def group_fn(carry, group_params):
+        h = carry
+        aux_total = jnp.zeros((), jnp.float32)
+        captures: List[jnp.ndarray] = []
+        for j in range(P):
+            sp = group_params[f"sub_{j}"]
+            kind, ffn = kinds[j], ffns[j]
+            normed = apply_norm(sp["norm1"], h, cfg)
+            if kind == "attn":
+                mix = attention_forward(sp["mixer"], normed, positions, cfg, window=window)
+            elif kind == "mamba":
+                mix = ssm.mamba_forward(sp["mixer"], normed, cfg)
+            elif kind == "mlstm":
+                mix = ssm.mlstm_forward(sp["mixer"], normed, cfg)
+            else:
+                mix = ssm.slstm_forward(sp["mixer"], normed, cfg)
+            h = h + mix
+            if ffn != "none":
+                normed2 = apply_norm(sp["norm2"], h, cfg)
+                if ffn == "dense":
+                    y, pre = ffn_forward(sp["ffn"], normed2, cfg, capture=capture_activations)
+                    if capture_activations:
+                        captures.append(pre)
+                else:
+                    y, aux = moe_lib.moe_forward(sp["ffn"], normed2, cfg)
+                    aux_total = aux_total + aux
+                h = h + y
+        cap = jnp.stack(captures) if captures else jnp.zeros((0,), h.dtype)
+        return h, (aux_total, cap)
+
+    fn = jax.checkpoint(group_fn) if cfg.remat else group_fn
+    x, (aux, caps) = jax.lax.scan(fn, x, stack)
+    aux_loss = aux.sum()
+    pre_act = None
+    if capture_activations and caps.size:
+        # caps: [G, n_dense_per_period, B, T, d_ff] -> [L_dense, B, T, d_ff]
+        pre_act = caps.reshape((-1,) + caps.shape[2:])
+    return StackOutput(x=x, aux_loss=aux_loss, ffn_pre_act=pre_act)
+
+
+# -- caches ----------------------------------------------------------------------
+
+def init_stack_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    swa: bool = False,
+    dtype=None,
+) -> Params:
+    """Cache pytree: per sublayer position, leaves stacked [G, ...]."""
+    P = stack_period(cfg)
+    G = cfg.n_layers // P
+    kinds = cfg.layer_kinds()
+    dtype = dtype or cfg.dtype()
+
+    def stacked(make_one):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (G,) + a.shape).copy(), one)
+
+    cache: Params = {}
+    for j in range(P):
+        kind = kinds[j]
+        if kind == "attn":
+            if swa:
+                cache[f"sub_{j}"] = stacked(lambda: init_swa_cache(batch, cfg, dtype))
+            elif cfg.kv_quant:
+                cache[f"sub_{j}"] = stacked(lambda: init_quant_kv_cache(batch, max_len, cfg))
+            else:
+                cache[f"sub_{j}"] = stacked(lambda: init_kv_cache(batch, max_len, cfg, dtype))
+        elif kind == "mamba":
+            cache[f"sub_{j}"] = stacked(lambda: ssm.mamba_init_state(batch, cfg, dtype))
+        elif kind == "mlstm":
+            cache[f"sub_{j}"] = stacked(lambda: ssm.mlstm_init_state(batch, cfg, dtype))
+        else:
+            cache[f"sub_{j}"] = stacked(lambda: ssm.slstm_init_state(batch, cfg, dtype))
+    return cache
+
+
+# -- prefill ----------------------------------------------------------------------
+
+def _attn_seq_with_cache(sp, normed, positions, cfg, cache, window):
+    """Sequence attention that also fills the cache (prefill path).
+
+    Long sequences route through flash attention exactly like
+    attention_forward — the dense [T, S] score matrix at 32k would be
+    hundreds of GiB (§Perf X7)."""
+    from repro.models.layers import (FLASH_SEQ_THRESHOLD, _project_qkv,
+                                     flash_gqa_attend,
+                                     flash_gqa_attend_triangular, gqa_attend)
+    q, k, v = _project_qkv(sp, normed, normed, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if normed.shape[1] > FLASH_SEQ_THRESHOLD:
+        if cfg.flash_triangular:
+            out = flash_gqa_attend_triangular(q, k, v, positions, window=window,
+                                              chunk=cfg.flash_q_chunk)
+        else:
+            out = flash_gqa_attend(q, k, v, positions, positions, causal=True,
+                                   window=window, q_chunk=cfg.flash_q_chunk,
+                                   k_chunk=cfg.flash_k_chunk)
+    else:
+        out = gqa_attend(q, k, v, positions, positions, causal=True, window=window)
+    if isinstance(cache, SWACache):
+        cache = swa_write(cache, k, v, positions)
+    elif isinstance(cache, QuantKVCache):
+        cache = quant_kv_write(cache, k, v, 0)
+    else:
+        cache = kv_write(cache, k, v, 0)
+    return out @ sp["wo"], cache
+
+
+def stack_prefill(
+    stack: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Params,
+    cfg: ModelConfig,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Params]:
+    P = stack_period(cfg)
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+
+    def group_fn(carry, inp):
+        h = carry
+        group_params, group_cache = inp
+        new_cache: Params = {}
+        for j in range(P):
+            sp = group_params[f"sub_{j}"]
+            cj = group_cache[f"sub_{j}"]
+            kind, ffn = kinds[j], ffns[j]
+            normed = apply_norm(sp["norm1"], h, cfg)
+            if kind == "attn":
+                mix, cj = _attn_seq_with_cache(sp["mixer"], normed, positions, cfg, cj, window)
+            elif kind == "mamba":
+                mix, cj = ssm.mamba_forward(sp["mixer"], normed, cfg, return_state=True)
+            elif kind == "mlstm":
+                mix, cj = ssm.mlstm_forward(sp["mixer"], normed, cfg, return_state=True)
+            else:
+                mix, cj = ssm.slstm_forward(sp["mixer"], normed, cfg, return_state=True)
+            h = h + mix
+            if ffn != "none":
+                normed2 = apply_norm(sp["norm2"], h, cfg)
+                if ffn == "dense":
+                    y, _ = ffn_forward(sp["ffn"], normed2, cfg)
+                else:
+                    y, _ = moe_lib.moe_forward(sp["ffn"], normed2, cfg)
+                h = h + y
+            new_cache[f"sub_{j}"] = cj
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(group_fn, x, (stack, cache))
+    return x, new_cache
+
+
+# -- single-token decode -----------------------------------------------------------
+
+def stack_decode_step(
+    stack: Params,
+    x: jnp.ndarray,            # [B, 1, d]
+    position: jnp.ndarray,     # scalar int32 — position of this token
+    cache: Params,
+    cfg: ModelConfig,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Params]:
+    P = stack_period(cfg)
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    B = x.shape[0]
+    pos_arr = jnp.broadcast_to(position.astype(jnp.int32), (B, 1))
+
+    def group_fn(carry, inp):
+        h = carry
+        group_params, group_cache = inp
+        new_cache: Params = {}
+        for j in range(P):
+            sp = group_params[f"sub_{j}"]
+            cj = group_cache[f"sub_{j}"]
+            kind, ffn = kinds[j], ffns[j]
+            normed = apply_norm(sp["norm1"], h, cfg)
+            if kind == "attn":
+                from repro.models.layers import _project_qkv
+                q, k, v = _project_qkv(sp["mixer"], normed, normed, cfg)
+                q = rope(q, pos_arr, cfg.rope_theta)
+                k = rope(k, pos_arr, cfg.rope_theta)
+                if isinstance(cj, SWACache):
+                    cj = swa_write(cj, k, v, pos_arr)
+                    mix = attend_swa_cache(q, cj, pos_arr, window or cfg.sliding_window)
+                elif isinstance(cj, QuantKVCache):
+                    cj = quant_kv_write(cj, k, v, position)
+                    mix = attend_full_cache(q, cj, pos_arr)
+                else:
+                    cj = kv_write(cj, k, v, position)
+                    mix = attend_full_cache(q, cj, pos_arr)
+                mix = mix @ sp["mixer"]["wo"]
+            elif kind == "mamba":
+                y, cj = ssm.mamba_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
+                mix = y[:, None]
+            elif kind == "mlstm":
+                y, cj = ssm.mlstm_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
+                mix = y[:, None]
+            else:
+                y, cj = ssm.slstm_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
+                mix = y[:, None]
+            h = h + mix
+            if ffn != "none":
+                normed2 = apply_norm(sp["norm2"], h, cfg)
+                if ffn == "dense":
+                    if cfg.serve_sparse:
+                        y2 = sparse_ffn_decode(sp["ffn"], sp["ffn_pred"], normed2, cfg)
+                    else:
+                        y2, _ = ffn_forward(sp["ffn"], normed2, cfg)
+                else:
+                    y2, _ = moe_lib.moe_forward(sp["ffn"], normed2, cfg)
+                h = h + y2
+            new_cache[f"sub_{j}"] = cj
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(group_fn, x, (stack, cache))
+    return x, new_cache

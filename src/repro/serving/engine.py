@@ -1,0 +1,158 @@
+"""Serving engine: batched prefill + decode with the RIPPLE offload path.
+
+Two modes:
+  * resident  — all weights in device memory; jit'd prefill/decode only.
+  * offload   — the paper's scenario: FFN neuron bundles live in (simulated)
+    flash; per layer and per token the OffloadEngine predicts/reads/caches the
+    activated neurons, and the layer FFN is computed *from the bytes read*.
+    I/O latency per token is accounted by the UFS device model and reported
+    alongside compute.
+
+The offload path intentionally runs layer-by-layer on host (it models a
+phone-style single-device runtime); the distributed pjit path is the dense
+one exercised by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import EngineConfig, OffloadEngine
+from repro.core.placement import PlacementResult
+from repro.core.predictor import PredictorParams, predict_mask
+from repro.core.sparse_ffn import sparse_ffn_from_bundles
+from repro.core.storage import UFSDevice
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [T] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: List[int]
+    prefill_seconds: float
+    decode_seconds: float
+    io_seconds: float = 0.0
+
+
+def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+class ServingEngine:
+    """Continuous-batching-lite: fixed decode batch, greedy/temperature sampling."""
+
+    def __init__(self, model: Model, params: Any, max_len: int = 512,
+                 swa: bool = False):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.swa = swa
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+
+    def serve(self, requests: List[Request], seed: int = 0) -> List[Result]:
+        results = []
+        key = jax.random.PRNGKey(seed)
+        for group in _group_by_len(requests):
+            toks = np.stack([r.prompt for r in group])
+            B, T = toks.shape
+            cache = self.model.init_cache(B, self.max_len, swa=self.swa)
+            t0 = time.perf_counter()
+            logits, cache = self.model.prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, cache)
+            logits.block_until_ready()
+            t_prefill = time.perf_counter() - t0
+            max_new = max(r.max_new_tokens for r in group)
+            outs = [[] for _ in group]
+            cur = sample_token(logits[:, -1], group[0].temperature, key)
+            t0 = time.perf_counter()
+            for step in range(max_new):
+                for i in range(B):
+                    outs[i].append(int(cur[i]))
+                key = jax.random.fold_in(key, step)
+                logits, cache = self._decode(
+                    self.params, cur[:, None].astype(jnp.int32),
+                    jnp.int32(T + step), cache)
+                cur = sample_token(logits[:, 0], group[0].temperature, key)
+            jax.block_until_ready(cur)
+            t_decode = time.perf_counter() - t0
+            for r, o in zip(group, outs):
+                results.append(Result(uid=r.uid, tokens=o[: r.max_new_tokens],
+                                      prefill_seconds=t_prefill,
+                                      decode_seconds=t_decode))
+        return results
+
+
+def _group_by_len(requests: List[Request]) -> List[List[Request]]:
+    by_len: Dict[int, List[Request]] = {}
+    for r in requests:
+        by_len.setdefault(len(r.prompt), []).append(r)
+    return list(by_len.values())
+
+
+# ---------------------------------------------------------------------------
+# Offloaded serving: the paper's pipeline around a host-side layer loop
+# ---------------------------------------------------------------------------
+
+class OffloadedFFNRuntime:
+    """Per-layer RIPPLE offload state: engines, predictors, placements."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        bundles_per_layer: List[np.ndarray],       # [L][n_neurons, bundle_width]
+        placements: List[PlacementResult],
+        predictors: Optional[List[PredictorParams]] = None,
+        device: Optional[UFSDevice] = None,
+        engine_cfg: Optional[EngineConfig] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.engines = [
+            OffloadEngine(b, placement=pl, device=device, config=engine_cfg)
+            for b, pl in zip(bundles_per_layer, placements)
+        ]
+        self.predictors = predictors
+        self.n_mats = 3 if cfg.activation == "silu" else 2
+
+    def ffn_apply(self, layer: int, h: np.ndarray, oracle_mask: Optional[np.ndarray] = None):
+        """h: [B, d]. Returns (y [B, d], TokenStats).
+
+        Activated set = predictor(h) if trained, else oracle mask (exact ReLU
+        support, what the paper's predictor approximates with ~high recall).
+        """
+        if oracle_mask is None:
+            assert self.predictors is not None, "need predictor or oracle mask"
+            oracle_mask = np.asarray(predict_mask(self.predictors[layer], jnp.asarray(h)))
+        ids = np.nonzero(np.any(np.atleast_2d(oracle_mask), axis=0))[0]
+        data, stats = self.engines[layer].step(ids)
+        y = sparse_ffn_from_bundles(
+            jnp.asarray(h), jnp.asarray(data), self.cfg.d_model, self.n_mats,
+            activation=self.cfg.activation)
+        return np.asarray(y), stats
+
+    def io_summary(self) -> dict:
+        per_layer = [e.summary() for e in self.engines]
+        io_s = sum(s["io_seconds_per_token"] for s in per_layer)
+        return {
+            "io_seconds_per_token": io_s,
+            "mean_run_length": float(np.mean([s["mean_run_length"] for s in per_layer])),
+            "effective_bandwidth": float(np.mean([s["effective_bandwidth"] for s in per_layer])),
+            "cache_hit_rate": float(np.mean([s["cache_hit_rate"] for s in per_layer])),
+            "ops_per_token": sum(s["ops_per_token"] for s in per_layer),
+        }

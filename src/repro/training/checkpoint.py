@@ -1,0 +1,65 @@
+"""Checkpointing: flat .npz tensors + JSON metadata, sharding-aware.
+
+Arrays are flattened by pytree path ("stack/sub_0/mixer/wq"), gathered to host
+if sharded, and written atomically. Restore rebuilds the pytree onto the
+current device layout (caller re-applies shardings with device_put).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(path: str, state: Any, metadata: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(state)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    if metadata is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of `like` (a pytree of arrays/structs)."""
+    data = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathkeys, leaf in flat_like:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in pathkeys)
+        if key not in data:
+            raise KeyError(f"checkpoint missing tensor '{key}'")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for '{key}': ckpt {arr.shape} vs model {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    meta = {}
+    meta_path = path + ".json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves), meta

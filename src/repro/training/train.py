@@ -1,0 +1,89 @@
+"""Training step: loss -> grads -> AdamW, with optional gradient accumulation.
+
+`make_train_step(model, opt_cfg, microbatches)` returns a pure function
+(train_state, batch) -> (train_state, metrics) suitable for jax.jit/pjit.
+Gradient accumulation scans over microbatch slices of the global batch so the
+peak activation memory is that of one microbatch (needed for the biggest
+assigned archs at train_4k).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model: Model, key: jax.Array, opt_cfg: AdamWConfig) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params=params, opt=init_adamw(params, opt_cfg))
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int) -> Dict[str, jnp.ndarray]:
+    def split(a):
+        B = a.shape[0]
+        assert B % n == 0, f"batch {B} not divisible by microbatches {n}"
+        return a.reshape((n, B // n) + a.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, microbatches: int = 1):
+    loss_fn = model.loss_fn
+
+    def grads_of(params, mb):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        return loss, aux, grads
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        if microbatches == 1:
+            loss, aux, grads = grads_of(state.params, batch)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_fn(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, aux, grads = grads_of(state.params, mb)
+                grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), aux
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss_sum, grads), aux = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zero_grads), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            aux = jax.tree_util.tree_map(lambda a: a.mean(), aux)
+        new_params, new_opt, opt_metrics = adamw_update(grads, state.opt,
+                                                        state.params, opt_cfg)
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}, **opt_metrics}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def train_loop(model: Model, data_iter, steps: int, opt_cfg: AdamWConfig,
+               seed: int = 0, microbatches: int = 1, log_every: int = 10,
+               callback=None):
+    """Single-host training loop (examples/ and integration tests)."""
+    state = init_train_state(model, jax.random.PRNGKey(seed), opt_cfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, microbatches))
+    history = []
+    for step in range(steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            if callback:
+                callback(step, m)
+    return state, history

@@ -1,0 +1,69 @@
+"""Shared utilities: logging, timing, pytree helpers."""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import logging
+import time
+from typing import Any, Dict, Iterator
+
+import jax
+import numpy as np
+
+logger = logging.getLogger("repro")
+if not logger.handlers:
+    _h = logging.StreamHandler()
+    _h.setFormatter(logging.Formatter("[%(asctime)s %(levelname)s] %(message)s", "%H:%M:%S"))
+    logger.addHandler(_h)
+    logger.setLevel(logging.INFO)
+
+
+@contextlib.contextmanager
+def timed(name: str, sink: Dict[str, float] | None = None) -> Iterator[None]:
+    t0 = time.perf_counter()
+    yield
+    dt = time.perf_counter() - t0
+    if sink is not None:
+        sink[name] = sink.get(name, 0.0) + dt
+    logger.debug("%s took %.3fs", name, dt)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all leaves (works on arrays and ShapeDtypeStructs)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize for l in leaves)
+
+
+def tree_param_count(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def pretty_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def dataclass_to_json(obj: Any) -> str:
+    return json.dumps(dataclasses.asdict(obj), indent=2, default=str)
+
+
+def stable_hash(*ints: int) -> int:
+    """Deterministic 64-bit mix (splitmix64-style) for reproducible pseudo-randomness."""
+    h = 0x9E3779B97F4A7C15
+    for v in ints:
+        h ^= (v + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        h = (h * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        h ^= h >> 27
+        h = (h * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        h ^= h >> 31
+    return h
+
+
+def stable_uniform(*ints: int) -> float:
+    """Deterministic uniform in [0, 1) from integer keys."""
+    return stable_hash(*ints) / float(1 << 64)

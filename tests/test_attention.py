@@ -1,0 +1,93 @@
+"""Attention: flash == dense, masks, RoPE, GQA grouping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import flash_gqa_attend, gqa_attend, rope
+
+
+def _qkv(rng, B=2, T=48, S=48, H=4, KV=2, hd=16):
+    q = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    return q, k, v
+
+
+@given(causal=st.booleans(), window=st.sampled_from([0, 7, 16]),
+       qc=st.sampled_from([8, 17, 48]), kc=st.sampled_from([8, 13, 48]))
+@settings(max_examples=12, deadline=None)
+def test_flash_equals_dense(causal, window, qc, kc):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng)
+    pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48)).astype(jnp.int32)
+    a = gqa_attend(q, k, v, pos, pos, causal=causal, window=window)
+    b = flash_gqa_attend(q, k, v, pos, pos, causal=causal, window=window,
+                         q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_causal_mask_blocks_future(rng):
+    q, k, v = _qkv(rng)
+    pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48)).astype(jnp.int32)
+    out1 = gqa_attend(q, k, v, pos, pos, causal=True)
+    k2 = k.at[:, 30:].set(99.0)
+    v2 = v.at[:, 30:].set(99.0)
+    out2 = gqa_attend(q, k2, v2, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :30]), np.asarray(out2[:, :30]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_window_limits_reach(rng):
+    q, k, v = _qkv(rng)
+    pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48)).astype(jnp.int32)
+    out_w = gqa_attend(q, k, v, pos, pos, causal=True, window=8)
+    # perturbing keys older than the window must not change later outputs
+    k2 = k.at[:, :16].set(-50.0)
+    v2 = v.at[:, :16].set(50.0)
+    out_w2 = gqa_attend(q, k2, v2, pos, pos, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(out_w[:, 24:]), np.asarray(out_w2[:, 24:]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_heads_share_kv(rng):
+    """All query heads in a group see the same K/V: with identical q rows the
+    grouped heads produce identical outputs."""
+    B, T, H, KV, hd = 1, 8, 4, 2, 16
+    q1 = jnp.asarray(rng.standard_normal((B, T, 1, hd)), jnp.float32)
+    q = jnp.tile(q1, (1, 1, H, 1))
+    k = jnp.asarray(rng.standard_normal((B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    out = gqa_attend(q, k, v, pos, pos, causal=True).reshape(B, T, H, hd)
+    # heads 0,1 share kv head 0; heads 2,3 share kv head 1
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]), np.asarray(out[:, :, 1]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[:, :, 2]), np.asarray(out[:, :, 3]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_property(rng):
+    B, T, H, hd = 1, 16, 2, 32
+    x = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    y = rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = rope(q, jnp.full((1, 1), m, jnp.int32), 1e4)
+        kn = rope(k, jnp.full((1, 1), n, jnp.int32), 1e4)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(7, 0) == pytest.approx(dot_at(17, 10), rel=1e-4)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(42)

@@ -1,0 +1,67 @@
+"""Co-activation statistics (Eq. 1-3)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coactivation import CoActivationStats, expected_io_ops, stats_from_masks
+
+
+def test_counts_match_bruteforce():
+    rng = np.random.default_rng(0)
+    masks = rng.random((50, 20)) < 0.3
+    s = stats_from_masks(masks)
+    ref_counts = masks.sum(0)
+    ref_pairs = masks.astype(np.float32).T @ masks.astype(np.float32)
+    np.testing.assert_array_equal(s.counts, ref_counts)
+    np.testing.assert_allclose(s.pair_counts, ref_pairs, rtol=1e-6)
+
+
+def test_probabilities_normalised():
+    rng = np.random.default_rng(1)
+    s = stats_from_masks(rng.random((40, 16)) < 0.4)
+    assert abs(s.p_single().sum() - 1.0) < 1e-9
+    assert abs(s.p_pair().sum() - 1.0) < 1e-6
+
+
+def test_distance_definition():
+    rng = np.random.default_rng(2)
+    s = stats_from_masks(rng.random((30, 8)) < 0.5)
+    d = s.distance_matrix()
+    p = s.p_pair()
+    off = ~np.eye(8, dtype=bool)
+    np.testing.assert_allclose(d[off], 1.0 - p[off], rtol=1e-6)
+    assert np.all(np.isinf(np.diag(d)))
+
+
+def test_merge_equals_single_pass():
+    rng = np.random.default_rng(3)
+    m1 = rng.random((20, 12)) < 0.3
+    m2 = rng.random((25, 12)) < 0.3
+    merged = stats_from_masks(m1).merge(stats_from_masks(m2))
+    direct = stats_from_masks(np.concatenate([m1, m2]))
+    np.testing.assert_array_equal(merged.counts, direct.counts)
+    np.testing.assert_allclose(merged.pair_counts, direct.pair_counts, rtol=1e-6)
+    assert merged.n_tokens == direct.n_tokens
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_expected_io_ops_invariant_under_identity(seed):
+    rng = np.random.default_rng(seed)
+    masks = rng.random((10, 30)) < 0.3
+    ident = np.arange(30)
+    runs = expected_io_ops([masks], ident)
+    # each token's run count is between 1 and its activation count
+    per_tok = masks.sum(1)
+    active = per_tok[per_tok > 0]
+    if len(active):
+        assert runs <= active.mean() + 1e-9
+        assert runs >= 1.0 - 1e-9
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_expected_io_ops_permutation_of_full_mask_is_one(seed):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(16)
+    masks = np.ones((3, 16), bool)
+    assert expected_io_ops([masks], perm) == 1.0

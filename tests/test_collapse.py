@@ -1,0 +1,68 @@
+"""Access collapse (§5.1): run extraction + merging properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector,
+                                 collapse_extents, collapse_positions,
+                                 runs_from_positions)
+
+positions_st = st.lists(st.integers(0, 500), min_size=0, max_size=80)
+
+
+@given(positions_st)
+@settings(max_examples=50, deadline=None)
+def test_runs_cover_exactly_the_positions(pos):
+    pos = np.asarray(pos, np.int64)
+    runs = runs_from_positions(pos)
+    covered = sorted({p for s, l in runs for p in range(s, s + l)})
+    assert covered == sorted(set(pos.tolist()))
+    # maximality: runs cannot touch
+    for (s1, l1), (s2, l2) in zip(runs, runs[1:]):
+        assert s2 > s1 + l1  # gap of at least 1
+
+
+@given(positions_st, st.integers(0, 50))
+@settings(max_examples=50, deadline=None)
+def test_collapse_superset_and_fewer_ops(pos, thr):
+    pos = np.asarray(pos, np.int64)
+    base = runs_from_positions(pos)
+    merged = collapse_positions(pos, thr)
+    assert len(merged) <= len(base)
+    covered = {p for s, l in merged for p in range(s, s + l)}
+    assert covered >= set(pos.tolist())
+    # waste bound: every merge of gap g <= thr adds at most thr extra neurons
+    extra = len(covered) - len(set(pos.tolist()))
+    assert extra <= thr * max(len(base) - len(merged), 0)
+
+
+@given(positions_st, st.integers(0, 20), st.integers(21, 60))
+@settings(max_examples=30, deadline=None)
+def test_collapse_monotone_in_threshold(pos, t_small, t_big):
+    pos = np.asarray(pos, np.int64)
+    assert len(collapse_positions(pos, t_big)) <= len(collapse_positions(pos, t_small))
+
+
+def test_collapse_example_from_paper():
+    """Fig. 9: n1, n2, n4 activated; n3 speculatively read -> one op."""
+    pos = np.array([0, 1, 3])
+    assert collapse_positions(pos, 0) == [(0, 2), (3, 1)]
+    assert collapse_positions(pos, 1) == [(0, 4)]
+
+
+def test_adaptive_threshold_direction():
+    at = AdaptiveThreshold(initial=4)
+    at.update(op_cost=1.0, byte_cost=0.1)      # IOPS-bound -> raise
+    assert at.threshold > 4
+    at2 = AdaptiveThreshold(initial=16)
+    at2.update(op_cost=0.1, byte_cost=1.0)     # bandwidth-bound -> lower
+    assert at2.threshold < 16
+
+
+def test_bottleneck_detector_disables_collapse():
+    det = BottleneckDetector(device_bandwidth=1e9, saturation=0.9, period=4)
+    for _ in range(4):
+        det.record(nbytes=0.99e9, seconds=1.0)   # ~99% utilisation
+    assert not det.collapse_enabled
+    for _ in range(4):
+        det.record(nbytes=0.2e9, seconds=1.0)
+    assert det.collapse_enabled

@@ -1,0 +1,89 @@
+"""Contract tests: the assigned architecture configs match the assignment."""
+import pytest
+
+from repro.configs import ASSIGNED_CONFIGS, INPUT_SHAPES, get_config
+
+EXPECTED = {
+    # arch: (L, d_model, H, KV, d_ff, vocab)
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+}
+
+MOE = {
+    "granite-moe-1b-a400m": (32, 8),
+    "granite-moe-3b-a800m": (40, 8),
+    "jamba-1.5-large-398b": (16, 2),
+}
+
+
+def test_all_ten_assigned():
+    assert set(ASSIGNED_CONFIGS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_dims(arch):
+    cfg = get_config(arch)
+    L, d, H, KV, ff, V = EXPECTED[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff and cfg.vocab_size == V
+    assert cfg.source  # every config cites its source
+
+
+@pytest.mark.parametrize("arch", sorted(MOE))
+def test_moe_dims(arch):
+    cfg = get_config(arch)
+    e, k = MOE[arch]
+    assert cfg.moe.n_experts == e and cfg.moe.top_k == k
+
+
+def test_family_specifics():
+    assert get_config("qwen2-7b").qkv_bias                       # QKV bias
+    assert get_config("granite-34b").n_kv_heads == 1             # MQA
+    assert get_config("jamba-1.5-large-398b").attn_period == 8   # 1:7 interleave
+    kinds = get_config("jamba-1.5-large-398b").layer_kinds()
+    assert kinds.count("attn") * 7 == kinds.count("mamba")
+    xl = get_config("xlstm-125m").layer_kinds()
+    assert set(xl) == {"mlstm", "slstm"}
+    sm = get_config("seamless-m4t-medium")
+    assert sm.is_encdec and sm.n_enc_layers == 12
+    vl = get_config("internvl2-26b")
+    assert vl.d_frontend == 3200 and vl.n_prefix_tokens == 256
+
+
+def test_input_shapes_exact():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_param_counts_in_expected_band(arch):
+    """Sanity: param_count within ~2.5x of the name-plate size."""
+    nameplate = {
+        "internlm2-20b": 20e9, "internvl2-26b": 20e9, "granite-34b": 34e9,
+        "granite-3-2b": 2.5e9, "qwen2-7b": 7.6e9, "xlstm-125m": 125e6,
+        "granite-moe-1b-a400m": 1.3e9, "granite-moe-3b-a800m": 3.3e9,
+        "jamba-1.5-large-398b": 398e9, "seamless-m4t-medium": 1.2e9,
+    }[arch]
+    n = get_config(arch).param_count()
+    assert nameplate / 2.5 < n < nameplate * 2.5, (arch, n, nameplate)
+
+
+def test_moe_active_fraction():
+    cfg = get_config("granite-moe-1b-a400m")
+    act, tot = cfg.active_param_count(), cfg.param_count()
+    assert act < tot
+    assert act / tot < 0.6   # 8 of 32 experts active

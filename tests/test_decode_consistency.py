@@ -1,0 +1,68 @@
+"""Decode path exactness: prefill + step-by-step decode must reproduce the
+teacher-forced forward logits for every architecture family (MoE with a
+dropless capacity factor, since capacity dropping is batch-dependent)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+from conftest import tiny_batch
+
+CASES = ["internlm2-20b", "qwen2-7b", "jamba-1.5-large-398b", "xlstm-125m",
+         "seamless-m4t-medium", "granite-moe-1b-a400m", "internvl2-26b"]
+
+
+def _dropless(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k + 0.1))
+
+
+@pytest.mark.parametrize("arch", CASES)
+def test_decode_matches_forward(arch, rng):
+    cfg = _dropless(get_config(arch, reduced=True))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    B, S, P = 2, 20, 16
+    batch = tiny_batch(cfg, rng, B=B, S=S)
+    full = model.forward(params, batch)["logits"]
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, :P]
+    # VLM prepends n_prefix_tokens image tokens: the cache must cover them too
+    cache = model.init_cache(B, S + cfg.n_prefix_tokens + 8)
+    lg, cache = model.prefill(params, pb, cache)
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] - full[:, P - 1])))]
+    # decode positions are GLOBAL: VLM text token i sits at n_prefix + i
+    off = cfg.n_prefix_tokens if cfg.family == "vlm" else 0
+    for i in range(P, S):
+        lg, cache = model.decode_step(params, batch["tokens"][:, i:i + 1],
+                                      jnp.int32(off + i), cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))))
+    scale = max(float(jnp.max(jnp.abs(full))), 1.0)
+    assert max(errs) < 2e-3 * scale, (arch, errs)
+
+
+def test_swa_decode_matches_windowed_forward(rng):
+    """SWA ring-buffer decode == teacher-forced forward with the same window."""
+    cfg = get_config("qwen2-7b", reduced=True, sliding_window=8)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    B, S, P, W = 2, 24, 12, 8
+    batch = tiny_batch(cfg, rng, B=B, S=S)
+    full = model.forward(params, batch, window=W)["logits"]
+    cache = model.init_cache(B, S, swa=True)
+    pb = {"tokens": batch["tokens"][:, :P]}
+    lg, cache = model.prefill(params, pb, cache, window=W)
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] - full[:, P - 1])))]
+    for i in range(P, S):
+        lg, cache = model.decode_step(params, batch["tokens"][:, i:i + 1],
+                                      jnp.int32(i), cache, window=W)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))))
+    scale = max(float(jnp.max(jnp.abs(full))), 1.0)
+    assert max(errs) < 2e-3 * scale, errs

@@ -1,0 +1,95 @@
+"""OffloadEngine end-to-end + the paper's headline orderings."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (EngineConfig, FFNWeights, OffloadEngine, dense_ffn,
+                        identity_placement, make_bundles, search_placement,
+                        sparse_ffn_from_bundles, stats_from_masks,
+                        SyntheticTraceConfig, synthetic_masks)
+
+
+def _setup(n=512, seed=0, tokens=300):
+    # cluster STRUCTURE is a model property shared by calibration and serving;
+    # only token sampling differs (paper Fig. 15)
+    cfg = SyntheticTraceConfig(n_neurons=n, n_clusters=16, seed=seed,
+                               structure_seed=seed)
+    calib = synthetic_masks(cfg, tokens)
+    serve = synthetic_masks(
+        SyntheticTraceConfig(n_neurons=n, n_clusters=16, seed=seed + 99,
+                             structure_seed=seed), 150)
+    placement = search_placement(stats_from_masks(calib).distance_matrix(), mode="exact")
+    rng = np.random.default_rng(seed)
+    bundles = rng.standard_normal((n, 64)).astype(np.float32)
+    return calib, serve, placement, bundles
+
+
+def test_ripple_beats_naive_io_time():
+    calib, serve, placement, bundles = _setup()
+    ripple = OffloadEngine(bundles, placement=placement)
+    naive = OffloadEngine(bundles, placement=identity_placement(len(bundles)),
+                          config=EngineConfig(collapse=False, linking_aligned_cache=False))
+    ripple.run_trace(serve)
+    naive.run_trace(serve)
+    s_r, s_n = ripple.summary(), naive.summary()
+    assert s_r["io_seconds_per_token"] < 0.5 * s_n["io_seconds_per_token"]
+    assert s_r["mean_run_length"] > 1.5 * s_n["mean_run_length"]
+    assert s_r["effective_bandwidth"] > s_n["effective_bandwidth"]
+
+
+def test_engine_payload_matches_source_rows():
+    _, serve, placement, bundles = _setup(seed=1)
+    eng = OffloadEngine(bundles, placement=placement)
+    ids = np.nonzero(serve[0])[0]
+    data, _ = eng.step(ids)
+    np.testing.assert_array_equal(data, bundles[np.unique(ids)])
+
+
+def test_engine_stats_accounting():
+    _, serve, placement, bundles = _setup(seed=2)
+    eng = OffloadEngine(bundles, placement=placement, config=EngineConfig(cache_ratio=0.2))
+    stats = eng.run_trace(serve[:50])
+    for ts in stats:
+        assert ts.n_hits + ts.n_misses == ts.n_activated
+        assert ts.io.bytes_read >= ts.io.bytes_useful
+    # cache warms up: later tokens hit more
+    early = np.mean([t.n_hits / max(t.n_activated, 1) for t in stats[:10]])
+    late = np.mean([t.n_hits / max(t.n_activated, 1) for t in stats[-10:]])
+    assert late >= early
+
+
+def test_sparse_ffn_from_bundles_equals_dense_relu():
+    """ReLU sparsity is exact: FFN over the active support == dense FFN."""
+    rng = np.random.default_rng(3)
+    d, n = 32, 128
+    w = FFNWeights(
+        w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.3, jnp.float32),
+        w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.3, jnp.float32),
+    )
+    x = jnp.asarray(rng.standard_normal((4, d)), jnp.float32)
+    ref = dense_ffn(x, w, activation="relu")
+    pre = np.asarray(x @ w.w_up.T)
+    active = np.nonzero(np.any(pre > 0, axis=0))[0]
+    bundles = np.asarray(make_bundles(w))[active]
+    out = sparse_ffn_from_bundles(x, jnp.asarray(bundles), d, n_mats=2, activation="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_offline_and_online_stages_compose():
+    """Paper Fig. 11: offline-only and online-only each help; combined best."""
+    calib, serve, placement, bundles = _setup(seed=4)
+    n = len(bundles)
+
+    def run(pl, collapse, link_cache):
+        eng = OffloadEngine(bundles, placement=pl, config=EngineConfig(
+            collapse=collapse, linking_aligned_cache=link_cache))
+        eng.run_trace(serve)
+        return eng.summary()["io_seconds_per_token"]
+
+    base = run(identity_placement(n), False, False)
+    offline_only = run(placement, False, False)
+    online_only = run(identity_placement(n), True, True)
+    both = run(placement, True, True)
+    assert offline_only < base
+    assert online_only < base
+    assert both < offline_only
+    assert both < online_only

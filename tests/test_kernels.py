@@ -1,0 +1,117 @@
+"""Pallas kernel sweeps: shapes x dtypes vs ref.py oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize("D", [128, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_ffn_shape_dtype_sweep(B, D, dtype):
+    rng = np.random.default_rng(B * D)
+    N, seg = 512, 128
+    x = jnp.asarray(rng.standard_normal((B, D)) * 0.5, dtype)
+    wu = jnp.asarray(rng.standard_normal((N, D)) * 0.1, dtype)
+    wd = jnp.asarray(rng.standard_normal((N, D)) * 0.1, dtype)
+    ids = jnp.asarray([1, 2, 3], jnp.int32)
+    y = ops.sparse_ffn_segments(x, wu, wd, ids, seg_size=seg, activation="relu")
+    yr = ref.sparse_ffn_segments_ref(x, wu, wd, np.array([1, 2, 3]),
+                                     seg_size=seg, activation="relu")
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("activation,gated", [("relu", False), ("relu2", False),
+                                              ("gelu", False), ("silu", True)])
+def test_sparse_ffn_activations(activation, gated):
+    rng = np.random.default_rng(7)
+    B, D, N, seg = 4, 128, 512, 128
+    x = jnp.asarray(rng.standard_normal((B, D)) * 0.5, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32) if gated else None
+    ids = jnp.asarray([0, 2], jnp.int32)
+    y = ops.sparse_ffn_segments(x, wu, wd, ids, wg, seg_size=seg, activation=activation)
+    yr = ref.sparse_ffn_segments_ref(x, wu, wd, np.array([0, 2]), wg,
+                                     seg_size=seg, activation=activation)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+def test_sparse_ffn_padding_ids_contribute_zero():
+    rng = np.random.default_rng(8)
+    B, D, N, seg = 2, 128, 256, 128
+    x = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32)
+    y1 = ops.sparse_ffn_segments(x, wu, wd, jnp.asarray([1], jnp.int32), seg_size=seg)
+    y2 = ops.sparse_ffn_segments(x, wu, wd, jnp.asarray([1, -1, -1, -1], jnp.int32), seg_size=seg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6, atol=1e-6)
+
+
+def test_sparse_ffn_equals_full_dense_when_all_segments():
+    """All segments selected == dense FFN (the paper's exactness property)."""
+    rng = np.random.default_rng(9)
+    B, D, N, seg = 4, 128, 512, 128
+    x = jnp.asarray(rng.standard_normal((B, D)) * 0.5, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((N, D)) * 0.1, jnp.float32)
+    ids = jnp.arange(N // seg, dtype=jnp.int32)
+    y = ops.sparse_ffn_segments(x, wu, wd, ids, seg_size=seg, activation="relu")
+    dense = jnp.maximum(x @ wu.T, 0) @ wd
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,N", [(64, 128), (100, 300), (256, 256), (17, 50)])
+def test_coact_sweep(T, N):
+    rng = np.random.default_rng(T + N)
+    m = (rng.random((T, N)) < 0.25)
+    A = ops.coact_accumulate(jnp.asarray(m), tile_n=128, tile_t=64)
+    Ar = ref.coact_accumulate_ref(jnp.asarray(m))
+    np.testing.assert_array_equal(np.asarray(A), np.asarray(Ar))
+
+
+def test_coact_symmetry_and_diagonal():
+    rng = np.random.default_rng(11)
+    m = (rng.random((40, 96)) < 0.3)
+    A = np.asarray(ops.coact_accumulate(jnp.asarray(m), tile_n=32, tile_t=32))
+    np.testing.assert_array_equal(A, A.T)
+    np.testing.assert_array_equal(np.diag(A), m.sum(0))
+
+
+@pytest.mark.parametrize("B,H,KV,hd,W", [(1, 4, 1, 64, 512), (2, 8, 2, 64, 1024),
+                                         (3, 6, 6, 32, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_decode_sweep(B, H, KV, hd, W, dtype):
+    rng = np.random.default_rng(B * W)
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, W, KV, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, W, KV, hd)), dtype)
+    cur = W + W // 3
+    pos = np.full((B, W), -1, np.int32)
+    for p in range(max(0, cur - W + 1), cur + 1):
+        pos[:, p % W] = p
+    pos = jnp.asarray(pos)
+    win = W // 2
+    out = ops.swa_decode_attention(q, k, v, pos, jnp.int32(cur), window=win, block_w=128)
+    outr = ref.swa_decode_ref(q.reshape(B, KV, H // KV, hd), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), pos, cur, window=win
+                              ).reshape(B, H, hd)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(outr, np.float32),
+                               **_tol(dtype))
+
+
+def test_swa_decode_empty_cache_returns_zeros():
+    B, H, KV, hd, W = 1, 2, 1, 32, 128
+    q = jnp.ones((B, H, hd), jnp.float32)
+    k = jnp.ones((B, W, KV, hd), jnp.float32)
+    v = jnp.ones((B, W, KV, hd), jnp.float32)
+    pos = jnp.full((B, W), -1, jnp.int32)
+    out = ops.swa_decode_attention(q, k, v, pos, jnp.int32(0), window=64, block_w=64)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)

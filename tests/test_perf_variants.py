@@ -1,0 +1,115 @@
+"""§Perf variants: triangular flash, sparse serve FFN, chunked CE — exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.layers import (ffn_forward, flash_gqa_attend,
+                                 flash_gqa_attend_triangular, init_ffn,
+                                 init_ffn_predictor, sparse_ffn_decode)
+
+from conftest import tiny_batch
+
+
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_triangular_flash_equals_masked_flash(window, chunk):
+    rng = np.random.default_rng(chunk + window)
+    B, T, H, KV, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    a = flash_gqa_attend(q, k, v, pos, pos, causal=True, window=window,
+                         q_chunk=chunk, k_chunk=chunk)
+    b = flash_gqa_attend_triangular(q, k, v, pos, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_ffn_decode_full_fraction_is_dense():
+    rng = np.random.default_rng(0)
+    cfg = get_config("internlm2-20b", reduced=True, d_model=64, d_ff=512,
+                     serve_sparse=True, sparse_seg=64, sparse_frac=1.0)
+    p = init_ffn(jax.random.PRNGKey(0), cfg)
+    pred = init_ffn_predictor(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(rng.standard_normal((3, 1, 64)), jnp.float32)
+    dense, _ = ffn_forward(p, x, cfg)
+    sparse = sparse_ffn_decode(p, pred, x, cfg)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(sparse),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_serve_decode_end_to_end(rng):
+    """Full decode step with serve_sparse at frac=1.0 == dense decode step."""
+    cfg_d = get_config("qwen2-7b", reduced=True, d_model=128, d_ff=512, vocab_size=128)
+    cfg_s = dataclasses.replace(cfg_d, serve_sparse=True, sparse_seg=64,
+                                sparse_frac=1.0)
+    md, ms = build_model(cfg_d), build_model(cfg_s)
+    # sparse params = dense params + predictors; copy the shared subtree
+    ps = ms.init_params(jax.random.PRNGKey(5))
+    pd = jax.tree_util.tree_map(lambda x: x, ps)
+    for j in list(pd["stack"]):
+        pd["stack"][j] = {k: v for k, v in pd["stack"][j].items() if k != "ffn_pred"}
+    batch = tiny_batch(cfg_d, rng, B=2, S=8)
+    cd = md.init_cache(2, 16)
+    cs = ms.init_cache(2, 16)
+    ld, cd = md.prefill(pd, batch, cd)
+    ls, cs = ms.prefill(ps, batch, cs)           # prefill is dense in both
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ls), rtol=1e-5, atol=1e-5)
+    tok = jnp.argmax(ld[:, -1], -1)[:, None].astype(jnp.int32)
+    od, _ = md.decode_step(pd, tok, jnp.int32(8), cd)
+    os_, _ = ms.decode_step(ps, tok, jnp.int32(8), cs)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(os_), rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_ce_matches_naive(rng):
+    cfg = get_config("granite-3-2b", reduced=True, vocab_size=128, n_layers=2)
+    m = build_model(cfg)
+    p = m.init_params(jax.random.PRNGKey(0))
+    # sequence longer than one CE chunk boundary (pad path exercised)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 128, (2, 37)), jnp.int32)}
+    loss, _ = m.loss_fn(p, batch)
+    lg = np.asarray(m.forward(p, batch)["logits"], np.float64)[:, :-1]
+    tg = np.asarray(batch["tokens"])[:, 1:]
+    logz = np.log(np.exp(lg - lg.max(-1, keepdims=True)).sum(-1)) + lg.max(-1)
+    ce = (logz - np.take_along_axis(lg, tg[..., None], -1)[..., 0]).mean()
+    assert abs(float(loss) - ce) < 1e-4
+
+
+def test_chunked_ce_respects_loss_mask(rng):
+    cfg = get_config("granite-3-2b", reduced=True, vocab_size=64, n_layers=2)
+    m = build_model(cfg)
+    p = m.init_params(jax.random.PRNGKey(1))
+    toks = jnp.asarray(rng.integers(0, 64, (2, 20)), jnp.int32)
+    mask = jnp.zeros((2, 20)).at[:, :10].set(1.0)
+    l_masked, _ = m.loss_fn(p, {"tokens": toks, "loss_mask": mask})
+    l_full, _ = m.loss_fn(p, {"tokens": toks})
+    assert not np.isclose(float(l_masked), float(l_full))
+    # causality: masking to the first 10 positions == scoring the 10-token prefix
+    l_prefix, _ = m.loss_fn(p, {"tokens": toks[:, :10]})
+    assert abs(float(l_masked) - float(l_prefix)) < 1e-4
+
+
+def test_int8_kv_decode_close_to_dense(rng):
+    import dataclasses
+    cfg_d = get_config("qwen2-7b", reduced=True, d_model=128, vocab_size=128)
+    cfg_q = dataclasses.replace(cfg_d, kv_quant=True)
+    md, mq = build_model(cfg_d), build_model(cfg_q)
+    p = md.init_params(jax.random.PRNGKey(0))
+    batch = tiny_batch(cfg_d, rng, B=2, S=12)
+    cd, cq = md.init_cache(2, 24), mq.init_cache(2, 24)
+    ld, cd = md.prefill(p, batch, cd)
+    lq, cq = mq.prefill(p, batch, cq)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lq), atol=1e-5)
+    tok = jnp.argmax(ld[:, -1], -1)[:, None].astype(jnp.int32)
+    od, _ = md.decode_step(p, tok, jnp.int32(12), cd)
+    oq, _ = mq.decode_step(p, tok, jnp.int32(12), cq)
+    scale = max(float(jnp.max(jnp.abs(od))), 1.0)
+    assert float(jnp.max(jnp.abs(od - oq))) < 0.05 * scale
+    # the cache really is int8
+    leaves = jax.tree_util.tree_leaves(cq)
+    assert any(l.dtype == jnp.int8 for l in leaves)

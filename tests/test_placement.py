@@ -1,0 +1,91 @@
+"""Offline placement search (Algorithm 1): unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coactivation import expected_io_ops, stats_from_masks
+from repro.core.placement import (frequency_placement, identity_placement,
+                                  path_length, search_placement)
+from repro.core.trace import SyntheticTraceConfig, synthetic_masks
+
+
+def _random_dist(rng, n):
+    d = rng.random((n, n)).astype(np.float64)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, np.inf)
+    return d
+
+
+@given(n=st.integers(1, 40), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_placement_is_permutation(n, seed):
+    rng = np.random.default_rng(seed)
+    res = search_placement(_random_dist(rng, n), mode="exact")
+    assert sorted(res.placement.tolist()) == list(range(n))
+    # inverse really is the inverse
+    assert np.array_equal(res.placement[res.inverse], np.arange(n))
+
+
+@given(n=st.integers(4, 30), seed=st.integers(0, 50), k=st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_topk_mode_is_permutation(n, seed, k):
+    rng = np.random.default_rng(seed)
+    res = search_placement(_random_dist(rng, n), mode="topk", topk=k)
+    assert sorted(res.placement.tolist()) == list(range(n))
+
+
+def test_greedy_recovers_planted_clusters():
+    """Neurons from the same planted cluster should end up adjacent."""
+    cfg = SyntheticTraceConfig(n_neurons=256, n_clusters=8, noise_p=0.0,
+                               member_p=1.0, clusters_per_token=1, seed=3)
+    masks = synthetic_masks(cfg, 400)
+    stats = stats_from_masks(masks)
+    res = search_placement(stats.distance_matrix(), mode="exact")
+    io_ident = expected_io_ops([masks], identity_placement(256).placement)
+    io_ripple = expected_io_ops([masks], res.placement)
+    # perfect clusters, no noise: each token needs exactly 1 run after placement
+    assert io_ripple <= 1.5
+    assert io_ident > 10 * io_ripple
+
+
+def test_path_length_not_worse_than_identity():
+    rng = np.random.default_rng(5)
+    cfg = SyntheticTraceConfig(n_neurons=128, n_clusters=8, seed=5)
+    masks = synthetic_masks(cfg, 300)
+    dist = stats_from_masks(masks).distance_matrix()
+    dist_f = np.where(np.isinf(dist), 1.0, dist)
+    res = search_placement(dist, mode="exact")
+    assert path_length(dist_f, res.placement) <= path_length(
+        dist_f, identity_placement(128).placement) + 1e-9
+
+
+def test_edges_used_forms_single_path():
+    rng = np.random.default_rng(7)
+    res = search_placement(_random_dist(rng, 50), mode="exact")
+    assert res.edges_used == 49
+
+
+def test_frequency_placement_sorted():
+    rates = np.array([0.1, 0.9, 0.5, 0.7])
+    res = frequency_placement(rates)
+    assert res.placement.tolist() == [1, 3, 2, 0]
+
+
+def test_degenerate_sizes():
+    for n in (0, 1, 2):
+        d = np.ones((n, n))
+        np.fill_diagonal(d, np.inf)
+        res = search_placement(d, mode="exact")
+        assert len(res.placement) == n
+
+
+def test_topk_matches_exact_on_clustered_data():
+    """With strong cluster structure the topk restriction changes nothing."""
+    cfg = SyntheticTraceConfig(n_neurons=128, n_clusters=16, noise_p=0.0, seed=11)
+    masks = synthetic_masks(cfg, 500)
+    dist = stats_from_masks(masks).distance_matrix()
+    exact = search_placement(dist, mode="exact")
+    topk = search_placement(dist, mode="topk", topk=32)
+    io_e = expected_io_ops([masks], exact.placement)
+    io_t = expected_io_ops([masks], topk.placement)
+    assert io_t <= io_e * 1.25

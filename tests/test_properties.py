@@ -1,0 +1,74 @@
+"""Cross-cutting hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import FIFOCache, LRUCache, S3FIFOCache
+from repro.core.expert_placement import (expected_reads_per_token,
+                                         search_expert_placement,
+                                         synthetic_routing)
+from repro.core.placement import identity_placement
+from repro.models.kvcache import _quantize
+
+
+@given(seed=st.integers(0, 200), scale=st.floats(0.01, 100.0))
+@settings(max_examples=40, deadline=None)
+def test_int8_quantization_error_bound(seed, scale):
+    """Symmetric int8: |x - deq| <= scale_row/2 = max|row|/254 per row."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 3, 2, 8)) * scale, jnp.float32)
+    q, s = _quantize(x)
+    deq = q.astype(jnp.float32) * s[..., None]
+    err = np.abs(np.asarray(x) - np.asarray(deq))
+    bound = np.asarray(s)[..., None] / 2 + 1e-7
+    assert np.all(err <= bound)
+    assert np.asarray(q).dtype == np.int8
+    assert np.all(np.abs(np.asarray(q)) <= 127)
+
+
+@given(capacity=st.integers(1, 64), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_caches_never_exceed_capacity(capacity, seed):
+    rng = np.random.default_rng(seed)
+    caches = [S3FIFOCache(capacity), LRUCache(capacity), FIFOCache(capacity)]
+    for _ in range(300):
+        key = int(rng.integers(0, 100))
+        for c in caches:
+            if not c.access(key):
+                c.insert(key)
+            assert len(c) <= capacity
+    for c in caches:
+        stats = c.stats
+        assert stats.hits + stats.misses == 300
+
+
+@given(n_experts=st.sampled_from([8, 16, 32]), top_k=st.integers(1, 4),
+       seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_expert_placement_never_hurts_vs_worst_case(n_experts, top_k, seed):
+    sel = synthetic_routing(200, n_experts, top_k, seed=seed)
+    pl = search_expert_placement(sel, n_experts)
+    assert sorted(pl.placement.tolist()) == list(range(n_experts))
+    # reads bounded by top_k (each expert its own read at worst)
+    reads = expected_reads_per_token(sel, n_experts, pl)
+    assert 1.0 - 1e-9 <= reads <= top_k + 1e-9
+    # the search never does worse than identity on its own calibration trace
+    r_ident = expected_reads_per_token(sel, n_experts, identity_placement(n_experts))
+    assert reads <= r_ident + 0.5
+
+
+@given(seed=st.integers(0, 100), thr=st.integers(0, 20))
+@settings(max_examples=30, deadline=None)
+def test_engine_bytes_accounting_consistent(seed, thr):
+    """read bytes >= useful bytes; ops >= 1; collapse superset invariant."""
+    from repro.core import EngineConfig, OffloadEngine
+    rng = np.random.default_rng(seed)
+    bundles = np.zeros((128, 16), np.float32)
+    eng = OffloadEngine(bundles, config=EngineConfig(
+        cache_ratio=0.0, initial_collapse_threshold=thr))
+    for _ in range(5):
+        ids = rng.choice(128, size=rng.integers(1, 40), replace=False)
+        _, ts = eng.step(ids)
+        assert ts.io.bytes_read >= ts.io.bytes_useful > 0
+        assert ts.io.n_ops >= 1
+        assert ts.n_hits + ts.n_misses == ts.n_activated

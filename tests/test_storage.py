@@ -1,0 +1,86 @@
+"""UFS device model + placement-aware neuron store."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import identity_placement, search_placement
+from repro.core.storage import UFS31, UFS40, ManagedReader, NeuronStore, UFSDevice
+
+
+def test_bandwidth_curve_iops_bound_then_flat():
+    """Paper Fig. 4: linear growth until ~24KB, then saturation."""
+    dev = UFSDevice(**UFS40)
+    bw_small = dev.bandwidth_at_io_size(4 * 1024)
+    bw_mid = dev.bandwidth_at_io_size(16 * 1024)
+    bw_cross = dev.bandwidth_at_io_size(dev.crossover_bytes())
+    bw_large = dev.bandwidth_at_io_size(1024 * 1024)
+    assert bw_small < bw_mid < bw_cross < bw_large
+    # near-linear in the IOPS-bound regime
+    assert bw_mid / bw_small == pytest.approx(4.0, rel=0.35)
+    # saturates near bandwidth_max
+    assert bw_large > 0.9 * dev.bandwidth_max
+    assert dev.crossover_bytes() == pytest.approx(24e3, rel=0.05)
+
+
+def test_read_time_additive():
+    dev = UFSDevice()
+    t1 = dev.read_time(1, 4096)
+    t2 = dev.read_time(2, 8192)
+    assert t2 - dev.base_latency == pytest.approx(2 * (t1 - dev.base_latency), rel=1e-6)
+    assert dev.read_time(0, 0) == 0.0
+
+
+@given(seed=st.integers(0, 50), thr=st.integers(0, 8))
+@settings(max_examples=20, deadline=None)
+def test_store_payload_independent_of_layout_and_collapse(seed, thr):
+    """The bytes returned must always be the requested neurons, in order."""
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((64, 8)).astype(np.float32)
+    d = rng.random((64, 64)); d = (d + d.T) / 2; np.fill_diagonal(d, np.inf)
+    placement = search_placement(d, mode="exact")
+    store = NeuronStore(data, placement)
+    ids = rng.choice(64, size=rng.integers(1, 20), replace=False)
+    payload, stats = store.read(ids, collapse_threshold=thr)
+    np.testing.assert_array_equal(payload, data[ids])
+    assert stats.n_ops >= 1
+    assert stats.bytes_read >= stats.bytes_useful
+
+
+def test_fewer_ops_with_good_placement():
+    rng = np.random.default_rng(1)
+    data = np.zeros((32, 4), np.float32)
+    store = NeuronStore(data, identity_placement(32))
+    scattered = np.arange(0, 32, 2)          # every other neuron
+    _, s_scatter = store.read(scattered)
+    _, s_contig = store.read(np.arange(16))  # contiguous block
+    assert s_contig.n_ops == 1
+    assert s_scatter.n_ops == 16
+    assert s_scatter.seconds > s_contig.seconds
+
+
+def test_reads_per_bundle_multiplier():
+    data = np.zeros((16, 4), np.float32)
+    bundled = NeuronStore(data, reads_per_bundle=1)
+    split = NeuronStore(data, reads_per_bundle=3)   # llama.cpp separate matrices
+    ids = np.array([0, 5, 9])
+    _, s1 = bundled.read(ids)
+    _, s3 = split.read(ids)
+    assert s3.n_ops == 3 * s1.n_ops
+    assert s3.bytes_read == 3 * s1.bytes_read
+
+
+def test_managed_reader_adapts():
+    rng = np.random.default_rng(2)
+    data = np.zeros((1024, 256), np.float32)   # 1KB bundles -> IOPS-bound
+    reader = ManagedReader(NeuronStore(data), initial_threshold=1)
+    for _ in range(30):
+        ids = np.sort(rng.choice(1024, 128, replace=False))
+        reader.read(ids)
+    # device is IOPS-bound at 1KB reads -> threshold must have grown
+    assert reader.threshold.threshold > 1
+    assert reader.total.n_requests == 30
+
+
+def test_ufs31_slower_than_ufs40():
+    d40, d31 = UFSDevice(**UFS40), UFSDevice(**UFS31)
+    assert d31.read_time(100, 10 << 20) > d40.read_time(100, 10 << 20)
