@@ -3,19 +3,23 @@
 Offline stage: `coactivation` (pattern extraction) -> `placement` (greedy
 Hamiltonian-path search). Online stage: `collapse` (access collapse),
 `cache` (linking-aligned S3-FIFO), `storage` (UFS device model + neuron store),
-`predictor` (activation prediction), `engine` (the serving pipeline).
+`predictor` (activation prediction), `engine` (the batched serving pipeline),
+`pipeline` (double-buffered I/O–compute overlap model).
 """
 from repro.core.cache import (CacheStats, FIFOCache, LRUCache,
                               LinkingAlignedCache, S3FIFOCache)
 from repro.core.coactivation import CoActivationStats, expected_io_ops, stats_from_masks
 from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector,
                                  collapse_extents, collapse_positions, runs_from_positions)
-from repro.core.engine import EngineConfig, OffloadEngine, TokenStats
+from repro.core.engine import (BatchStepResult, EngineConfig, OffloadEngine,
+                               RequestStats, TokenStats)
 from repro.core.expert_placement import (expected_reads_per_token,
                                          expert_coactivation,
                                          hierarchical_moe_placement,
                                          search_expert_placement,
                                          synthetic_routing)
+from repro.core.pipeline import (IOScheduler, Stage, TokenTiming,
+                                 overlapped_latency, serial_latency)
 from repro.core.placement import (PlacementResult, frequency_placement,
                                   identity_placement, path_length, search_placement)
 from repro.core.predictor import (PredictorConfig, PredictorParams, init_predictor,

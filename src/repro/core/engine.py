@@ -4,6 +4,14 @@ Per token: predict activated neurons -> probe DRAM cache -> plan reads over the
 flash layout (with access collapse) -> simulated-UFS read -> admit into cache
 (linking-aligned) -> compute the sparse FFN from the bundles actually read.
 
+Two serving granularities:
+  * `step(ids)`       — one activated set (one token / one request);
+  * `step_batch(ids_per_request)` — one decode *batch*: the activated sets of
+    all requests are merged, the cache is probed once, and all misses are
+    served by a single collapsed extent read (shared neurons are read once —
+    the batching win). Per-request hit/miss/I/O attribution comes back as
+    `RequestStats` so the serving engine can bill each request.
+
 The engine is deliberately deterministic and fully instrumented: every paper
 figure (latency, IOPS, effective bandwidth, run lengths, cache behaviour) is
 derived from `TokenStats` streams produced here.
@@ -17,7 +25,7 @@ import numpy as np
 
 from repro.core.cache import LinkingAlignedCache
 from repro.core.collapse import runs_from_positions
-from repro.core.placement import PlacementResult, identity_placement
+from repro.core.placement import PlacementResult
 from repro.core.storage import IOStats, ManagedReader, NeuronStore, UFSDevice
 
 
@@ -32,6 +40,40 @@ class TokenStats:
     @property
     def io_seconds(self) -> float:
         return self.io.seconds
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request attribution of one batched engine step.
+
+    The device performs ONE merged read; each request is billed a share of
+    the read TIME proportional to the misses it asked for, so `io_seconds`
+    always sums to exactly the merged read. A neuron missed by several
+    requests splits its time cost among them — that split IS the batching
+    saving, vs. each request paying for its own read in the unbatched loop.
+    `bytes_useful` is different on purpose: it counts the bytes a request
+    asked to have read (its own missed bundles), so summing it across
+    requests double-counts shared neurons — compare it against
+    `merged.io.bytes_useful` to measure exactly that sharing."""
+    n_activated: int = 0
+    n_hits: int = 0
+    n_misses: int = 0
+    io_seconds: float = 0.0
+    bytes_useful: int = 0
+
+
+@dataclasses.dataclass
+class BatchStepResult:
+    """Result of one `step_batch`: merged payload + stats at both granularities."""
+    ids: np.ndarray                     # union of activated ids, sorted unique
+    data: np.ndarray                    # [len(ids), bundle_width] payloads
+    merged: TokenStats                  # what the device actually did (1 read)
+    per_request: List[RequestStats]     # attribution, len == n requests
+
+    def rows_for(self, request_ids: np.ndarray) -> np.ndarray:
+        """Row indices into `data` for one request's activated ids."""
+        return np.searchsorted(self.ids, np.unique(np.asarray(request_ids,
+                                                              dtype=np.int64)))
 
 
 @dataclasses.dataclass
@@ -50,32 +92,60 @@ class OffloadEngine:
 
     def __init__(
         self,
-        bundles: np.ndarray,                       # [n_neurons, bundle_width]
+        bundles: Optional[np.ndarray] = None,      # [n_neurons, bundle_width]
         placement: Optional[PlacementResult] = None,
         device: Optional[UFSDevice] = None,
         config: Optional[EngineConfig] = None,
         bundle_bytes: Optional[int] = None,
+        *,
+        store: Optional[NeuronStore] = None,
     ) -> None:
-        self.cfg = config or EngineConfig()
-        n = bundles.shape[0]
-        self.placement = placement or identity_placement(n)
-        self.store = NeuronStore(
-            bundles, self.placement, device or UFSDevice(),
-            reads_per_bundle=self.cfg.reads_per_bundle,
-            bundle_bytes=bundle_bytes,
-        )
+        """Either pass raw `bundles` (+ optional placement/device, defaulted by
+        `NeuronStore` — the single constructor path) or a prebuilt `store`.
+        The engine never re-defaults placement/device itself: `self.placement`
+        and the device model are always the store's."""
+        if store is None:
+            self.cfg = config or EngineConfig()
+            if bundles is None:
+                raise ValueError("OffloadEngine needs `bundles` or `store`")
+            store = NeuronStore(
+                bundles, placement, device,
+                reads_per_bundle=self.cfg.reads_per_bundle,
+                bundle_bytes=bundle_bytes,
+            )
+        else:
+            if any(a is not None for a in (bundles, placement, device, bundle_bytes)):
+                raise ValueError(
+                    "pass either a prebuilt `store` or raw bundles/placement/"
+                    "device/bundle_bytes, not both — the store already fixes them")
+            if config is None:   # adopt the store's layout cost model
+                self.cfg = dataclasses.replace(
+                    EngineConfig(), reads_per_bundle=store.reads_per_bundle)
+            elif config.reads_per_bundle != store.reads_per_bundle:
+                raise ValueError(
+                    f"config.reads_per_bundle={config.reads_per_bundle} "
+                    f"conflicts with store.reads_per_bundle={store.reads_per_bundle}")
+            else:
+                self.cfg = config
+        self.store = store
+        self.placement = store.placement
         self.reader = ManagedReader(
             self.store,
             adaptive=self.cfg.collapse,
             initial_threshold=self.cfg.initial_collapse_threshold,
         )
         self.cache = LinkingAlignedCache(
-            capacity=int(self.cfg.cache_ratio * n),
+            capacity=int(self.cfg.cache_ratio * store.n_neurons),
             segment_min_len=self.cfg.segment_min_len,
             segment_admit_p=self.cfg.segment_admit_p,
             linking_aligned=self.cfg.linking_aligned_cache,
         )
         self.history: List[TokenStats] = []
+
+    @classmethod
+    def from_store(cls, store: NeuronStore,
+                   config: Optional[EngineConfig] = None) -> "OffloadEngine":
+        return cls(store=store, config=config)
 
     # ------------------------------------------------------------------
     def step(self, activated_ids: np.ndarray) -> tuple[np.ndarray, TokenStats]:
@@ -95,9 +165,54 @@ class OffloadEngine:
             ts.run_lengths = [l for _, l in runs_from_positions(phys)]
             self.cache.admit(misses, phys)
         # payload for *all* activated neurons (hits came from DRAM)
-        data = self.store._phys_data[self.placement.physical_of(ids)]
+        data = self.store.fetch(ids)
         self.history.append(ts)
         return data, ts
+
+    # ------------------------------------------------------------------
+    def step_batch(self, ids_per_request: Sequence[np.ndarray]) -> BatchStepResult:
+        """Serve one decode step for a whole batch of requests.
+
+        Activated sets are merged across requests, the cache is probed once
+        per unique neuron, and all misses go out as ONE collapsed extent read
+        — a neuron wanted by several requests is read (and billed to the
+        device) once. `history` records the merged step, so `summary()`
+        reflects real device activity; per-request attribution (hits, misses,
+        proportional share of the read time) rides along in the result.
+        """
+        id_sets = [np.unique(np.asarray(ids, dtype=np.int64))
+                   for ids in ids_per_request]
+        union = (np.unique(np.concatenate(id_sets)) if id_sets
+                 else np.zeros((0,), dtype=np.int64))
+        merged = TokenStats(n_activated=int(union.size))
+        hits, misses = self.cache.lookup(union)
+        merged.n_hits, merged.n_misses = int(hits.size), int(misses.size)
+        if misses.size:
+            _, io = self.reader.read(misses)
+            merged.io = io
+            phys = self.placement.physical_of(misses)
+            merged.run_lengths = [l for _, l in runs_from_positions(phys)]
+            self.cache.admit(misses, phys)
+        data = self.store.fetch(union)
+        self.history.append(merged)
+
+        miss_counts = [int(np.isin(ids, misses, assume_unique=True).sum())
+                       for ids in id_sets]
+        total_requested_misses = sum(miss_counts)
+        per_request = []
+        for ids, n_miss in zip(id_sets, miss_counts):
+            share = (n_miss / total_requested_misses
+                     if total_requested_misses else 0.0)
+            per_request.append(RequestStats(
+                n_activated=int(ids.size),
+                n_hits=int(ids.size) - n_miss,
+                n_misses=n_miss,
+                io_seconds=merged.io.seconds * share,
+                bytes_useful=n_miss * self.store.bundle_bytes
+                             * self.store.reads_per_bundle,
+            ))
+        return BatchStepResult(ids=union, data=data, merged=merged,
+                               per_request=per_request)
 
     # ------------------------------------------------------------------
     def run_trace(self, masks: Sequence[np.ndarray]) -> List[TokenStats]:

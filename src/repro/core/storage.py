@@ -115,6 +115,21 @@ class NeuronStore:
                              else int(self.bundle_width * data.dtype.itemsize))
         self._phys_data = np.ascontiguousarray(data[self.placement.placement])
 
+    # -- zero-cost payload access -------------------------------------------
+    def fetch(self, logical_ids: np.ndarray) -> np.ndarray:
+        """Bundle payloads for logical ids, in id order, at zero modelled I/O.
+
+        This is the DRAM-side read: callers use it for neurons whose bytes are
+        already resident (cache hits, or bytes just admitted by `read`). It is
+        the public replacement for poking `_phys_data` directly — the serving
+        engine accounts flash I/O exclusively through `read`/`ManagedReader`
+        and serves every payload through this method.
+        """
+        logical_ids = np.asarray(logical_ids, dtype=np.int64)
+        if logical_ids.size == 0:
+            return np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype)
+        return self._phys_data[self.placement.physical_of(logical_ids)]
+
     # -- read planning -------------------------------------------------------
     def plan_extents(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> List[Extent]:
         phys = self.placement.physical_of(np.asarray(logical_ids, dtype=np.int64))

@@ -9,21 +9,18 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.distributed.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
     """Single-host mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,43 +1,23 @@
-"""Distributed serving driver: batched prefill + decode under jit shardings,
-with optional RIPPLE offload accounting for the FFN weights.
+"""Serving driver: batched prefill + decode, resident or through the full
+RIPPLE offload runtime (predict -> batched engine step -> sparse FFN from
+flash bundles, with double-buffered I/O-compute overlap accounting).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
-      --requests 8 --prompt-len 32 --new-tokens 16 [--offload] [--kv-quant]
+      --requests 8 --prompt-len 32 --new-tokens 16 \
+      [--mode offload] [--no-overlap] [--no-placement] [--kv-quant]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ASSIGNED_CONFIGS, get_config
-from repro.core import (EngineConfig, identity_placement, search_placement,
-                        stats_from_masks)
-from repro.core.sparse_ffn import FFNWeights, make_bundles
+from repro.core import EngineConfig, IOScheduler
 from repro.models import build_model
-from repro.serving.engine import OffloadedFFNRuntime, Request, ServingEngine
+from repro.serving.engine import (Request, ServingEngine,
+                                  build_offload_runtime)
 from repro.utils import logger
-
-
-def _offload_runtime(cfg, model, params, rng):
-    """Calibrate placements from a short trace and build the offload runtime."""
-    if cfg.family != "dense" or cfg.is_encdec:
-        raise SystemExit("--offload is implemented for dense decoder-only archs")
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32)
-    out = model.forward(params, {"tokens": tokens}, capture_activations=True)
-    L = out["ffn_pre_act"].shape[0]
-    placements, bundles = [], []
-    for l in range(L):
-        masks = np.asarray(out["ffn_pre_act"][l] > 0).reshape(-1, cfg.d_ff)
-        placements.append(search_placement(
-            stats_from_masks(masks).distance_matrix(), mode="auto"))
-        sub = params["stack"]["sub_0"]
-        w = FFNWeights(w_up=sub["ffn"]["w_up"][l].T, w_down=sub["ffn"]["w_down"][l],
-                       w_gate=(sub["ffn"]["w_gate"][l].T if "w_gate" in sub["ffn"]
-                               else None))
-        bundles.append(np.asarray(make_bundles(w)))
-    return OffloadedFFNRuntime(cfg, bundles, placements), L
 
 
 def main() -> None:
@@ -48,23 +28,44 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mode", choices=("resident", "offload"), default="resident",
+                    help="offload = serve the decode FFNs from simulated flash")
     ap.add_argument("--offload", action="store_true",
-                    help="account FFN I/O through the RIPPLE flash engine")
+                    help="deprecated alias for --mode offload")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable I/O-compute overlap in the offload scheduler")
+    ap.add_argument("--no-placement", action="store_true",
+                    help="identity flash layout (LLMFlash-style baseline)")
     ap.add_argument("--kv-quant", action="store_true")
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    mode = "offload" if args.offload else args.mode
 
     overrides = dict(vocab_size=args.vocab, kv_quant=args.kv_quant)
-    if args.offload:
+    if mode == "offload":
         overrides["activation"] = "relu"   # ReLU sparsity (paper's setting)
     cfg = get_config(args.arch, reduced=args.reduced, **overrides)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
 
+    offload = None
+    scheduler = None
+    if mode == "offload":
+        if cfg.family != "dense" or cfg.is_encdec:
+            raise SystemExit("--mode offload is implemented for dense decoder-only archs")
+        t0 = time.perf_counter()
+        offload = build_offload_runtime(
+            model, params, rng=rng, engine_cfg=EngineConfig(),
+            use_placement=not args.no_placement)
+        scheduler = IOScheduler(overlap=not args.no_overlap)
+        logger.info("offload runtime calibrated: %d layer engines in %.2fs",
+                    offload.n_layers, time.perf_counter() - t0)
+
     engine = ServingEngine(model, params,
-                           max_len=args.prompt_len + args.new_tokens + 8)
+                           max_len=args.prompt_len + args.new_tokens + 8,
+                           mode=mode, offload=offload, scheduler=scheduler)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens,
@@ -77,23 +78,22 @@ def main() -> None:
     logger.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
                 len(results), n_tok, wall, n_tok / wall)
     for r in results[:3]:
-        logger.info("  req %d: prefill %.0fms decode %.0fms -> %s...",
+        logger.info("  req %d: prefill %.0fms decode %.0fms io %.0fms -> %s...",
                     r.uid, r.prefill_seconds * 1e3, r.decode_seconds * 1e3,
-                    r.tokens[:6])
+                    r.io_seconds * 1e3, r.tokens[:6])
 
-    if args.offload:
-        runtime, L = _offload_runtime(cfg, model, params, rng)
-        h_stream = rng.standard_normal((n_tok, cfg.d_model)).astype(np.float32)
-        sub = params["stack"]["sub_0"]
-        for h in h_stream:
-            for l in range(L):
-                w_up = np.asarray(sub["ffn"]["w_up"][l]).T
-                mask = (h[None] @ w_up.T) > 0
-                runtime.ffn_apply(l, h[None], oracle_mask=mask)
-        s = runtime.io_summary()
+    if mode == "offload":
+        s = offload.io_summary()
         logger.info("offload I/O: %.2fms/token run_len=%.2f bw=%.0fMB/s hit=%.2f",
                     s["io_seconds_per_token"] * 1e3, s["mean_run_length"],
                     s["effective_bandwidth"] / 1e6, s["cache_hit_rate"])
+        p = engine.scheduler.summary()
+        logger.info("pipeline (host-measured compute + modeled io): "
+                    "serial %.2fms/token overlapped %.2fms/token "
+                    "(%.1f%% hidden, overlap=%s)",
+                    p["serial_seconds_per_token"] * 1e3,
+                    p["overlapped_seconds_per_token"] * 1e3,
+                    p["overlap_efficiency"] * 100, p["overlap_enabled"])
 
 
 if __name__ == "__main__":

@@ -254,6 +254,39 @@ def stack_prefill(
 
 # -- single-token decode -----------------------------------------------------------
 
+def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
+                  position: jnp.ndarray, cfg: ModelConfig, kind: str,
+                  window: int) -> Tuple[jnp.ndarray, Any]:
+    """One sublayer's mixer for a single decode token: (mix [B,1,d], new cache).
+
+    Shared by the jit'd scan path (stack_decode_step) and the host-driven
+    layerwise path (stack_decode_step_layerwise) so both run identical math.
+    """
+    normed = apply_norm(sp["norm1"], h, cfg)
+    if kind == "attn":
+        from repro.models.layers import _project_qkv
+        q, k, v = _project_qkv(sp["mixer"], normed, normed, cfg)
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k = rope(k, pos_arr, cfg.rope_theta)
+        if isinstance(cj, SWACache):
+            cj = swa_write(cj, k, v, pos_arr)
+            mix = attend_swa_cache(q, cj, pos_arr, window or cfg.sliding_window)
+        elif isinstance(cj, QuantKVCache):
+            cj = quant_kv_write(cj, k, v, position)
+            mix = attend_full_cache(q, cj, pos_arr)
+        else:
+            cj = kv_write(cj, k, v, position)
+            mix = attend_full_cache(q, cj, pos_arr)
+        return mix @ sp["mixer"]["wo"], cj
+    if kind == "mamba":
+        y, cj = ssm.mamba_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
+    elif kind == "mlstm":
+        y, cj = ssm.mlstm_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
+    else:
+        y, cj = ssm.slstm_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
+    return y[:, None], cj
+
+
 def stack_decode_step(
     stack: Params,
     x: jnp.ndarray,            # [B, 1, d]
@@ -275,31 +308,7 @@ def stack_decode_step(
             sp = group_params[f"sub_{j}"]
             cj = group_cache[f"sub_{j}"]
             kind, ffn = kinds[j], ffns[j]
-            normed = apply_norm(sp["norm1"], h, cfg)
-            if kind == "attn":
-                from repro.models.layers import _project_qkv
-                q, k, v = _project_qkv(sp["mixer"], normed, normed, cfg)
-                q = rope(q, pos_arr, cfg.rope_theta)
-                k = rope(k, pos_arr, cfg.rope_theta)
-                if isinstance(cj, SWACache):
-                    cj = swa_write(cj, k, v, pos_arr)
-                    mix = attend_swa_cache(q, cj, pos_arr, window or cfg.sliding_window)
-                elif isinstance(cj, QuantKVCache):
-                    cj = quant_kv_write(cj, k, v, position)
-                    mix = attend_full_cache(q, cj, pos_arr)
-                else:
-                    cj = kv_write(cj, k, v, position)
-                    mix = attend_full_cache(q, cj, pos_arr)
-                mix = mix @ sp["mixer"]["wo"]
-            elif kind == "mamba":
-                y, cj = ssm.mamba_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
-                mix = y[:, None]
-            elif kind == "mlstm":
-                y, cj = ssm.mlstm_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
-                mix = y[:, None]
-            else:
-                y, cj = ssm.slstm_decode_step(sp["mixer"], normed[:, 0], cj, cfg)
-                mix = y[:, None]
+            mix, cj = _mixer_decode(sp, cj, h, pos_arr, position, cfg, kind, window)
             h = h + mix
             if ffn != "none":
                 normed2 = apply_norm(sp["norm2"], h, cfg)
@@ -316,3 +325,71 @@ def stack_decode_step(
 
     x, new_cache = jax.lax.scan(group_fn, x, (stack, cache))
     return x, new_cache
+
+
+# -- host-driven layerwise decode (offload serving hook) ---------------------------
+
+def unstack_groups(tree: Params, cfg: ModelConfig) -> List[Params]:
+    """Split a stacked {sub_j: [G, ...]} pytree into G per-group pytrees.
+
+    Done once per served batch by the offload path so the per-token layer loop
+    indexes views instead of re-slicing the stacked arrays every step."""
+    G = cfg.n_layers // stack_period(cfg)
+    return [jax.tree_util.tree_map(lambda a: a[g], tree) for g in range(G)]
+
+
+def stack_groups(groups: List[Params]) -> Params:
+    """Inverse of unstack_groups (restack along the scan axis)."""
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *groups)
+
+
+def stack_decode_step_layerwise(
+    param_groups: List[Params],
+    x: jnp.ndarray,            # [B, 1, d]
+    position: jnp.ndarray,     # scalar int32
+    cache_groups: List[Params],
+    cfg: ModelConfig,
+    window: int = 0,
+    ffn_override=None,         # (dense_layer_idx, normed2 [B,1,d]) -> y [B,1,d]
+) -> Tuple[jnp.ndarray, List[Params]]:
+    """Python-loop decode step over unstacked layer groups.
+
+    Identical math to `stack_decode_step`, but the loop runs on host so a
+    caller can intercept every dense-FFN sublayer via `ffn_override` — the
+    offload serving path computes those from flash bundle payloads (predict ->
+    batched engine step -> sparse FFN) instead of the resident weights.
+    `dense_layer_idx` counts dense FFN sublayers in (group, sublayer) order —
+    the same order `stack_forward(capture_activations=True)` stacks
+    `ffn_pre_act`, so calibration traces and serving agree on layer ids.
+    """
+    P = stack_period(cfg)
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    B = x.shape[0]
+    pos_arr = jnp.broadcast_to(position.astype(jnp.int32), (B, 1))
+    h = x
+    dense_idx = 0
+    new_groups: List[Params] = []
+    for group_params, group_cache in zip(param_groups, cache_groups):
+        new_cache: Params = {}
+        for j in range(P):
+            sp = group_params[f"sub_{j}"]
+            cj = group_cache[f"sub_{j}"]
+            kind, ffn = kinds[j], ffns[j]
+            mix, cj = _mixer_decode(sp, cj, h, pos_arr, position, cfg, kind, window)
+            h = h + mix
+            if ffn != "none":
+                normed2 = apply_norm(sp["norm2"], h, cfg)
+                if ffn == "dense":
+                    if ffn_override is not None:
+                        y2 = ffn_override(dense_idx, normed2)
+                    elif cfg.serve_sparse:
+                        y2 = sparse_ffn_decode(sp["ffn"], sp["ffn_pred"], normed2, cfg)
+                    else:
+                        y2, _ = ffn_forward(sp["ffn"], normed2, cfg)
+                    dense_idx += 1
+                else:
+                    y2, _ = moe_lib.moe_forward(sp["ffn"], normed2, cfg)
+                h = h + y2
+            new_cache[f"sub_{j}"] = cj
+        new_groups.append(new_cache)
+    return h, new_groups

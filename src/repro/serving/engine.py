@@ -1,12 +1,18 @@
-"""Serving engine: batched prefill + decode with the RIPPLE offload path.
+"""Serving engine: batched prefill + decode, resident or flash-offloaded.
 
-Two modes:
+Two modes, one `serve()`:
   * resident  — all weights in device memory; jit'd prefill/decode only.
-  * offload   — the paper's scenario: FFN neuron bundles live in (simulated)
-    flash; per layer and per token the OffloadEngine predicts/reads/caches the
-    activated neurons, and the layer FFN is computed *from the bytes read*.
-    I/O latency per token is accounted by the UFS device model and reported
-    alongside compute.
+  * offload   — the paper's §5 online stage, end-to-end: prefill runs dense
+    (the paper offloads only the memory-dominant decode FFN), then every
+    decode step drives, per dense-FFN layer and for the WHOLE decode batch,
+        predict activated neurons (trained predictor or exact ReLU oracle)
+        -> one batched engine step (merged cache probe + single collapsed
+           extent read over the simulated UFS layout)
+        -> sparse FFN computed from the bundle payloads actually read,
+    while an `IOScheduler` models double-buffered I/O–compute overlap
+    (layer L+1's read hides behind layer L's compute). Per-request I/O is
+    attributed by the engine and lands in `Result.io_seconds`; batch-level
+    overlapped vs serial latency comes from `scheduler.summary()`.
 
 The offload path intentionally runs layer-by-layer on host (it models a
 phone-style single-device runtime); the distributed pjit path is the dense
@@ -23,11 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.engine import EngineConfig, OffloadEngine
+from repro.core.engine import BatchStepResult, EngineConfig, OffloadEngine
+from repro.core.pipeline import IOScheduler
 from repro.core.placement import PlacementResult
 from repro.core.predictor import PredictorParams, predict_mask
 from repro.core.sparse_ffn import sparse_ffn_from_bundles
 from repro.core.storage import UFSDevice
+from repro.models import transformer
+from repro.models.layers import apply_norm, embed_tokens, unembed
 from repro.models.model import Model
 
 
@@ -45,7 +54,12 @@ class Result:
     tokens: List[int]
     prefill_seconds: float
     decode_seconds: float
-    io_seconds: float = 0.0
+    io_seconds: float = 0.0            # this request's attributed flash I/O
+    # Group-level pipelined decode latency. NOTE: a hybrid — stage compute is
+    # MEASURED host wall time (eager jax on this machine), stage io is the
+    # MODELED UFS read time; benchmarks/serving_pipeline.py reports the fully
+    # modeled (machine-independent) counterpart.
+    overlapped_seconds: float = 0.0
 
 
 def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
@@ -54,60 +68,8 @@ def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
-class ServingEngine:
-    """Continuous-batching-lite: fixed decode batch, greedy/temperature sampling."""
-
-    def __init__(self, model: Model, params: Any, max_len: int = 512,
-                 swa: bool = False):
-        self.model = model
-        self.params = params
-        self.max_len = max_len
-        self.swa = swa
-        self._decode = jax.jit(
-            lambda p, t, pos, c: model.decode_step(p, t, pos, c))
-
-    def serve(self, requests: List[Request], seed: int = 0) -> List[Result]:
-        results = []
-        key = jax.random.PRNGKey(seed)
-        for group in _group_by_len(requests):
-            toks = np.stack([r.prompt for r in group])
-            B, T = toks.shape
-            cache = self.model.init_cache(B, self.max_len, swa=self.swa)
-            t0 = time.perf_counter()
-            logits, cache = self.model.prefill(
-                self.params, {"tokens": jnp.asarray(toks)}, cache)
-            logits.block_until_ready()
-            t_prefill = time.perf_counter() - t0
-            max_new = max(r.max_new_tokens for r in group)
-            outs = [[] for _ in group]
-            cur = sample_token(logits[:, -1], group[0].temperature, key)
-            t0 = time.perf_counter()
-            for step in range(max_new):
-                for i in range(B):
-                    outs[i].append(int(cur[i]))
-                key = jax.random.fold_in(key, step)
-                logits, cache = self._decode(
-                    self.params, cur[:, None].astype(jnp.int32),
-                    jnp.int32(T + step), cache)
-                cur = sample_token(logits[:, 0], group[0].temperature, key)
-            jax.block_until_ready(cur)
-            t_decode = time.perf_counter() - t0
-            for r, o in zip(group, outs):
-                results.append(Result(uid=r.uid, tokens=o[: r.max_new_tokens],
-                                      prefill_seconds=t_prefill,
-                                      decode_seconds=t_decode))
-        return results
-
-
-def _group_by_len(requests: List[Request]) -> List[List[Request]]:
-    by_len: Dict[int, List[Request]] = {}
-    for r in requests:
-        by_len.setdefault(len(r.prompt), []).append(r)
-    return list(by_len.values())
-
-
 # ---------------------------------------------------------------------------
-# Offloaded serving: the paper's pipeline around a host-side layer loop
+# Offloaded FFN runtime: per-layer engines + batched apply
 # ---------------------------------------------------------------------------
 
 class OffloadedFFNRuntime:
@@ -130,6 +92,7 @@ class OffloadedFFNRuntime:
         self.predictors = predictors
         self.n_mats = 3 if cfg.activation == "silu" else 2
 
+    # -- single merged activated set (legacy accounting interface) ----------
     def ffn_apply(self, layer: int, h: np.ndarray, oracle_mask: Optional[np.ndarray] = None):
         """h: [B, d]. Returns (y [B, d], TokenStats).
 
@@ -141,10 +104,50 @@ class OffloadedFFNRuntime:
             oracle_mask = np.asarray(predict_mask(self.predictors[layer], jnp.asarray(h)))
         ids = np.nonzero(np.any(np.atleast_2d(oracle_mask), axis=0))[0]
         data, stats = self.engines[layer].step(ids)
-        y = sparse_ffn_from_bundles(
-            jnp.asarray(h), jnp.asarray(data), self.cfg.d_model, self.n_mats,
-            activation=self.cfg.activation)
+        y = self._ffn_from_bundles(jnp.asarray(h), data)
         return np.asarray(y), stats
+
+    # -- whole decode batch, per-request attribution -------------------------
+    def ffn_apply_batch(
+        self,
+        layer: int,
+        h: jnp.ndarray,                            # [B, d]
+        masks: Optional[np.ndarray] = None,        # [B, n_neurons] bool
+    ) -> tuple[jnp.ndarray, BatchStepResult]:
+        """One batched engine step for all B requests' activated sets.
+
+        Returns (y [B, d], BatchStepResult). The FFN is computed once over
+        the union payload — rows not activated for a request contribute 0
+        under ReLU, and over-coverage from sharing neurons across requests is
+        exact for the same reason.
+        """
+        if masks is None:
+            assert self.predictors is not None, "need predictors or oracle masks"
+            masks = np.asarray(predict_mask(self.predictors[layer], h))
+        masks = np.atleast_2d(np.asarray(masks))
+        ids_per_request = [np.nonzero(row)[0] for row in masks]
+        res = self.engines[layer].step_batch(ids_per_request)
+        y = self._ffn_from_bundles(h, res.data)
+        return y, res
+
+    # activated-set sizes vary every (step, layer); without bucketing each
+    # fresh size triggers a new XLA compilation of the sparse-FFN matmuls.
+    PAD_BUCKET = 128
+
+    def _ffn_from_bundles(self, h: jnp.ndarray, data: np.ndarray) -> jnp.ndarray:
+        k = data.shape[0]
+        padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
+        if padded != k:
+            data = np.concatenate(
+                [data, np.zeros((padded - k,) + data.shape[1:], data.dtype)])
+        valid = jnp.arange(padded) < k
+        return sparse_ffn_from_bundles(
+            h, jnp.asarray(data), self.cfg.d_model, self.n_mats,
+            activation=self.cfg.activation, valid_mask=valid)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.engines)
 
     def io_summary(self) -> dict:
         per_layer = [e.summary() for e in self.engines]
@@ -156,3 +159,223 @@ class OffloadedFFNRuntime:
             "cache_hit_rate": float(np.mean([s["cache_hit_rate"] for s in per_layer])),
             "ops_per_token": sum(s["ops_per_token"] for s in per_layer),
         }
+
+    def reset_stats(self) -> None:
+        for e in self.engines:
+            e.reset_stats()
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+class ServingEngine:
+    """Continuous-batching-lite: fixed decode batch, greedy/temperature sampling."""
+
+    def __init__(self, model: Model, params: Any, max_len: int = 512,
+                 swa: bool = False, mode: str = "resident",
+                 offload: Optional[OffloadedFFNRuntime] = None,
+                 scheduler: Optional[IOScheduler] = None,
+                 oracle: bool = True):
+        if mode not in ("resident", "offload"):
+            raise ValueError(f"unknown serving mode {mode!r}")
+        if mode == "offload":
+            if offload is None:
+                raise ValueError("mode='offload' needs an OffloadedFFNRuntime")
+            cfg = model.cfg
+            if cfg.is_encdec or cfg.family != "dense":
+                raise ValueError("offload serving covers dense decoder-only archs")
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.swa = swa
+        self.mode = mode
+        self.offload = offload
+        self.oracle = oracle
+        self.scheduler = scheduler or IOScheduler(overlap=True)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+
+    def serve(self, requests: List[Request], seed: int = 0) -> List[Result]:
+        results = []
+        key = jax.random.PRNGKey(seed)
+        for g, group in enumerate(_group_by_len(requests)):
+            # distinct sampling stream per prompt-length group
+            group_key = jax.random.fold_in(key, g)
+            if self.mode == "offload":
+                results.extend(self._serve_group_offload(group, group_key))
+            else:
+                results.extend(self._serve_group_resident(group, group_key))
+        return results
+
+    # -- resident (dense jit) path ------------------------------------------
+    def _serve_group_resident(self, group: List[Request], key) -> List[Result]:
+        toks = np.stack([r.prompt for r in group])
+        B, T = toks.shape
+        cache = self.model.init_cache(B, self.max_len, swa=self.swa)
+        t0 = time.perf_counter()
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+        max_new = max(r.max_new_tokens for r in group)
+        outs = [[] for _ in group]
+        cur = sample_token(logits[:, -1], group[0].temperature, key)
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            for i in range(B):
+                outs[i].append(int(cur[i]))
+            key = jax.random.fold_in(key, step)
+            logits, cache = self._decode(
+                self.params, cur[:, None].astype(jnp.int32),
+                jnp.int32(T + step), cache)
+            cur = sample_token(logits[:, 0], group[0].temperature, key)
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t0
+        return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
+                       prefill_seconds=t_prefill, decode_seconds=t_decode)
+                for r, o in zip(group, outs)]
+
+    # -- offloaded (paper §5) path ------------------------------------------
+    def _oracle_w_ups(self) -> List[jnp.ndarray]:
+        """Resident w_up handles per dense layer, in capture order — the exact
+        ReLU support oracle the predictor approximates. The simulated flash
+        still pays for every neuron the mask selects."""
+        cfg = self.model.cfg
+        P = transformer.stack_period(cfg)
+        G = cfg.n_layers // P
+        ffns = cfg.ffn_kinds()
+        w_ups = []
+        for g in range(G):
+            for j in range(P):
+                if ffns[j] == "dense":
+                    w_ups.append(self.params["stack"][f"sub_{j}"]["ffn"]["w_up"][g])
+        return w_ups
+
+    def _serve_group_offload(self, group: List[Request], key) -> List[Result]:
+        cfg = self.model.cfg
+        runtime = self.offload
+        toks = np.stack([r.prompt for r in group])
+        B, T = toks.shape
+        cache = self.model.init_cache(B, self.max_len, swa=self.swa)
+        t0 = time.perf_counter()
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        param_groups = transformer.unstack_groups(self.params["stack"], cfg)
+        cache_groups = transformer.unstack_groups(cache, cfg)
+        w_ups = self._oracle_w_ups() if self.oracle else None
+        if w_ups is not None and len(w_ups) != runtime.n_layers:
+            raise ValueError(
+                f"runtime has {runtime.n_layers} layer engines, model has "
+                f"{len(w_ups)} dense FFN layers")
+
+        max_new = max(r.max_new_tokens for r in group)
+        outs = [[] for _ in group]
+        req_io = np.zeros(B)
+        cur = sample_token(logits[:, -1], group[0].temperature, key)
+        stage_clock = [time.perf_counter()]
+
+        def ffn_override(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
+            h2 = normed2[:, 0]                                     # [B, d]
+            if w_ups is not None:
+                masks = np.asarray(h2 @ w_ups[dense_idx] > 0)      # exact support
+            else:
+                masks = None                                       # predictor path
+            y, res = runtime.ffn_apply_batch(dense_idx, h2, masks)
+            y.block_until_ready()
+            now = time.perf_counter()
+            # stage compute = host+device time since the previous FFN stage
+            # finished (mixer of this layer + this FFN); stage io = the merged
+            # simulated read. The scheduler overlaps them across layers.
+            self.scheduler.record_stage(dense_idx, now - stage_clock[0],
+                                        res.merged.io.seconds)
+            stage_clock[0] = now
+            for i, rs in enumerate(res.per_request):
+                req_io[i] += rs.io_seconds
+            return y[:, None]
+
+        t0 = time.perf_counter()
+        overlapped_total = 0.0
+        for step in range(max_new):
+            for i in range(B):
+                outs[i].append(int(cur[i]))
+            key = jax.random.fold_in(key, step)
+            x = embed_tokens(self.params["embed"], cur[:, None].astype(jnp.int32), cfg)
+            self.scheduler.begin_token()
+            stage_clock[0] = time.perf_counter()
+            h, cache_groups = transformer.stack_decode_step_layerwise(
+                param_groups, x, jnp.int32(T + step), cache_groups, cfg,
+                ffn_override=ffn_override)
+            timing = self.scheduler.end_token()
+            overlapped_total += timing.overlapped_seconds
+            h = apply_norm(self.params["final_norm"], h, cfg)
+            logits = unembed(self.params["embed"], h, cfg)
+            cur = sample_token(logits[:, 0], group[0].temperature, key)
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t0
+        return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
+                       prefill_seconds=t_prefill, decode_seconds=t_decode,
+                       io_seconds=float(io), overlapped_seconds=overlapped_total)
+                for r, o, io in zip(group, outs, req_io)]
+
+
+def build_offload_runtime(
+    model: Model,
+    params: Any,
+    rng: Optional[np.random.Generator] = None,
+    calib_batch: tuple = (8, 64),
+    engine_cfg: Optional[EngineConfig] = None,
+    device: Optional[UFSDevice] = None,
+    use_placement: bool = True,
+) -> OffloadedFFNRuntime:
+    """Calibrate placements from a short random-token trace and pack the
+    model's dense-FFN weights into flash bundles, one engine per dense layer.
+
+    `use_placement=False` keeps the identity layout (the LLMFlash-style
+    baseline arm of the benchmarks). Works for any stack period: layers are
+    enumerated in the same (group, sublayer) order as `ffn_pre_act` capture.
+    """
+    from repro.core.coactivation import stats_from_masks
+    from repro.core.placement import identity_placement, search_placement
+    from repro.core.sparse_ffn import FFNWeights, make_bundles
+
+    cfg = model.cfg
+    if cfg.family != "dense" or cfg.is_encdec:
+        raise ValueError("offload runtime covers dense decoder-only archs")
+    rng = rng or np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, calib_batch), jnp.int32)
+    out = model.forward(params, {"tokens": tokens}, capture_activations=True)
+    P = transformer.stack_period(cfg)
+    G = cfg.n_layers // P
+    ffns = cfg.ffn_kinds()
+    placements, bundles = [], []
+    dense_idx = 0
+    for g in range(G):
+        for j in range(P):
+            if ffns[j] != "dense":
+                continue
+            ffn_p = params["stack"][f"sub_{j}"]["ffn"]
+            w = FFNWeights(
+                w_up=ffn_p["w_up"][g].T, w_down=ffn_p["w_down"][g],
+                w_gate=(ffn_p["w_gate"][g].T if "w_gate" in ffn_p else None))
+            bundles.append(np.asarray(make_bundles(w)))
+            if use_placement:
+                masks = np.asarray(
+                    out["ffn_pre_act"][dense_idx] > 0).reshape(-1, cfg.d_ff)
+                placements.append(search_placement(
+                    stats_from_masks(masks).distance_matrix(), mode="auto"))
+            else:
+                placements.append(identity_placement(cfg.d_ff))
+            dense_idx += 1
+    return OffloadedFFNRuntime(cfg, bundles, placements, device=device,
+                               engine_cfg=engine_cfg)
+
+
+def _group_by_len(requests: List[Request]) -> List[List[Request]]:
+    by_len: Dict[int, List[Request]] = {}
+    for r in requests:
+        by_len.setdefault(len(r.prompt), []).append(r)
+    return list(by_len.values())

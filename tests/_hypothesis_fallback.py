@@ -1,0 +1,95 @@
+"""Vendored minimal stand-in for `hypothesis` (dev-dependency fallback).
+
+The container this repo is tested in may not have hypothesis installed and
+cannot pip-install it. conftest.py registers this module as `hypothesis` in
+sys.modules when the real package is missing, so the property-test modules
+import unchanged. Only the tiny API surface those tests use is provided:
+
+    @given(*strategies, **kw_strategies)
+    @settings(max_examples=N, deadline=None)
+    st.integers / st.floats / st.booleans / st.sampled_from / st.lists
+
+Examples are drawn from a deterministic per-test PRNG (seeded by the test
+name), so runs are reproducible. This is NOT a shrinking property-based
+framework — just enough randomized coverage to keep the invariant tests
+meaningful. Install the real `hypothesis` (requirements-dev.txt) for full
+shrinking and edge-case generation.
+"""
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = 25   # keep CPU runtime bounded without real shrinking
+
+
+class SearchStrategy:
+    """A strategy is just a sampler: sample(rng) -> value."""
+
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value, **_kw):
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(size)]
+    return SearchStrategy(sample)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # No functools.wraps: copying __wrapped__ would make pytest introspect
+        # the original signature and demand the drawn parameters as fixtures.
+        def wrapper():
+            n = min(getattr(fn, "_fallback_max_examples", 20), _MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn_args = [s.sample(rng) for s in arg_strategies]
+                drawn_kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*drawn_args, **drawn_kw)
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco
+
+
+def install_as_hypothesis(sys_modules) -> None:
+    """Register this module (and a `strategies` submodule) as `hypothesis`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = SearchStrategy
+    mod.strategies = st_mod
+    mod.__fallback__ = True
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = st_mod

@@ -35,11 +35,12 @@ def test_parse_collective_bytes():
 
 _SUBPROCESS = r"""
 import os
+os.environ["JAX_PLATFORMS"] = "cpu"   # libtpu may be installed: never probe TPU
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
-from jax.sharding import AxisType
+from repro.distributed.sharding import make_mesh as compat_make_mesh
 from repro.launch.dryrun import run_case
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 r = run_case("xlstm-125m", "decode_32k", save_dir="", mesh=mesh)
 assert r["cost_analysis"].get("flops", 0) > 0
 assert r["collective_bytes"]["total"] > 0, "model-parallel decode must communicate"

@@ -74,6 +74,73 @@ def test_sparse_ffn_from_bundles_equals_dense_relu():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
+def test_step_batch_single_request_equals_step():
+    _, serve, placement, bundles = _setup(seed=5)
+    e_loop = OffloadEngine(bundles, placement=placement)
+    e_batch = OffloadEngine(bundles, placement=placement)
+    for mask in serve[:20]:
+        ids = np.nonzero(mask)[0]
+        data, ts = e_loop.step(ids)
+        res = e_batch.step_batch([ids])
+        np.testing.assert_array_equal(res.data, data)
+        assert res.merged.n_activated == ts.n_activated
+        assert res.merged.n_hits == ts.n_hits
+        assert res.merged.io.bytes_useful == ts.io.bytes_useful
+        assert res.merged.io.seconds == ts.io.seconds
+        [rs] = res.per_request
+        assert (rs.n_hits, rs.n_misses) == (ts.n_hits, ts.n_misses)
+        assert rs.io_seconds == ts.io.seconds
+
+
+def test_step_batch_equivalent_to_step_loop():
+    """Disjoint request sets: batched payload + useful bytes match a loop of
+    per-request steps; the single merged read never costs more I/O time."""
+    _, serve, placement, bundles = _setup(seed=6)
+    n = len(bundles)
+    rng = np.random.default_rng(6)
+    perm = rng.permutation(n)
+    id_sets = [np.sort(perm[:40]), np.sort(perm[40:90]), np.sort(perm[90:130])]
+    e_loop = OffloadEngine(bundles, placement=placement)
+    e_batch = OffloadEngine(bundles, placement=placement)
+    loop = [e_loop.step(ids) for ids in id_sets]
+    res = e_batch.step_batch(id_sets)
+    for ids, (data, _) in zip(id_sets, loop):
+        np.testing.assert_array_equal(res.data[res.rows_for(ids)], data)
+    assert res.merged.io.bytes_useful == sum(ts.io.bytes_useful for _, ts in loop)
+    assert sum(rs.bytes_useful for rs in res.per_request) == res.merged.io.bytes_useful
+    assert res.merged.io.seconds <= sum(ts.io.seconds for _, ts in loop)
+    # attribution conserves the merged read time (all-miss cold start)
+    assert abs(sum(rs.io_seconds for rs in res.per_request)
+               - res.merged.io.seconds) < 1e-12
+
+
+def test_step_batch_shared_neurons_read_once():
+    _, _, placement, bundles = _setup(seed=7)
+    eng = OffloadEngine(bundles, placement=placement)
+    shared = np.arange(30)
+    res = eng.step_batch([shared, shared, shared])
+    # union is read once; each request is billed a third of the one read
+    assert res.merged.n_activated == 30
+    assert res.merged.io.bytes_useful == 30 * eng.store.bundle_bytes
+    for rs in res.per_request:
+        assert rs.n_misses == 30
+        assert abs(rs.io_seconds - res.merged.io.seconds / 3) < 1e-12
+
+
+def test_engine_from_store_shares_config_surface():
+    """Satellite cleanup: NeuronStore owns placement/device defaulting; the
+    engine never re-defaults. An engine built from a prebuilt store sees the
+    exact same placement object."""
+    from repro.core.storage import NeuronStore
+    _, _, placement, bundles = _setup(seed=8)
+    store = NeuronStore(bundles, placement)
+    eng = OffloadEngine.from_store(store)
+    assert eng.placement is store.placement
+    assert eng.store is store
+    eng2 = OffloadEngine(bundles, placement=placement)
+    assert eng2.placement is eng2.store.placement
+
+
 def test_offline_and_online_stages_compose():
     """Paper Fig. 11: offline-only and online-only each help; combined best."""
     calib, serve, placement, bundles = _setup(seed=4)

@@ -1,0 +1,63 @@
+"""IOScheduler / overlap-model invariants (core/pipeline.py)."""
+import numpy as np
+
+from repro.core.pipeline import (IOScheduler, Stage, overlapped_latency,
+                                 serial_latency)
+
+
+def _random_stages(rng, n):
+    return [Stage(layer=i, compute_seconds=float(rng.uniform(0, 5e-3)),
+                  io_seconds=float(rng.uniform(0, 5e-3))) for i in range(n)]
+
+
+def test_overlapped_bounded_by_serial_and_critical_path():
+    rng = np.random.default_rng(0)
+    for trial in range(200):
+        stages = _random_stages(rng, int(rng.integers(1, 12)))
+        serial = serial_latency(stages)
+        over = overlapped_latency(stages)
+        total_io = sum(s.io_seconds for s in stages)
+        total_c = sum(s.compute_seconds for s in stages)
+        assert over <= serial + 1e-12
+        assert over >= max(total_io, total_c) - 1e-12
+
+
+def test_first_read_is_never_hidden():
+    # one stage: nothing to overlap with -> overlapped == serial
+    stages = [Stage(0, compute_seconds=2e-3, io_seconds=3e-3)]
+    assert overlapped_latency(stages) == serial_latency(stages)
+
+
+def test_steady_state_max_compute_io():
+    """Equal stages: latency -> io_0 + sum(max(c, io)) (the paper's overlap
+    argument: per layer you pay the slower of compute and prefetch)."""
+    c, io, L = 2e-3, 3e-3, 8
+    stages = [Stage(i, c, io) for i in range(L)]
+    expected = io + (L - 1) * max(c, io) + c  # first read exposed, last compute
+    assert abs(overlapped_latency(stages) - expected) < 1e-12
+
+
+def test_scheduler_overlap_off_equals_serial():
+    rng = np.random.default_rng(1)
+    on, off = IOScheduler(overlap=True), IOScheduler(overlap=False)
+    for _ in range(5):
+        stages = _random_stages(rng, 6)
+        for sch in (on, off):
+            sch.begin_token()
+            for s in stages:
+                sch.record_stage(s.layer, s.compute_seconds, s.io_seconds)
+            sch.end_token()
+    s_on, s_off = on.summary(), off.summary()
+    assert s_off["overlapped_seconds_per_token"] == s_off["serial_seconds_per_token"]
+    assert s_off["overlap_efficiency"] == 0.0
+    assert s_on["overlapped_seconds_per_token"] <= s_on["serial_seconds_per_token"]
+    assert s_on["serial_seconds_per_token"] == s_off["serial_seconds_per_token"]
+
+
+def test_io_bound_and_compute_bound_limits():
+    # pure compute: nothing to hide, overlapped == serial == sum(compute)
+    comp = [Stage(i, 1e-3, 0.0) for i in range(5)]
+    assert overlapped_latency(comp) == serial_latency(comp)
+    # pure io: serialised on the single channel, overlapped == sum(io)
+    io = [Stage(i, 0.0, 1e-3) for i in range(5)]
+    assert abs(overlapped_latency(io) - 5e-3) < 1e-12

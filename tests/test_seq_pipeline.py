@@ -5,14 +5,16 @@ import sys
 
 _SCRIPT = r"""
 import os
+os.environ["JAX_PLATFORMS"] = "cpu"   # libtpu may be installed: never probe TPU
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models import ssm
 from repro.distributed.seq_pipeline import pipelined_mlstm_forward
+from repro.distributed.sharding import make_mesh as compat_make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 cfg = get_config("xlstm-125m", reduced=True, d_model=64, n_heads=2, n_kv_heads=2)
 p = ssm.init_mlstm(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(0)

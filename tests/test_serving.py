@@ -5,11 +5,12 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engine import EngineConfig
+from repro.core.pipeline import IOScheduler
 from repro.core.placement import identity_placement
 from repro.core.sparse_ffn import FFNWeights, dense_ffn, make_bundles
 from repro.models import build_model
 from repro.serving.engine import (OffloadedFFNRuntime, Request, ServingEngine,
-                                  sample_token)
+                                  build_offload_runtime, sample_token)
 
 
 def test_greedy_serving_matches_manual_decode(rng):
@@ -76,3 +77,78 @@ def test_offloaded_ffn_matches_dense(rng):
     summ = runtime.io_summary()
     assert summ["io_seconds_per_token"] > 0
     assert summ["ops_per_token"] >= 2   # one read batch per layer minimum
+
+
+def test_ffn_apply_batch_matches_dense_per_request(rng):
+    """Batched apply: per-request masks, one merged read, still exact."""
+    d, n = 32, 256
+    cfg = get_config("granite-3-2b", reduced=True, d_model=d, activation="relu")
+    w = FFNWeights(
+        w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32))
+    runtime = OffloadedFFNRuntime(cfg, [np.asarray(make_bundles(w))],
+                                  [identity_placement(n)])
+    h = rng.standard_normal((4, d)).astype(np.float32)
+    masks = np.asarray(h @ np.asarray(w.w_up).T > 0)
+    y, res = runtime.ffn_apply_batch(0, jnp.asarray(h), masks)
+    ref = np.asarray(dense_ffn(jnp.asarray(h), w, activation="relu"))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+    assert len(res.per_request) == 4
+    assert res.merged.n_activated == int(np.any(masks, axis=0).sum())
+    assert sum(rs.n_misses for rs in res.per_request) >= res.merged.n_misses
+
+
+def _tiny_offload_setup(seed=0, n_layers=2):
+    cfg = get_config("opt-350m", reduced=True, d_model=64, d_ff=256,
+                     n_layers=n_layers, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    return cfg, model, params, reqs
+
+
+def test_offload_serve_token_identical_to_resident():
+    """Acceptance: mode='offload' under the oracle mask returns the resident
+    path's tokens exactly, with Result.io_seconds > 0."""
+    cfg, model, params, reqs = _tiny_offload_setup()
+    res_resident = ServingEngine(model, params, max_len=32).serve(reqs)
+    runtime = build_offload_runtime(model, params,
+                                    rng=np.random.default_rng(1))
+    engine = ServingEngine(model, params, max_len=32, mode="offload",
+                           offload=runtime, scheduler=IOScheduler(overlap=True))
+    res_offload = engine.serve(reqs)
+    for a, b in zip(res_resident, res_offload):
+        assert a.uid == b.uid
+        assert a.tokens == b.tokens
+        assert b.io_seconds > 0
+        assert b.overlapped_seconds > 0
+    p = engine.scheduler.summary()
+    assert p["tokens"] == 4
+    assert p["overlapped_seconds_per_token"] <= p["serial_seconds_per_token"]
+    assert runtime.io_summary()["io_seconds_per_token"] > 0
+
+
+def test_unstack_stack_groups_roundtrip():
+    import jax.tree_util as jtu
+    from repro.models import transformer
+    cfg, model, params, _ = _tiny_offload_setup(seed=4)
+    groups = transformer.unstack_groups(params["stack"], cfg)
+    assert len(groups) == cfg.n_layers // transformer.stack_period(cfg)
+    restacked = transformer.stack_groups(groups)
+    for a, b in zip(jtu.tree_leaves(params["stack"]), jtu.tree_leaves(restacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_offload_serve_overlap_off_equals_serial():
+    cfg, model, params, reqs = _tiny_offload_setup(seed=3)
+    runtime = build_offload_runtime(model, params, use_placement=False,
+                                    rng=np.random.default_rng(2))
+    engine = ServingEngine(model, params, max_len=32, mode="offload",
+                           offload=runtime,
+                           scheduler=IOScheduler(overlap=False))
+    engine.serve(reqs)
+    p = engine.scheduler.summary()
+    assert p["overlapped_seconds_per_token"] == p["serial_seconds_per_token"]
+    assert p["overlap_efficiency"] == 0.0
