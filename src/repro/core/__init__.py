@@ -6,11 +6,14 @@ Hamiltonian-path search). Online stage: `collapse` (access collapse),
 `predictor` (activation prediction), `engine` (the batched serving pipeline),
 `pipeline` (double-buffered I/O–compute overlap model).
 """
-from repro.core.cache import (CacheStats, FIFOCache, LRUCache,
-                              LinkingAlignedCache, S3FIFOCache)
+from repro.core.cache import (ArrayLinkingAlignedCache, ArrayS3FIFOCache,
+                              CacheStats, FIFOCache, LRUCache,
+                              LinkingAlignedCache, LoopCounters, S3FIFOCache,
+                              make_linking_aligned_cache)
 from repro.core.coactivation import CoActivationStats, expected_io_ops, stats_from_masks
 from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector,
-                                 collapse_extents, collapse_positions, runs_from_positions)
+                                 collapse_extents, collapse_positions,
+                                 run_bounds_from_sorted, runs_from_positions)
 from repro.core.engine import (BatchStepResult, EngineConfig, OffloadEngine,
                                RequestStats, TokenStats)
 from repro.core.expert_placement import (expected_reads_per_token,

@@ -21,15 +21,26 @@ import numpy as np
 Extent = Tuple[int, int]  # (start_position, length) in physical neuron units
 
 
-def runs_from_positions(positions: np.ndarray) -> List[Extent]:
-    """Maximal contiguous runs from sorted unique physical positions."""
-    positions = np.unique(np.asarray(positions, dtype=np.int64))
+def run_bounds_from_sorted(positions: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(start_indices, end_indices) of maximal contiguous runs in an already
+    sorted-unique position array. Index arrays point INTO `positions`; the
+    whole computation is one diff + two concatenates (no per-element loop).
+    Shared by the read planner and the cache's segment classifier."""
     if positions.size == 0:
-        return []
+        empty = np.zeros(0, dtype=np.int64)
+        return empty, empty
     breaks = np.nonzero(np.diff(positions) > 1)[0]
     starts = np.concatenate([[0], breaks + 1])
     ends = np.concatenate([breaks, [positions.size - 1]])
-    return [(int(positions[s]), int(positions[e] - positions[s] + 1)) for s, e in zip(starts, ends)]
+    return starts, ends
+
+
+def runs_from_positions(positions: np.ndarray) -> List[Extent]:
+    """Maximal contiguous runs from physical positions (sorted + deduped here)."""
+    positions = np.unique(np.asarray(positions, dtype=np.int64))
+    starts, ends = run_bounds_from_sorted(positions)
+    return [(int(positions[s]), int(positions[e] - positions[s] + 1))
+            for s, e in zip(starts, ends)]
 
 
 def collapse_extents(extents: Sequence[Extent], threshold: int) -> List[Extent]:
@@ -77,13 +88,16 @@ class AdaptiveThreshold:
     on heavily scattered layouts (where balancing alone over-merges).
     """
 
-    def __init__(self, initial: int = 4, lo: int = 0, hi: int = 256,
+    def __init__(self, initial: Optional[int] = None, lo: int = 0, hi: int = 256,
                  break_even: Optional[float] = None) -> None:
         if break_even is not None:
-            initial = max(int(break_even), 0)
             lo = max(int(break_even // 2), 0)
             hi = max(int(break_even * 2), 1)
-        self.threshold = initial
+        if initial is None:
+            initial = max(int(break_even), 0) if break_even is not None else 4
+        # an explicit initial wins over the break-even anchor, but stays inside
+        # the adaptation band so one update() can't jump it across the range
+        self.threshold = min(max(int(initial), lo), hi)
         self.lo, self.hi = lo, hi
 
     def update(self, op_cost: float, byte_cost: float) -> int:

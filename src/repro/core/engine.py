@@ -4,13 +4,21 @@ Per token: predict activated neurons -> probe DRAM cache -> plan reads over the
 flash layout (with access collapse) -> simulated-UFS read -> admit into cache
 (linking-aligned) -> compute the sparse FFN from the bundles actually read.
 
-Two serving granularities:
+Three serving granularities:
   * `step(ids)`       — one activated set (one token / one request);
-  * `step_batch(ids_per_request)` — one decode *batch*: the activated sets of
-    all requests are merged, the cache is probed once, and all misses are
-    served by a single collapsed extent read (shared neurons are read once —
-    the batching win). Per-request hit/miss/I/O attribution comes back as
-    `RequestStats` so the serving engine can bill each request.
+  * `step_batch(ids_per_request)` — one decode *batch* from per-request id
+    arrays: the activated sets of all requests are merged, the cache is
+    probed once, and all misses are served by a single collapsed extent read
+    (shared neurons are read once — the batching win);
+  * `step_masks(masks)` — same batched step but straight from the [B, n]
+    boolean activation-mask matrix the predictor produces. This is the
+    serving hot path: the union, the per-request attribution
+    (searchsorted/bincount-style), and the run statistics are all computed
+    with array ops — no per-request or per-neuron Python iteration.
+
+Per-request attribution comes back columnar in `BatchStepResult`
+(`req_io_seconds` etc.); `per_request` materialises the `RequestStats` view
+on demand for reporting code.
 
 The engine is deliberately deterministic and fully instrumented: every paper
 figure (latency, IOPS, effective bandwidth, run lengths, cache behaviour) is
@@ -23,8 +31,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cache import LinkingAlignedCache
-from repro.core.collapse import runs_from_positions
+from repro.core.cache import make_linking_aligned_cache
 from repro.core.placement import PlacementResult
 from repro.core.storage import IOStats, ManagedReader, NeuronStore, UFSDevice
 
@@ -35,7 +42,8 @@ class TokenStats:
     n_hits: int = 0
     n_misses: int = 0
     io: IOStats = dataclasses.field(default_factory=IOStats)
-    run_lengths: List[int] = dataclasses.field(default_factory=list)
+    run_lengths: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
 
     @property
     def io_seconds(self) -> float:
@@ -64,11 +72,27 @@ class RequestStats:
 
 @dataclasses.dataclass
 class BatchStepResult:
-    """Result of one `step_batch`: merged payload + stats at both granularities."""
+    """Result of one batched step: merged payload + stats at both granularities.
+
+    Per-request attribution is stored columnar (one array per field, row =
+    request) so the serving engine can consume it without constructing
+    per-request Python objects; `per_request` builds the object view lazily.
+    """
     ids: np.ndarray                     # union of activated ids, sorted unique
-    data: np.ndarray                    # [len(ids), bundle_width] payloads
+    data: Optional[np.ndarray]          # [len(ids), bundle_width] payloads
     merged: TokenStats                  # what the device actually did (1 read)
-    per_request: List[RequestStats]     # attribution, len == n requests
+    req_n_activated: np.ndarray         # [R] int
+    req_n_misses: np.ndarray            # [R] int
+    req_io_seconds: np.ndarray          # [R] float, sums to merged.io.seconds
+    req_bytes_useful: np.ndarray        # [R] int
+
+    @property
+    def per_request(self) -> List[RequestStats]:
+        return [RequestStats(
+            n_activated=int(a), n_hits=int(a) - int(m), n_misses=int(m),
+            io_seconds=float(s), bytes_useful=int(b))
+            for a, m, s, b in zip(self.req_n_activated, self.req_n_misses,
+                                  self.req_io_seconds, self.req_bytes_useful)]
 
     def rows_for(self, request_ids: np.ndarray) -> np.ndarray:
         """Row indices into `data` for one request's activated ids."""
@@ -82,9 +106,12 @@ class EngineConfig:
     collapse: bool = True             # paper §5.1
     linking_aligned_cache: bool = True  # paper §5.2
     reads_per_bundle: int = 1         # 1 = bundled (LLMFlash/RIPPLE); n_mats = llama.cpp
-    initial_collapse_threshold: int = 4
+    # None anchors the adaptive collapse threshold at the device break-even
+    # gap; an explicit value overrides the anchor (clamped to its band)
+    initial_collapse_threshold: Optional[int] = None
     segment_min_len: int = 4
     segment_admit_p: float = 0.25
+    cache_impl: str = "array"         # "array" (vectorized) | "dict" (reference)
 
 
 class OffloadEngine:
@@ -134,11 +161,13 @@ class OffloadEngine:
             adaptive=self.cfg.collapse,
             initial_threshold=self.cfg.initial_collapse_threshold,
         )
-        self.cache = LinkingAlignedCache(
+        self.cache = make_linking_aligned_cache(
             capacity=int(self.cfg.cache_ratio * store.n_neurons),
+            n_keys=store.n_neurons,
             segment_min_len=self.cfg.segment_min_len,
             segment_admit_p=self.cfg.segment_admit_p,
             linking_aligned=self.cfg.linking_aligned_cache,
+            impl=self.cfg.cache_impl,
         )
         self.history: List[TokenStats] = []
 
@@ -148,6 +177,23 @@ class OffloadEngine:
         return cls(store=store, config=config)
 
     # ------------------------------------------------------------------
+    def _serve_union(self, union: np.ndarray) -> tuple[TokenStats, np.ndarray]:
+        """Probe + read + admit for one sorted-unique activated set; returns
+        (merged TokenStats, miss mask over `union`)."""
+        ts = TokenStats(n_activated=int(union.size))
+        hit_mask = self.cache.lookup_mask(union)
+        n_hits = int(np.count_nonzero(hit_mask))
+        ts.n_hits, ts.n_misses = n_hits, int(union.size) - n_hits
+        miss_mask = ~hit_mask
+        misses = union[miss_mask]
+        if misses.size:
+            _, io = self.reader.read(misses)
+            ts.io = io
+            ts.run_lengths = io.run_lengths
+            self.cache.admit(misses, self.placement.physical_of(misses))
+        self.history.append(ts)
+        return ts, miss_mask
+
     def step(self, activated_ids: np.ndarray) -> tuple[np.ndarray, TokenStats]:
         """Serve one token's activated-neuron set; returns (bundle data, stats).
 
@@ -155,18 +201,9 @@ class OffloadEngine:
         from DRAM at zero I/O cost; the payload is identical either way).
         """
         ids = np.unique(np.asarray(activated_ids, dtype=np.int64))
-        ts = TokenStats(n_activated=int(ids.size))
-        hits, misses = self.cache.lookup(ids)
-        ts.n_hits, ts.n_misses = int(hits.size), int(misses.size)
-        if misses.size:
-            _, io = self.reader.read(misses)
-            ts.io = io
-            phys = self.placement.physical_of(misses)
-            ts.run_lengths = [l for _, l in runs_from_positions(phys)]
-            self.cache.admit(misses, phys)
+        ts, _ = self._serve_union(ids)
         # payload for *all* activated neurons (hits came from DRAM)
         data = self.store.fetch(ids)
-        self.history.append(ts)
         return data, ts
 
     # ------------------------------------------------------------------
@@ -178,41 +215,58 @@ class OffloadEngine:
         — a neuron wanted by several requests is read (and billed to the
         device) once. `history` records the merged step, so `summary()`
         reflects real device activity; per-request attribution (hits, misses,
-        proportional share of the read time) rides along in the result.
+        proportional share of the read time) is one searchsorted + bincount
+        over the concatenated id sets.
         """
         id_sets = [np.unique(np.asarray(ids, dtype=np.int64))
                    for ids in ids_per_request]
-        union = (np.unique(np.concatenate(id_sets)) if id_sets
-                 else np.zeros((0,), dtype=np.int64))
-        merged = TokenStats(n_activated=int(union.size))
-        hits, misses = self.cache.lookup(union)
-        merged.n_hits, merged.n_misses = int(hits.size), int(misses.size)
-        if misses.size:
-            _, io = self.reader.read(misses)
-            merged.io = io
-            phys = self.placement.physical_of(misses)
-            merged.run_lengths = [l for _, l in runs_from_positions(phys)]
-            self.cache.admit(misses, phys)
+        all_ids = (np.concatenate(id_sets) if id_sets
+                   else np.zeros((0,), dtype=np.int64))
+        union = np.unique(all_ids)
+        merged, miss_mask = self._serve_union(union)
+        # per-request attribution: locate every requested id in the union,
+        # look up its hit/miss status, and histogram by request
+        sizes = np.array([s.size for s in id_sets], dtype=np.int64)
+        req_of = np.repeat(np.arange(len(id_sets)), sizes)
+        is_miss = (miss_mask[np.searchsorted(union, all_ids)] if all_ids.size
+                   else np.zeros(0, dtype=bool))
+        miss_counts = np.bincount(req_of, weights=is_miss,
+                                  minlength=len(id_sets)).astype(np.int64)
         data = self.store.fetch(union)
-        self.history.append(merged)
+        return self._attributed_result(union, data, merged, sizes, miss_counts)
 
-        miss_counts = [int(np.isin(ids, misses, assume_unique=True).sum())
-                       for ids in id_sets]
-        total_requested_misses = sum(miss_counts)
-        per_request = []
-        for ids, n_miss in zip(id_sets, miss_counts):
-            share = (n_miss / total_requested_misses
-                     if total_requested_misses else 0.0)
-            per_request.append(RequestStats(
-                n_activated=int(ids.size),
-                n_hits=int(ids.size) - n_miss,
-                n_misses=n_miss,
-                io_seconds=merged.io.seconds * share,
-                bytes_useful=n_miss * self.store.bundle_bytes
-                             * self.store.reads_per_bundle,
-            ))
-        return BatchStepResult(ids=union, data=data, merged=merged,
-                               per_request=per_request)
+    def step_masks(self, masks: np.ndarray,
+                   fetch_payload: bool = True) -> BatchStepResult:
+        """`step_batch` straight from the [B, n_neurons] bool mask matrix.
+
+        The union and the per-request miss counts come from column/row
+        reductions of the mask matrix — the decode inner loop never
+        materialises per-request id lists. With `fetch_payload=False` the
+        caller gathers payloads itself (e.g. into a reused staging buffer
+        via `NeuronStore.fetch_into`) and `result.data` is None.
+        """
+        masks = np.atleast_2d(np.asarray(masks, dtype=bool))
+        union = np.flatnonzero(masks.any(axis=0))
+        merged, miss_mask = self._serve_union(union)
+        miss_counts = masks[:, union[miss_mask]].sum(axis=1, dtype=np.int64)
+        sizes = masks.sum(axis=1, dtype=np.int64)
+        data = self.store.fetch(union) if fetch_payload else None
+        return self._attributed_result(union, data, merged, sizes, miss_counts)
+
+    def _attributed_result(self, union: np.ndarray, data: Optional[np.ndarray],
+                           merged: TokenStats, sizes: np.ndarray,
+                           miss_counts: np.ndarray) -> BatchStepResult:
+        total_missed = int(miss_counts.sum())
+        shares = (miss_counts / total_missed) if total_missed else \
+            np.zeros(len(miss_counts))
+        return BatchStepResult(
+            ids=union, data=data, merged=merged,
+            req_n_activated=sizes,
+            req_n_misses=miss_counts,
+            req_io_seconds=merged.io.seconds * shares,
+            req_bytes_useful=(miss_counts * self.store.bundle_bytes
+                              * self.store.reads_per_bundle),
+        )
 
     # ------------------------------------------------------------------
     def run_trace(self, masks: Sequence[np.ndarray]) -> List[TokenStats]:
@@ -231,7 +285,8 @@ class OffloadEngine:
         useful = sum(t.io.bytes_useful for t in self.history)
         read = sum(t.io.bytes_read for t in self.history)
         n_tok = max(len(self.history), 1)
-        runs = [l for t in self.history for l in t.run_lengths]
+        runs = (np.concatenate([np.asarray(t.run_lengths) for t in self.history])
+                if self.history else np.zeros(0, dtype=np.int64))
         return dict(
             tokens=len(self.history),
             io_seconds_per_token=io_s / n_tok,
@@ -241,8 +296,8 @@ class OffloadEngine:
             raw_bandwidth=read / io_s if io_s else 0.0,
             waste_ratio=(1.0 - useful / read) if read else 0.0,
             cache_hit_rate=self.cache.stats.hit_rate,
-            mean_run_length=float(np.mean(runs)) if runs else 0.0,
-            max_run_length=int(np.max(runs)) if runs else 0,
+            mean_run_length=float(np.mean(runs)) if runs.size else 0.0,
+            max_run_length=int(np.max(runs)) if runs.size else 0,
         )
 
     def reset_stats(self) -> None:

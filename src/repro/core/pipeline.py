@@ -22,15 +22,21 @@ sum compute), and overlap disabled => overlapped == serial.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 
 @dataclasses.dataclass
 class Stage:
-    """One pipeline stage: a layer's (read, compute) pair for one token."""
+    """One pipeline stage: a layer's (read, compute) pair for one token.
+
+    `flops` is the modeled work of the stage; it is only used when the
+    caller defers compute timing to `end_token(compute_seconds=...)`, which
+    apportions one end-of-token measurement across stages by FLOPs share.
+    """
     layer: int
     compute_seconds: float
     io_seconds: float
+    flops: float = 0.0
 
 
 @dataclasses.dataclass
@@ -84,13 +90,26 @@ class IOScheduler:
     def begin_token(self) -> None:
         self._stages = []
 
-    def record_stage(self, layer: int, compute_seconds: float,
-                     io_seconds: float) -> None:
+    def record_stage(self, layer: int, compute_seconds: float = 0.0,
+                     io_seconds: float = 0.0, flops: float = 0.0) -> None:
+        """Record one layer's stage. Callers either pass a measured
+        `compute_seconds` directly (legacy per-layer wall clocks, which
+        require a host sync per layer), or pass `flops` and defer timing to
+        `end_token(compute_seconds=...)` — the sync-free path: XLA dispatch
+        runs ahead all token, one end-of-token sync measures the whole token,
+        and the measurement is apportioned across stages by FLOPs share."""
         self._stages.append(Stage(layer=layer,
                                   compute_seconds=float(compute_seconds),
-                                  io_seconds=float(io_seconds)))
+                                  io_seconds=float(io_seconds),
+                                  flops=float(flops)))
 
-    def end_token(self) -> TokenTiming:
+    def end_token(self, compute_seconds: Optional[float] = None) -> TokenTiming:
+        if compute_seconds is not None and self._stages:
+            total_flops = sum(s.flops for s in self._stages)
+            for s in self._stages:
+                share = (s.flops / total_flops if total_flops
+                         else 1.0 / len(self._stages))
+                s.compute_seconds += compute_seconds * share
         serial = serial_latency(self._stages)
         over = overlapped_latency(self._stages) if self.overlap else serial
         timing = TokenTiming(serial_seconds=serial, overlapped_seconds=over,

@@ -24,7 +24,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector, Extent,
-                                 collapse_extents, runs_from_positions)
+                                 collapse_extents, run_bounds_from_sorted,
+                                 runs_from_positions)
 from repro.core.placement import PlacementResult, identity_placement
 
 
@@ -64,6 +65,12 @@ class IOStats:
     bytes_useful: int = 0
     seconds: float = 0.0
     n_requests: int = 0
+    # pre-collapse run lengths of the requested neurons in flash order — a
+    # by-product of read planning (the positions are already sorted there),
+    # recorded so callers don't re-derive runs from scratch. Not aggregated
+    # by `add`.
+    run_lengths: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def add(self, other: "IOStats") -> None:
         self.n_ops += other.n_ops
@@ -130,27 +137,56 @@ class NeuronStore:
             return np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype)
         return self._phys_data[self.placement.physical_of(logical_ids)]
 
+    def fetch_into(self, logical_ids: np.ndarray, out: np.ndarray) -> np.ndarray:
+        """`fetch` into a caller-provided buffer (no allocation): the serving
+        engine keeps one padded host staging buffer per layer and gathers
+        bundle payloads straight into it, so the decode loop performs a
+        single buffer fill + one host-to-device transfer per layer."""
+        logical_ids = np.asarray(logical_ids, dtype=np.int64)
+        if logical_ids.size:
+            np.take(self._phys_data, self.placement.physical_of(logical_ids),
+                    axis=0, out=out[:logical_ids.size])
+        return out
+
     # -- read planning -------------------------------------------------------
-    def plan_extents(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> List[Extent]:
-        phys = self.placement.physical_of(np.asarray(logical_ids, dtype=np.int64))
-        extents = runs_from_positions(phys)
+    def _plan(self, phys: np.ndarray,
+              collapse_threshold: int) -> Tuple[List[Extent], np.ndarray]:
+        """(read extents, pre-collapse run lengths) from physical positions."""
+        phys_sorted = np.unique(phys)
+        starts, ends = run_bounds_from_sorted(phys_sorted)
+        extents = [(int(phys_sorted[s]), int(phys_sorted[e] - phys_sorted[s] + 1))
+                   for s, e in zip(starts, ends)]
+        run_lengths = (phys_sorted[ends] - phys_sorted[starts] + 1
+                       if starts.size else np.zeros(0, dtype=np.int64))
         if collapse_threshold > 0:
             extents = collapse_extents(extents, collapse_threshold)
+        return extents, run_lengths
+
+    def plan_extents(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> List[Extent]:
+        phys = self.placement.physical_of(np.asarray(logical_ids, dtype=np.int64))
+        extents, _ = self._plan(phys, collapse_threshold)
         return extents
 
     def read(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> Tuple[np.ndarray, IOStats]:
-        """Read bundles for logical ids; returns (data [k, w] in id order, stats)."""
+        """Read bundles for logical ids; returns (data [k, w] in id order, stats).
+
+        `stats.run_lengths` carries the pre-collapse run lengths (the maximal
+        contiguous runs of the requested neurons in flash order) — computed
+        here once from the already-sorted positions instead of by callers.
+        """
         logical_ids = np.asarray(logical_ids, dtype=np.int64)
         stats = IOStats(n_requests=1)
         if logical_ids.size == 0:
+            stats.run_lengths = np.zeros(0, dtype=np.int64)
             return np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype), stats
-        extents = self.plan_extents(logical_ids, collapse_threshold)
+        phys = self.placement.physical_of(logical_ids)
+        extents, stats.run_lengths = self._plan(phys, collapse_threshold)
         n_read = sum(length for _, length in extents)
+        n_unique = int(stats.run_lengths.sum())   # runs partition unique ids
         stats.n_ops = len(extents) * self.reads_per_bundle
         stats.bytes_read = n_read * self.bundle_bytes * self.reads_per_bundle
-        stats.bytes_useful = int(np.unique(logical_ids).size) * self.bundle_bytes * self.reads_per_bundle
+        stats.bytes_useful = n_unique * self.bundle_bytes * self.reads_per_bundle
         stats.seconds = self.device.read_time(stats.n_ops, stats.bytes_read)
-        phys = self.placement.physical_of(logical_ids)
         data = self._phys_data[phys]  # payload identical regardless of extent plan
         return data, stats
 
@@ -158,7 +194,11 @@ class NeuronStore:
 class ManagedReader:
     """Read path with adaptive collapse + bottleneck detection (paper §5.1)."""
 
-    def __init__(self, store: NeuronStore, adaptive: bool = True, initial_threshold: int = 4) -> None:
+    def __init__(self, store: NeuronStore, adaptive: bool = True,
+                 initial_threshold: Optional[int] = None) -> None:
+        """`initial_threshold=None` starts at the device break-even gap; an
+        explicit value wins over the anchor (clamped to the adaptation band,
+        which stays break-even-derived either way)."""
         self.store = store
         self.adaptive = adaptive
         break_even = store.device.bandwidth_max / (

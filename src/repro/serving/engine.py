@@ -62,10 +62,25 @@ class Result:
     overlapped_seconds: float = 0.0
 
 
+def sample_tokens(logits: jnp.ndarray, temperatures, key) -> jnp.ndarray:
+    """Per-row sampling: row i is greedy if temperatures[i] <= 0, else
+    categorical at its own temperature — one vectorized call for the whole
+    decode batch, so mixed-temperature groups need no per-request loop."""
+    hot = np.asarray(temperatures) > 0
+    greedy_all = not bool(hot.any())
+    greedy = jnp.argmax(logits, axis=-1)
+    if greedy_all:                  # common all-greedy case: skip sampling
+        return greedy
+    temps = jnp.asarray(temperatures, dtype=logits.dtype)
+    safe = jnp.where(jnp.asarray(hot), temps, jnp.ones_like(temps))
+    sampled = jax.random.categorical(key, logits / safe[:, None], axis=-1)
+    return jnp.where(jnp.asarray(hot), sampled, greedy)
+
+
 def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
+    """Single shared temperature for every row (legacy helper)."""
+    return sample_tokens(logits, np.full((logits.shape[0],), temperature,
+                                         dtype=np.float32), key)
 
 
 # ---------------------------------------------------------------------------
@@ -91,6 +106,7 @@ class OffloadedFFNRuntime:
         ]
         self.predictors = predictors
         self.n_mats = 3 if cfg.activation == "silu" else 2
+        self._staging: Dict[tuple, np.ndarray] = {}
 
     # -- single merged activated set (legacy accounting interface) ----------
     def ffn_apply(self, layer: int, h: np.ndarray, oracle_mask: Optional[np.ndarray] = None):
@@ -119,20 +135,47 @@ class OffloadedFFNRuntime:
         Returns (y [B, d], BatchStepResult). The FFN is computed once over
         the union payload — rows not activated for a request contribute 0
         under ReLU, and over-coverage from sharing neurons across requests is
-        exact for the same reason.
+        exact for the same reason. The engine consumes the mask matrix
+        directly (`step_masks`) and the union payload is gathered into a
+        reused pad-bucketed staging buffer: one buffer fill + one
+        host-to-device transfer per layer, no per-request id lists and no
+        fresh concatenation allocs in the decode inner loop.
         """
         if masks is None:
             assert self.predictors is not None, "need predictors or oracle masks"
             masks = np.asarray(predict_mask(self.predictors[layer], h))
         masks = np.atleast_2d(np.asarray(masks))
-        ids_per_request = [np.nonzero(row)[0] for row in masks]
-        res = self.engines[layer].step_batch(ids_per_request)
-        y = self._ffn_from_bundles(h, res.data)
+        res = self.engines[layer].step_masks(masks, fetch_payload=False)
+        y = self._ffn_from_ids(layer, h, res.ids)
         return y, res
 
     # activated-set sizes vary every (step, layer); without bucketing each
     # fresh size triggers a new XLA compilation of the sparse-FFN matmuls.
     PAD_BUCKET = 128
+
+    def _staging_buffer(self, width: int, dtype, padded: int) -> np.ndarray:
+        """Reused pinned-style host buffer for pad-bucketed bundle payloads,
+        grown geometrically and shared by all layers of equal bundle width."""
+        buf = self._staging.get((width, dtype))
+        if buf is None or buf.shape[0] < padded:
+            size = max(padded, 2 * buf.shape[0] if buf is not None else padded)
+            buf = np.zeros((size, width), dtype=dtype)
+            self._staging[(width, dtype)] = buf
+        return buf
+
+    def _ffn_from_ids(self, layer: int, h: jnp.ndarray,
+                      ids: np.ndarray) -> jnp.ndarray:
+        store = self.engines[layer].store
+        k = int(ids.size)
+        padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
+        buf = self._staging_buffer(store.bundle_width,
+                                   store._phys_data.dtype, padded)
+        store.fetch_into(ids, buf)
+        buf[k:padded] = 0
+        valid = jnp.arange(padded) < k
+        return sparse_ffn_from_bundles(
+            h, jnp.asarray(buf[:padded]), self.cfg.d_model, self.n_mats,
+            activation=self.cfg.activation, valid_mask=valid)
 
     def _ffn_from_bundles(self, h: jnp.ndarray, data: np.ndarray) -> jnp.ndarray:
         k = data.shape[0]
@@ -150,13 +193,27 @@ class OffloadedFFNRuntime:
         return len(self.engines)
 
     def io_summary(self) -> dict:
+        """Aggregate I/O metrics across layers.
+
+        Ratio metrics (bandwidth, hit rate, mean run length) are computed
+        from summed numerators and denominators — a mean of per-layer ratios
+        would weight layers equally regardless of how much traffic each
+        actually served."""
+        tokens = [t for e in self.engines for t in e.history]
+        io_s = sum(t.io.seconds for t in tokens)
+        useful = sum(t.io.bytes_useful for t in tokens)
+        hits = sum(e.cache.stats.hits for e in self.engines)
+        accesses = sum(e.cache.stats.hits + e.cache.stats.misses
+                       for e in self.engines)
+        runs = (np.concatenate([np.asarray(t.run_lengths) for t in tokens])
+                if tokens else np.zeros(0, dtype=np.int64))
         per_layer = [e.summary() for e in self.engines]
-        io_s = sum(s["io_seconds_per_token"] for s in per_layer)
         return {
-            "io_seconds_per_token": io_s,
-            "mean_run_length": float(np.mean([s["mean_run_length"] for s in per_layer])),
-            "effective_bandwidth": float(np.mean([s["effective_bandwidth"] for s in per_layer])),
-            "cache_hit_rate": float(np.mean([s["cache_hit_rate"] for s in per_layer])),
+            "io_seconds_per_token": sum(s["io_seconds_per_token"]
+                                        for s in per_layer),
+            "mean_run_length": float(runs.mean()) if runs.size else 0.0,
+            "effective_bandwidth": useful / io_s if io_s else 0.0,
+            "cache_hit_rate": hits / accesses if accesses else 0.0,
             "ops_per_token": sum(s["ops_per_token"] for s in per_layer),
         }
 
@@ -211,6 +268,7 @@ class ServingEngine:
     # -- resident (dense jit) path ------------------------------------------
     def _serve_group_resident(self, group: List[Request], key) -> List[Result]:
         toks = np.stack([r.prompt for r in group])
+        temps = np.array([r.temperature for r in group], dtype=np.float32)
         B, T = toks.shape
         cache = self.model.init_cache(B, self.max_len, swa=self.swa)
         t0 = time.perf_counter()
@@ -220,7 +278,7 @@ class ServingEngine:
         t_prefill = time.perf_counter() - t0
         max_new = max(r.max_new_tokens for r in group)
         outs = [[] for _ in group]
-        cur = sample_token(logits[:, -1], group[0].temperature, key)
+        cur = sample_tokens(logits[:, -1], temps, key)
         t0 = time.perf_counter()
         for step in range(max_new):
             for i in range(B):
@@ -229,7 +287,7 @@ class ServingEngine:
             logits, cache = self._decode(
                 self.params, cur[:, None].astype(jnp.int32),
                 jnp.int32(T + step), cache)
-            cur = sample_token(logits[:, 0], group[0].temperature, key)
+            cur = sample_tokens(logits[:, 0], temps, key)
         jax.block_until_ready(cur)
         t_decode = time.perf_counter() - t0
         return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
@@ -256,6 +314,7 @@ class ServingEngine:
         cfg = self.model.cfg
         runtime = self.offload
         toks = np.stack([r.prompt for r in group])
+        temps = np.array([r.temperature for r in group], dtype=np.float32)
         B, T = toks.shape
         cache = self.model.init_cache(B, self.max_len, swa=self.swa)
         t0 = time.perf_counter()
@@ -275,9 +334,15 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in group)
         outs = [[] for _ in group]
         req_io = np.zeros(B)
-        cur = sample_token(logits[:, -1], group[0].temperature, key)
-        stage_clock = [time.perf_counter()]
 
+        # Sync-free layerwise decode: the FFN override never blocks on its
+        # output — XLA dispatch runs ahead across layers while the engine
+        # (host-side) serves the NEXT layer's masks and payload gather. The
+        # only per-layer host materialisation is the small activation-mask
+        # matrix the engine needs. One end-of-token sync measures the whole
+        # token; the scheduler apportions it across stages by modeled FFN
+        # FLOPs instead of per-layer wall clocks (which would each force a
+        # device sync).
         def ffn_override(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
             h2 = normed2[:, 0]                                     # [B, d]
             if w_ups is not None:
@@ -285,36 +350,33 @@ class ServingEngine:
             else:
                 masks = None                                       # predictor path
             y, res = runtime.ffn_apply_batch(dense_idx, h2, masks)
-            y.block_until_ready()
-            now = time.perf_counter()
-            # stage compute = host+device time since the previous FFN stage
-            # finished (mixer of this layer + this FFN); stage io = the merged
-            # simulated read. The scheduler overlaps them across layers.
-            self.scheduler.record_stage(dense_idx, now - stage_clock[0],
-                                        res.merged.io.seconds)
-            stage_clock[0] = now
-            for i, rs in enumerate(res.per_request):
-                req_io[i] += rs.io_seconds
+            flops = 2.0 * B * res.merged.n_activated * runtime.n_mats * cfg.d_model
+            self.scheduler.record_stage(dense_idx,
+                                        io_seconds=res.merged.io.seconds,
+                                        flops=flops)
+            np.add(req_io, res.req_io_seconds, out=req_io)
             return y[:, None]
 
+        cur = sample_tokens(logits[:, -1], temps, key)
         t0 = time.perf_counter()
         overlapped_total = 0.0
         for step in range(max_new):
             for i in range(B):
                 outs[i].append(int(cur[i]))
             key = jax.random.fold_in(key, step)
+            token_t0 = time.perf_counter()
             x = embed_tokens(self.params["embed"], cur[:, None].astype(jnp.int32), cfg)
             self.scheduler.begin_token()
-            stage_clock[0] = time.perf_counter()
             h, cache_groups = transformer.stack_decode_step_layerwise(
                 param_groups, x, jnp.int32(T + step), cache_groups, cfg,
                 ffn_override=ffn_override)
-            timing = self.scheduler.end_token()
-            overlapped_total += timing.overlapped_seconds
             h = apply_norm(self.params["final_norm"], h, cfg)
             logits = unembed(self.params["embed"], h, cfg)
-            cur = sample_token(logits[:, 0], group[0].temperature, key)
-        jax.block_until_ready(cur)
+            cur = sample_tokens(logits[:, 0], temps, key)
+            cur.block_until_ready()                   # ONE sync per token
+            timing = self.scheduler.end_token(
+                compute_seconds=time.perf_counter() - token_t0)
+            overlapped_total += timing.overlapped_seconds
         t_decode = time.perf_counter() - t0
         return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
                        prefill_seconds=t_prefill, decode_seconds=t_decode,

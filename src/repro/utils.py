@@ -67,3 +67,32 @@ def stable_hash(*ints: int) -> int:
 def stable_uniform(*ints: int) -> float:
     """Deterministic uniform in [0, 1) from integer keys."""
     return stable_hash(*ints) / float(1 << 64)
+
+
+_SM64_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM64_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM64_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def stable_hash_array(*keys) -> np.ndarray:
+    """Vectorized `stable_hash`: bitwise-identical to the scalar version.
+
+    Each key may be a scalar int or an int array; arrays broadcast. The hot
+    use is hashing one (salt, tick) pair against thousands of neuron ids in a
+    single call instead of a per-id Python loop.
+    """
+    with np.errstate(over="ignore"):
+        arrs = np.broadcast_arrays(*[np.asarray(k, dtype=np.uint64) for k in keys])
+        h = np.full(arrs[0].shape, _SM64_GAMMA, dtype=np.uint64)
+        for v in arrs:
+            h ^= v + _SM64_GAMMA
+            h *= _SM64_M1
+            h ^= h >> np.uint64(27)
+            h *= _SM64_M2
+            h ^= h >> np.uint64(31)
+    return h
+
+
+def stable_uniform_array(*keys) -> np.ndarray:
+    """Vectorized `stable_uniform`: uniforms in [0, 1), one per broadcast key."""
+    return stable_hash_array(*keys) / float(1 << 64)

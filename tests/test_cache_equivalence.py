@@ -1,0 +1,163 @@
+"""Array-native cache == reference dict S3-FIFO, decision for decision.
+
+The tentpole claim of the vectorized hot path: `ArrayLinkingAlignedCache`
+makes exactly the decisions of the reference `LinkingAlignedCache` — same
+hit/miss masks, same admissions and rejections, same evictions and ghost
+promotions, and the same FIFO queue orders (including frequencies), step by
+step, on randomized traces. Queue-order equality is the strong form: any
+divergence in eviction interleaving would surface there before it could
+surface in aggregate stats.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (ArrayLinkingAlignedCache, LinkingAlignedCache,
+                              make_linking_aligned_cache)
+from repro.core.engine import EngineConfig, OffloadEngine
+from repro.utils import stable_hash, stable_hash_array, stable_uniform_array
+
+
+def _drive_pair(rng, n_keys, capacity, steps, seg_p, min_len, aligned):
+    ref = LinkingAlignedCache(capacity, segment_min_len=min_len,
+                              segment_admit_p=seg_p, linking_aligned=aligned)
+    arr = ArrayLinkingAlignedCache(capacity, n_keys, segment_min_len=min_len,
+                                   segment_admit_p=seg_p, linking_aligned=aligned)
+    perm = rng.permutation(n_keys)   # random physical layout
+    for t in range(steps):
+        ids = set()
+        for _ in range(int(rng.integers(1, 4))):   # contiguous blocks -> runs
+            start = int(rng.integers(0, n_keys))
+            ids.update(range(start, min(n_keys, start + int(rng.integers(1, 10)))))
+        ids.update(rng.choice(n_keys, size=int(rng.integers(1, max(2, n_keys // 4))),
+                              replace=False).tolist())
+        ids = np.array(sorted(ids), dtype=np.int64)
+
+        m_ref = ref.lookup_mask(ids)
+        m_arr = arr.lookup_mask(ids)
+        assert np.array_equal(m_ref, m_arr), f"hit-mask divergence at step {t}"
+        misses = ids[~m_ref]
+        phys = perm[misses]
+        ref.admit(misses, phys)
+        arr.admit(misses, phys)
+        assert ref.cache.queues() == arr.cache.queues(), \
+            f"queue divergence at step {t}"
+        for f in ("hits", "misses", "admitted", "rejected", "evicted",
+                  "ghost_promotions"):
+            assert getattr(ref.stats, f) == getattr(arr.stats, f), (t, f)
+        assert np.array_equal(ref.resident_ids(), arr.resident_ids())
+    return ref, arr
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_decision_equivalence_randomized_traces(seed):
+    """Random capacities (incl. tiny, which stress every eviction corner),
+    random admission parameters, random id streams with planted runs."""
+    rng = np.random.default_rng(seed)
+    n_keys = int(rng.integers(30, 800))
+    capacity = int(rng.integers(0, max(1, n_keys // 2)))
+    _drive_pair(rng, n_keys, capacity, steps=25,
+                seg_p=float(rng.uniform(0, 1)),
+                min_len=int(rng.integers(2, 8)),
+                aligned=bool(rng.integers(0, 2)))
+
+
+def test_equivalence_steady_state_no_fallback():
+    """At serving-like scale the array cache must stay on its bulk path —
+    the exact sequential replay is for pathological inputs only."""
+    rng = np.random.default_rng(0)
+    n_keys, cap = 8192, 819
+    _, arr = _drive_pair(rng, n_keys, cap, steps=30, seg_p=0.25,
+                         min_len=4, aligned=True)
+    assert arr.cache.fallback_batches == 0
+    lc = arr.loop_counters
+    assert lc.probe == lc.classify == lc.sample == 0
+
+
+def test_reference_counts_per_neuron_iterations():
+    rng = np.random.default_rng(1)
+    ref, arr = _drive_pair(rng, 256, 64, steps=10, seg_p=0.5, min_len=3,
+                           aligned=True)
+    assert ref.loop_counters.probe > 0          # one iteration per probed id
+    assert ref.loop_counters.per_neuron_total > 0
+    assert arr.loop_counters.per_neuron_total == 0
+
+
+def test_stable_uniform_array_matches_scalar():
+    """Admission sampling must be bitwise-identical across implementations."""
+    ids = np.arange(0, 3000, 7, dtype=np.int64)
+    assert np.array_equal(
+        stable_hash_array(5, 42, ids),
+        np.array([stable_hash(5, 42, int(i)) for i in ids], dtype=np.uint64))
+    u = stable_uniform_array(5, 42, ids)
+    assert np.all((u >= 0) & (u < 1))
+
+
+def test_factory_returns_decision_identical_impls():
+    a = make_linking_aligned_cache(32, n_keys=128, impl="array")
+    d = make_linking_aligned_cache(32, n_keys=128, impl="dict")
+    assert isinstance(a, ArrayLinkingAlignedCache)
+    assert isinstance(d, LinkingAlignedCache)
+    ids = np.arange(0, 128, 3)
+    ma, md = a.lookup_mask(ids), d.lookup_mask(ids)
+    assert np.array_equal(ma, md)
+    a.admit(ids, ids.copy())
+    d.admit(ids, ids.copy())
+    assert np.array_equal(a.resident_ids(), d.resident_ids())
+
+
+# -- engine-level regressions ------------------------------------------------
+
+def _mask_batches(rng, n, B, steps, p=0.06):
+    return [rng.random((B, n)) < p for _ in range(steps)]
+
+
+def test_engine_array_vs_dict_cache_identical_steps():
+    """The whole engine (probe -> collapse read -> admit) makes identical
+    decisions under either cache implementation."""
+    rng = np.random.default_rng(2)
+    n = 512
+    bundles = rng.standard_normal((n, 8)).astype(np.float32)
+    ea = OffloadEngine(bundles, config=EngineConfig(cache_impl="array"))
+    ed = OffloadEngine(bundles, config=EngineConfig(cache_impl="dict"))
+    for masks in _mask_batches(rng, n, 3, 20):
+        ra = ea.step_masks(masks)
+        rd = ed.step_batch([np.flatnonzero(r) for r in masks])
+        assert np.array_equal(ra.ids, rd.ids)
+        assert ra.merged.n_hits == rd.merged.n_hits
+        assert ra.merged.io.seconds == rd.merged.io.seconds
+        assert np.array_equal(ra.merged.run_lengths, rd.merged.run_lengths)
+        assert np.array_equal(ra.req_n_misses, rd.req_n_misses)
+        np.testing.assert_allclose(ra.req_io_seconds, rd.req_io_seconds)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_per_request_io_sums_to_merged_read(seed):
+    """Regression: attribution conserves the merged read time exactly, and
+    hit/miss counts stay consistent per request."""
+    rng = np.random.default_rng(seed)
+    n = 256
+    bundles = rng.standard_normal((n, 8)).astype(np.float32)
+    eng = OffloadEngine(bundles)
+    for masks in _mask_batches(rng, n, int(rng.integers(1, 5)), 8, p=0.1):
+        res = eng.step_masks(masks)
+        assert abs(res.req_io_seconds.sum() - res.merged.io.seconds) < 1e-12
+        for rs in res.per_request:
+            assert rs.n_hits + rs.n_misses == rs.n_activated
+        assert int(res.req_n_activated.sum()) == int(masks.sum())
+
+
+def test_step_masks_equals_step_batch_payload_and_rows():
+    rng = np.random.default_rng(3)
+    n = 384
+    bundles = rng.standard_normal((n, 8)).astype(np.float32)
+    e1 = OffloadEngine(bundles)
+    e2 = OffloadEngine(bundles)
+    masks = rng.random((4, n)) < 0.08
+    r1 = e1.step_masks(masks)
+    r2 = e2.step_batch([np.flatnonzero(r) for r in masks])
+    np.testing.assert_array_equal(r1.data, r2.data)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    ids0 = np.flatnonzero(masks[0])
+    np.testing.assert_array_equal(r1.data[r1.rows_for(ids0)], bundles[ids0])

@@ -66,3 +66,16 @@ def test_bottleneck_detector_disables_collapse():
     for _ in range(4):
         det.record(nbytes=0.2e9, seconds=1.0)
     assert det.collapse_enabled
+
+
+def test_adaptive_threshold_explicit_initial_wins_over_anchor():
+    """Satellite fix: break_even used to clobber an explicit `initial`."""
+    at = AdaptiveThreshold(initial=7, break_even=10.0)   # band [5, 20]
+    assert (at.lo, at.hi) == (5, 20)
+    assert at.threshold == 7
+    # explicit values outside the band clamp instead of being discarded
+    assert AdaptiveThreshold(initial=1, break_even=10.0).threshold == 5
+    assert AdaptiveThreshold(initial=99, break_even=10.0).threshold == 20
+    # None -> anchor at the break-even gap (the previous default behaviour)
+    assert AdaptiveThreshold(break_even=10.0).threshold == 10
+    assert AdaptiveThreshold().threshold == 4

@@ -61,3 +61,29 @@ def test_io_bound_and_compute_bound_limits():
     # pure io: serialised on the single channel, overlapped == sum(io)
     io = [Stage(i, 0.0, 1e-3) for i in range(5)]
     assert abs(overlapped_latency(io) - 5e-3) < 1e-12
+
+
+def test_end_token_apportions_compute_by_flops():
+    """Sync-free mode: stages carry modeled FLOPs; one end-of-token
+    measurement is split across stages by FLOPs share."""
+    sch = IOScheduler(overlap=False)
+    sch.begin_token()
+    sch.record_stage(0, io_seconds=1e-3, flops=1e9)
+    sch.record_stage(1, io_seconds=2e-3, flops=3e9)
+    timing = sch.end_token(compute_seconds=4e-3)
+    # serial = io (3ms) + compute (4ms split 1:3)
+    assert abs(timing.serial_seconds - 7e-3) < 1e-12
+    # per-stage split is visible through the overlap model too
+    sch2 = IOScheduler(overlap=True)
+    sch2.begin_token()
+    sch2.record_stage(0, io_seconds=1e-3, flops=1e9)
+    sch2.record_stage(1, io_seconds=2e-3, flops=3e9)
+    t2 = sch2.end_token(compute_seconds=4e-3)
+    assert t2.overlapped_seconds <= timing.serial_seconds
+    # zero-flops stages split the measurement evenly instead of dropping it
+    sch3 = IOScheduler(overlap=False)
+    sch3.begin_token()
+    sch3.record_stage(0, io_seconds=0.0)
+    sch3.record_stage(1, io_seconds=0.0)
+    t3 = sch3.end_token(compute_seconds=2e-3)
+    assert abs(t3.serial_seconds - 2e-3) < 1e-12

@@ -152,3 +152,66 @@ def test_offload_serve_overlap_off_equals_serial():
     p = engine.scheduler.summary()
     assert p["overlapped_seconds_per_token"] == p["serial_seconds_per_token"]
     assert p["overlap_efficiency"] == 0.0
+
+
+def test_mixed_temperature_group_honors_each_request(rng):
+    """Satellite fix: both serve paths used group[0].temperature for every
+    request. Greedy rows must stay exact argmax even when other rows in the
+    same group sample at high temperature."""
+    cfg = get_config("granite-3-2b", reduced=True, vocab_size=64)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(7))
+    prompts = [rng.integers(0, 64, 8).astype(np.int32) for _ in range(3)]
+    greedy_only = ServingEngine(model, params, max_len=48).serve(
+        [Request(uid=i, prompt=p, max_new_tokens=4)
+         for i, p in enumerate(prompts)], seed=0)
+    mixed = ServingEngine(model, params, max_len=48).serve(
+        [Request(uid=0, prompt=prompts[0], max_new_tokens=4, temperature=5.0),
+         Request(uid=1, prompt=prompts[1], max_new_tokens=4),   # greedy
+         Request(uid=2, prompt=prompts[2], max_new_tokens=4, temperature=2.0)],
+        seed=0)
+    # the greedy request is unaffected by its neighbours' temperatures
+    assert mixed[1].tokens == greedy_only[1].tokens
+    # sampling at high temperature actually samples (not argmax) for at
+    # least one of the hot rows on this seed
+    assert (mixed[0].tokens != greedy_only[0].tokens
+            or mixed[2].tokens != greedy_only[2].tokens)
+
+
+def test_sample_tokens_vectorized_per_row():
+    from repro.serving.engine import sample_tokens
+    logits = jnp.asarray([[0.1, 2.0, -1.0], [5.0, 0.0, 0.0]])
+    toks = sample_tokens(logits, np.array([0.0, 0.0]), jax.random.PRNGKey(0))
+    assert toks.tolist() == [1, 0]
+    # greedy rows stay argmax in a mixed batch
+    mixed = sample_tokens(logits, np.array([3.0, 0.0]), jax.random.PRNGKey(0))
+    assert int(mixed[1]) == 0
+
+
+def test_io_summary_aggregates_from_sums(rng):
+    """Satellite fix: effective_bandwidth / cache_hit_rate were means of
+    per-layer ratios; they must be traffic-weighted (summed numerators over
+    summed denominators)."""
+    d, n = 16, 128
+    cfg = get_config("granite-3-2b", reduced=True, d_model=d, activation="relu")
+    w = FFNWeights(
+        w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32))
+    bundles = np.asarray(make_bundles(w))
+    runtime = OffloadedFFNRuntime(cfg, [bundles, bundles],
+                                  [identity_placement(n), identity_placement(n)])
+    h = rng.standard_normal((2, d)).astype(np.float32)
+    masks = np.asarray(h @ np.asarray(w.w_up).T > 0)
+    # drive layer 0 with 5x the traffic of layer 1
+    for _ in range(5):
+        runtime.ffn_apply_batch(0, jnp.asarray(h), masks)
+    runtime.ffn_apply_batch(1, jnp.asarray(h), masks)
+    summ = runtime.io_summary()
+    tokens = [t for e in runtime.engines for t in e.history]
+    io_s = sum(t.io.seconds for t in tokens)
+    useful = sum(t.io.bytes_useful for t in tokens)
+    hits = sum(e.cache.stats.hits for e in runtime.engines)
+    accesses = sum(e.cache.stats.hits + e.cache.stats.misses
+                   for e in runtime.engines)
+    assert summ["effective_bandwidth"] == (useful / io_s if io_s else 0.0)
+    assert summ["cache_hit_rate"] == hits / accesses

@@ -84,3 +84,51 @@ def test_managed_reader_adapts():
 def test_ufs31_slower_than_ufs40():
     d40, d31 = UFSDevice(**UFS40), UFSDevice(**UFS31)
     assert d31.read_time(100, 10 << 20) > d40.read_time(100, 10 << 20)
+
+
+def test_managed_reader_honors_explicit_initial_threshold():
+    """Satellite fix: `initial_threshold` used to be silently overwritten by
+    the break-even anchor. An explicit value must now win (clamped to the
+    anchor-derived adaptation band); None keeps the anchor start."""
+    from repro.core.collapse import AdaptiveThreshold
+
+    data = np.zeros((256, 256), np.float32)     # 1KB bundles
+    store = NeuronStore(data)
+    break_even = store.device.bandwidth_max / (
+        store.device.iops_max * store.bundle_bytes)
+    anchored = ManagedReader(store)             # default: anchor at break-even
+    assert anchored.threshold.threshold == max(int(break_even), 0)
+    explicit = ManagedReader(store, initial_threshold=int(break_even) + 3)
+    assert explicit.threshold.threshold == int(break_even) + 3
+    # out-of-band values clamp to the adaptation band instead of vanishing
+    low = ManagedReader(store, initial_threshold=0)
+    assert low.threshold.threshold == low.threshold.lo
+    high = ManagedReader(store, initial_threshold=10 ** 9)
+    assert high.threshold.threshold == high.threshold.hi
+    # EngineConfig.initial_collapse_threshold is live config again
+    from repro.core.engine import EngineConfig, OffloadEngine
+    eng = OffloadEngine(data, config=EngineConfig(
+        initial_collapse_threshold=int(break_even) + 3))
+    assert eng.reader.threshold.threshold == int(break_even) + 3
+
+
+def test_read_reports_precollapse_run_lengths():
+    """`NeuronStore.read` computes run lengths from its already-sorted
+    positions; the engine reuses them instead of re-deriving runs."""
+    data = np.zeros((64, 4), np.float32)
+    store = NeuronStore(data)                   # identity placement
+    ids = np.array([0, 1, 2, 10, 20, 21])
+    _, stats = store.read(ids, collapse_threshold=50)   # collapse merges ops
+    np.testing.assert_array_equal(np.sort(stats.run_lengths), [1, 2, 3])
+    assert stats.n_ops == 1                     # collapsed into one extent
+
+
+def test_fetch_into_matches_fetch():
+    rng = np.random.default_rng(5)
+    data = rng.standard_normal((64, 8)).astype(np.float32)
+    store = NeuronStore(data)
+    ids = np.array([3, 9, 11, 40])
+    buf = np.zeros((16, 8), np.float32)
+    store.fetch_into(ids, buf)
+    np.testing.assert_array_equal(buf[:4], store.fetch(ids))
+    assert np.all(buf[4:] == 0)
