@@ -1,4 +1,5 @@
-"""Batched + pipelined serving sweep: batch size x overlap x placement.
+"""Batched + pipelined serving sweep: batch size x overlap x placement,
+plus the MEASURED prefetch-on/off end-to-end decode comparison.
 
 The paper's end-to-end latency win comes from three multiplicative effects:
 placement/collapse shrink each read, batching merges reads across the decode
@@ -10,13 +11,34 @@ Per-layer FFN compute is modeled from FLOPs at a fixed smartphone throughput
 (2 * n_active * n_mats * d_model MACs at ``CPU_GFLOPS``), the same style of
 accounting as the paper's latency breakdown; I/O comes from the engine's
 device model. Rows report serial (compute + io) and overlapped latency.
+
+Run standalone to EXECUTE the overlap instead of modeling it: the e2e arm
+drives `ServingEngine(mode="offload")` with prefetch off (serial engine work
+on the decode critical path) and on (background I/O worker fed by the trained
+cross-layer lookahead, mis-predictions topped up synchronously), measures
+host decode tokens/s for both, checks oracle-lookahead token identity, times
+the offline placement search with the reference vs batched greedy loop, and
+writes ``BENCH_prefetch.json``:
+
+  PYTHONPATH=src python benchmarks/serving_pipeline.py [--quick] [--check]
+
+``--check`` is the CI gate: non-zero exit unless pipelined decode tokens/s
+>= serial within tolerance AND the oracle arm is token-identical to serial.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+import sys
 import time
 from typing import List
 
 import numpy as np
+
+if __package__ in (None, ""):                     # standalone script mode
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
 from benchmarks.common import (N_SIM_LAYERS, Row, build_sim_model, make_engines,
                                model_geometry)
@@ -89,4 +111,345 @@ def serving_pipeline() -> List[Row]:
                 "host wall-clock decode throughput of the engine loop "
                 "(simulation driver time, not modeled latency)",
             ))
+    # prefetch on/off: the MEASURED executed-overlap arm (engine decode loop)
+    pf = bench_prefetch_engine_loop(quick=True)
+    for tag in ("serial", "pipelined"):
+        rows.append((
+            f"prefetch/engine_loop/{tag}_tokens_per_s",
+            pf[f"{tag}_tokens_per_s"],
+            "measured decode throughput of the offload engine layer loop "
+            + ("with the async layer-ahead prefetch worker"
+               if tag == "pipelined" else "with serial engine steps")
+            + " (emulated device latency, linked layout)",
+        ))
+    rows.append((
+        "prefetch/engine_loop/measured_hidden_us_per_token",
+        pf["measured"]["hidden_seconds_per_token"] * 1e6,
+        f"I/O host+device time hidden behind compute; efficiency "
+        f"{pf['measured']['overlap_efficiency'] * 100:.1f}%",
+    ))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Executed overlap: end-to-end prefetch on/off (BENCH_prefetch.json)
+# ---------------------------------------------------------------------------
+
+def _decode_tokens_per_s(results) -> float:
+    new_tokens = sum(len(r.tokens) for r in results)
+    return new_tokens / max(max(r.decode_seconds for r in results), 1e-12)
+
+
+def bench_prefetch_engine_loop(quick: bool = False) -> dict:
+    """EXECUTED overlap, isolated to the storage pipeline: the engine-driven
+    decode layer loop (the same loop shape as BENCH_hotpath's serving_decode)
+    with prefetch off vs on, under temporally-faithful device emulation.
+
+    Serial: per layer, the engine step stalls on the emulated flash read
+    (`EngineConfig.emulate_read_latency` — the modeled UFS read time is
+    actually waited out, exactly as a real link would stall the pipeline),
+    then the sparse FFN computes, then the next layer's step begins — the
+    layer dependency is enforced by blocking on each layer's FFN output.
+    Pipelined: the I/O worker serves layer k+1's begin phase (probe + read
+    stall + staging gather) while the serving thread blocks on layer k's FFN
+    compute — a sleeping worker costs no CPU, so the flash stall is hidden
+    even on a saturated host. Three arms: serial, pipelined with exact
+    lookahead (the speculation upper bound), and pipelined with a degraded
+    lookahead (10% of true neurons dropped + 2% random noise added) that
+    exercises the synchronous top-up path every layer.
+
+    Geometry: n=8192 neurons/block on the linked (cluster-contiguous) layout,
+    fp16-bundle I/O accounting (`bundle_bytes=8192`, a d_model≈2k 2-matrix
+    model) over a reduced f32 compute payload — the same accounting split
+    benchmarks/common.py uses.
+    """
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.engine import EngineConfig
+    from repro.core.placement import PlacementResult
+    from repro.core.trace import SyntheticTraceConfig, synthetic_masks
+    from repro.serving.engine import OffloadedFFNRuntime
+
+    # quick mode trims tokens/repeats, not geometry — below ~8k neurons the
+    # per-layer flash stall is too small to measure the overlap against
+    n, d, L, batch = 8192, 128, 2, 8
+    T, warm = (12, 8) if quick else (24, 10)
+    repeats = 2 if quick else 3
+    n_clusters = 64
+
+    struct_rng = np.random.default_rng(0)
+    perm = struct_rng.permutation(n)
+    cluster_of = np.empty(n, dtype=np.int64)
+    for c in range(n_clusters):
+        cluster_of[perm[c::n_clusters]] = c
+    order = np.argsort(cluster_of, kind="stable")
+    inv = np.empty(n, dtype=np.int64)
+    inv[order] = np.arange(n)
+    pl = PlacementResult(order, inv, 0, 0.0, "bench-linked")
+
+    cfg = get_config("opt-350m", reduced=True, d_model=d, d_ff=n,
+                     vocab_size=128)
+    masks = [synthetic_masks(
+        SyntheticTraceConfig(n_neurons=n, n_clusters=n_clusters,
+                             clusters_per_token=7, member_p=0.9, noise_p=0.005,
+                             zipf_alpha=1.1, seed=l, structure_seed=0),
+        T + warm) for l in range(L)]
+
+    def bm(layer, t):
+        return masks[layer][[(t + r * 7) % (T + warm) for r in range(batch)]]
+
+    rng = np.random.default_rng(2)
+    bundles = rng.standard_normal((n, 2 * d)).astype(np.float32)
+    ecfg = EngineConfig(emulate_read_latency=True)
+    h = jnp.asarray(rng.standard_normal((batch, d)).astype(np.float32))
+
+    def make_rt():
+        return OffloadedFFNRuntime(cfg, [bundles] * L, [pl] * L,
+                                   engine_cfg=ecfg, bundle_bytes=8192)
+
+    def serial_run(rt, lo, hi):
+        t0 = time.perf_counter()
+        for t in range(lo, hi):
+            for layer in range(L):
+                y, _ = rt.ffn_apply_batch(layer, h, bm(layer, t))
+                y.block_until_ready()     # layer k+1's mask depends on y
+        return (hi - lo) * batch / (time.perf_counter() - t0)
+
+    def pipe_run(rt, lo, hi, scheduler=None, degrade_rng=None):
+        def spec_of(m):
+            if degrade_rng is None:
+                return m
+            s = m & (degrade_rng.random(m.shape) > 0.1)   # drop 10%
+            return s | (degrade_rng.random(m.shape) < 0.02)  # add 2% noise
+        rt.start_prefetch()
+        t0 = time.perf_counter()
+        try:
+            for t in range(lo, hi):
+                tok0 = time.perf_counter()
+                if scheduler is not None:
+                    scheduler.begin_token()
+                rt.begin_layer(0, spec_of(bm(0, t)))
+                for layer in range(L):
+                    if layer + 1 < L:
+                        rt.begin_layer(layer + 1, spec_of(bm(layer + 1, t)))
+                    y, res, meas = rt.complete_layer(layer, h, bm(layer, t))
+                    y.block_until_ready()
+                    if scheduler is not None:
+                        scheduler.record_stage(layer,
+                                               io_seconds=res.merged.io.seconds,
+                                               flops=1.0, measured=meas)
+                if scheduler is not None:
+                    scheduler.end_token(
+                        wall_seconds=time.perf_counter() - tok0)
+        finally:
+            rt.stop_prefetch()
+        return (hi - lo) * batch / (time.perf_counter() - t0)
+
+    rt_s, rt_p, rt_d = make_rt(), make_rt(), make_rt()
+    serial_run(rt_s, 0, warm)
+    pipe_run(rt_p, 0, warm)
+    pipe_run(rt_d, 0, warm, degrade_rng=np.random.default_rng(9))
+    best = {"serial": 0.0, "pipelined": 0.0, "degraded": 0.0}
+    sched = IOScheduler(overlap=True)
+    summary = None
+    for _ in range(repeats):                     # arms interleaved per repeat
+        best["serial"] = max(best["serial"], serial_run(rt_s, warm, warm + T))
+        sched.reset()
+        tok_s = pipe_run(rt_p, warm, warm + T, scheduler=sched)
+        if tok_s > best["pipelined"]:
+            best["pipelined"] = tok_s
+            summary = sched.summary()
+        best["degraded"] = max(best["degraded"], pipe_run(
+            rt_d, warm, warm + T, degrade_rng=np.random.default_rng(9)))
+    return {
+        "serial_tokens_per_s": round(best["serial"], 1),
+        "pipelined_tokens_per_s": round(best["pipelined"], 1),
+        "degraded_lookahead_tokens_per_s": round(best["degraded"], 1),
+        "improvement": round(best["pipelined"] / best["serial"], 3),
+        "degraded_improvement": round(best["degraded"] / best["serial"], 3),
+        "topup_neurons_total": rt_d.topup_total,
+        "measured": {
+            "wall_seconds_per_token": summary["measured_wall_seconds_per_token"],
+            "serial_seconds_per_token": summary["measured_serial_seconds_per_token"],
+            "hidden_seconds_per_token": summary["measured_hidden_seconds_per_token"],
+            "exposed_seconds_per_token": summary["measured_exposed_seconds_per_token"],
+            "io_busy_seconds_per_token": summary["measured_io_busy_seconds_per_token"],
+            "overlap_efficiency": summary["measured_overlap_efficiency"],
+        },
+        "meta": {
+            "n_neurons": n, "d_payload": d, "n_layers": L, "batch": batch,
+            "tokens": T, "repeats": repeats, "bundle_bytes": 8192,
+            "device": "UFS4.0 (emulated latency)", "layout": "linked",
+        },
+    }
+
+
+def bench_prefetch_e2e(quick: bool = False) -> dict:
+    """Serial vs pipelined offload decode through the full ServingEngine.
+
+    Serial decode pays (device compute) + (host engine work) per layer on one
+    thread; pipelined decode runs the engine work for layer k+1 on the I/O
+    worker (driven by the trained cross-layer lookahead) while the device
+    computes layer k. Both arms serve identical requests on the LINKED layout
+    (co-activation placement). An oracle-lookahead arm checks token identity
+    against serial; the lookahead arm's tokens are compared as well.
+
+    NOTE on throughput: on a CPU-only host the e2e decode loop is dominated
+    by eager per-op dispatch (GIL-held Python), which leaves the worker
+    little true concurrency to exploit — the tokens/s columns here are
+    reported for transparency, while the engine-loop benchmark above
+    isolates the storage pipeline where the overlap actually executes. The
+    token-identity columns are the correctness acceptance.
+
+    Methodology: one full-length warmup serve per arm (compiles every
+    pad-bucket FFN shape), then the arms are timed back to back inside each
+    repeat so host-load drift cancels out of the ratio; the reported number
+    is each arm's best repeat (same convention as engine_hotpath).
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import (Request, ServingEngine,
+                                      build_offload_runtime)
+
+    d_model, d_ff = 192, 2048      # engine host work ~ per-layer FFN compute
+    n_tokens = 12 if quick else 24
+    repeats = 2 if quick else 4
+    batch = 4
+    cfg = get_config("opt-350m", reduced=True, d_model=d_model, d_ff=d_ff,
+                     n_layers=2, vocab_size=512)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 512, 16).astype(np.int32),
+                    max_new_tokens=n_tokens) for i in range(batch)]
+
+    t0 = time.perf_counter()
+    rt_serial = build_offload_runtime(model, params,
+                                      rng=np.random.default_rng(1))
+    calib_seconds = time.perf_counter() - t0
+    rt_oracle = build_offload_runtime(model, params,
+                                      rng=np.random.default_rng(1))
+    rt_pipe = build_offload_runtime(model, params,
+                                    rng=np.random.default_rng(1),
+                                    train_lookahead=True)
+    engines = {
+        "serial": ServingEngine(model, params, max_len=n_tokens + 24,
+                                mode="offload", offload=rt_serial),
+        "oracle": ServingEngine(model, params, max_len=n_tokens + 24,
+                                mode="offload", offload=rt_oracle,
+                                prefetch=True, lookahead="oracle"),
+        "pipelined": ServingEngine(model, params, max_len=n_tokens + 24,
+                                   mode="offload", offload=rt_pipe,
+                                   prefetch=True),
+    }
+    best = {name: 0.0 for name in engines}
+    tokens = {}
+    summaries = {}
+    for name, eng in engines.items():            # full-length compile warmup
+        tokens[name] = [r.tokens for r in eng.serve(reqs)]
+    for _ in range(repeats):                     # arms interleaved per repeat
+        for name, eng in engines.items():
+            eng.offload.reset_stats()
+            eng.scheduler.reset()
+            res = eng.serve(reqs)
+            tok_s = _decode_tokens_per_s(res)
+            if tok_s > best[name]:
+                best[name] = tok_s
+                summaries[name] = eng.scheduler.summary()
+
+    s = summaries["pipelined"]
+    return {
+        "serial_tokens_per_s": round(best["serial"], 1),
+        "pipelined_tokens_per_s": round(best["pipelined"], 1),
+        "oracle_tokens_per_s": round(best["oracle"], 1),
+        "improvement": round(best["pipelined"] / best["serial"], 3),
+        "oracle_token_identical": tokens["serial"] == tokens["oracle"],
+        "lookahead_token_identical": tokens["serial"] == tokens["pipelined"],
+        "measured": {
+            "wall_seconds_per_token": s["measured_wall_seconds_per_token"],
+            "serial_seconds_per_token": s["measured_serial_seconds_per_token"],
+            "hidden_seconds_per_token": s["measured_hidden_seconds_per_token"],
+            "exposed_seconds_per_token": s["measured_exposed_seconds_per_token"],
+            "io_busy_seconds_per_token": s["measured_io_busy_seconds_per_token"],
+            "overlap_efficiency": s["measured_overlap_efficiency"],
+        },
+        "modeled_overlap_efficiency": s["overlap_efficiency"],
+        "topup_neurons_total": rt_pipe.topup_total,
+        "calibration_seconds": round(calib_seconds, 2),
+        "meta": {
+            "d_model": d_model, "d_ff": d_ff,
+            "n_layers": cfg.n_layers, "batch": batch, "repeats": repeats,
+            "new_tokens_per_request": n_tokens, "layout": "linked (placement)",
+        },
+    }
+
+
+
+
+def bench_placement_search(quick: bool = False) -> dict:
+    """Offline placement search: reference per-edge greedy loop vs the
+    batched array-native implementation (bit-identical placements asserted
+    while timing) — the satellite's before/after `search_seconds`."""
+    from repro.core.coactivation import stats_from_masks
+    from repro.core.placement import search_placement
+    from repro.core.trace import SyntheticTraceConfig, synthetic_masks
+
+    n = 1024 if quick else 4096
+    tcfg = SyntheticTraceConfig(n_neurons=n, n_clusters=64, seed=7)
+    masks = synthetic_masks(tcfg, 100 if quick else 200)
+    dist = stats_from_masks(masks).distance_matrix()
+    batched = search_placement(dist, mode="exact", greedy_impl="batched")
+    loop = search_placement(dist, mode="exact", greedy_impl="loop")
+    assert np.array_equal(batched.placement, loop.placement), \
+        "batched placement diverged from the reference loop"
+    return {
+        "n_neurons": n,
+        "reference_search_seconds": round(loop.search_seconds, 3),
+        "batched_search_seconds": round(batched.search_seconds, 3),
+        "speedup": round(loop.search_seconds / batched.search_seconds, 2),
+        "bit_identical": True,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes for the CI smoke run")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless pipelined decode tokens/s >= "
+                         "serial within tolerance and the oracle-lookahead "
+                         "arm is token-identical to serial (the CI gate)")
+    ap.add_argument("--tolerance", type=float, default=0.85,
+                    help="--check passes if pipelined >= tolerance * serial "
+                         "(shared CI runners are noisy; the committed "
+                         "BENCH_prefetch.json shows the real improvement)")
+    ap.add_argument("--out", default="BENCH_prefetch.json")
+    args = ap.parse_args()
+
+    report = {
+        "engine_loop": bench_prefetch_engine_loop(quick=args.quick),
+        "e2e": bench_prefetch_e2e(quick=args.quick),
+        "placement_search": bench_placement_search(quick=args.quick),
+        "quick": args.quick,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(json.dumps(report, indent=2))
+    if args.check:
+        el, e2e = report["engine_loop"], report["e2e"]
+        if not e2e["oracle_token_identical"]:
+            sys.exit("pipelined decode (oracle lookahead) is not "
+                     "token-identical to serial")
+        floor = args.tolerance * el["serial_tokens_per_s"]
+        if el["pipelined_tokens_per_s"] < floor:
+            sys.exit(f"pipelined decode regressed: "
+                     f"{el['pipelined_tokens_per_s']} tok/s < "
+                     f"{args.tolerance} * serial ({floor:.1f})")
+        print(f"prefetch gate OK: pipelined {el['pipelined_tokens_per_s']} "
+              f"tok/s vs serial {el['serial_tokens_per_s']} "
+              f"({el['improvement']}x, emulated device latency), "
+              f"oracle token-identical e2e")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prefetch", action="store_true",
+                    help="serve the RIPPLE arm through the async layer-ahead "
+                         "prefetch pipeline (trained cross-layer lookahead)")
     args = ap.parse_args()
 
     # a small ReLU model (the paper's OPT setting, reduced for CPU)
@@ -55,14 +58,17 @@ def main() -> None:
                   offload=warm).serve(warm_reqs)
     runs = {}
     for name, use_placement in (("RIPPLE", True), ("LLMFlash", False)):
+        prefetch = args.prefetch and use_placement
         runtime = build_offload_runtime(
             model, params, rng=np.random.default_rng(1),
             use_placement=use_placement,
+            train_lookahead=prefetch,
             engine_cfg=EngineConfig(collapse=use_placement,
                                     linking_aligned_cache=use_placement))
         engine = ServingEngine(model, params, max_len=args.tokens + 40,
                                mode="offload", offload=runtime,
-                               scheduler=IOScheduler(overlap=True))
+                               scheduler=IOScheduler(overlap=True),
+                               prefetch=prefetch)
         results = engine.serve(reqs)
         runs[name] = (runtime, engine, results)
 

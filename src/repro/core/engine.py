@@ -16,6 +16,17 @@ Three serving granularities:
     (searchsorted/bincount-style), and the run statistics are all computed
     with array ops — no per-request or per-neuron Python iteration.
 
+Split-phase steps (the asynchronous prefetch pipeline): `begin_step_masks`
+runs the probe + read planning + collapsed read for a *speculated* mask
+matrix (a lookahead prediction of the next layer's activated set, issued by
+a background I/O worker while the device computes the current layer), and
+`complete_step` later reconciles against the true masks — any truly
+activated neuron the speculation missed is served by a synchronous top-up
+read (correctness is never traded for overlap), then admission, history,
+and per-request attribution happen exactly as in the one-shot step.
+`step_masks` IS `complete_step(begin_step_masks(masks))`, so the split is
+stats-identical to the fused step by construction.
+
 Per-request attribution comes back columnar in `BatchStepResult`
 (`req_io_seconds` etc.); `per_request` materialises the `RequestStats` view
 on demand for reporting code.
@@ -27,6 +38,7 @@ derived from `TokenStats` streams produced here.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -78,13 +90,19 @@ class BatchStepResult:
     request) so the serving engine can consume it without constructing
     per-request Python objects; `per_request` builds the object view lazily.
     """
-    ids: np.ndarray                     # union of activated ids, sorted unique
+    ids: np.ndarray                     # served union (activated ∪ prefetched), sorted unique
     data: Optional[np.ndarray]          # [len(ids), bundle_width] payloads
-    merged: TokenStats                  # what the device actually did (1 read)
+    merged: TokenStats                  # what the device actually did
     req_n_activated: np.ndarray         # [R] int
     req_n_misses: np.ndarray            # [R] int
     req_io_seconds: np.ndarray          # [R] float, sums to merged.io.seconds
     req_bytes_useful: np.ndarray        # [R] int
+    # split-phase extras: neurons the lookahead speculation missed, served by
+    # the synchronous top-up read (always empty on the fused path, where the
+    # speculated union IS the true union and n_speculated == ids.size).
+    topup_ids: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
+    n_speculated: int = 0               # speculated-union size
 
     @property
     def per_request(self) -> List[RequestStats]:
@@ -101,6 +119,21 @@ class BatchStepResult:
 
 
 @dataclasses.dataclass
+class PendingStep:
+    """In-flight half of a split-phase step (`begin_step_masks` output).
+
+    Produced on the prefetch worker while the device computes the previous
+    layer; consumed by `complete_step` on the serving thread. Holds exactly
+    the state the complete phase needs to reconcile speculation with truth.
+    """
+    masks: np.ndarray          # [B, n] speculated activation masks
+    union: np.ndarray          # speculated union, sorted unique
+    miss_mask: np.ndarray      # over `union`: not DRAM-resident at begin time
+    io: IOStats                # the speculative collapsed read (0 ops if none)
+    data: Optional[np.ndarray]  # [len(union), w] payloads if requested
+
+
+@dataclasses.dataclass
 class EngineConfig:
     cache_ratio: float = 0.1          # fraction of neurons resident in DRAM
     collapse: bool = True             # paper §5.1
@@ -112,6 +145,20 @@ class EngineConfig:
     segment_min_len: int = 4
     segment_admit_p: float = 0.25
     cache_impl: str = "array"         # "array" (vectorized) | "dict" (reference)
+    # FFN compute source for the serving runtime: "bundles" evaluates the
+    # sparse FFN straight from the staged flash payloads; "segments" routes
+    # through the Pallas segment-gather kernel (kernels/sparse_ffn.py) over
+    # seg_size-aligned blocks of the permuted physical layout — exact for
+    # ReLU models because block over-coverage contributes zero.
+    ffn_kernel: str = "bundles"       # "bundles" | "segments"
+    kernel_seg_size: int = 128
+    # Temporally faithful device emulation: actually wait out each modeled
+    # flash read (a real UFS link stalls the pipeline for exactly this long —
+    # DMA time, not CPU time). Off by default (pure accounting); the measured
+    # prefetch benchmark turns it on for BOTH arms so serial decode stalls on
+    # "flash" exactly where a phone would, and the pipelined arm's win is the
+    # overlap a real device would allow.
+    emulate_read_latency: bool = False
 
 
 class OffloadEngine:
@@ -177,33 +224,59 @@ class OffloadEngine:
         return cls(store=store, config=config)
 
     # ------------------------------------------------------------------
+    def _probe_and_read(self, union: np.ndarray) -> tuple[np.ndarray, IOStats]:
+        """Begin-phase primitive: probe the cache for one sorted-unique set and
+        serve all misses with one collapsed read. Returns (miss mask over
+        `union`, read IOStats). Mutates cache hit/miss stats and the adaptive
+        reader, but does NOT admit or append history — that is the
+        complete-phase (`_admit_and_record`), so a background worker can run
+        this ahead of time."""
+        hit_mask = self.cache.lookup_mask(union)
+        miss_mask = ~hit_mask
+        misses = union[miss_mask]
+        io = IOStats()
+        io.run_lengths = np.zeros(0, dtype=np.int64)
+        if misses.size:
+            _, io = self.reader.read(misses, fetch_payload=False)
+            if self.cfg.emulate_read_latency:
+                time.sleep(io.seconds)
+        return miss_mask, io
+
+    def _admit_and_record(self, n_activated: int, n_misses: int,
+                          misses: np.ndarray, io: IOStats,
+                          run_lengths: np.ndarray) -> TokenStats:
+        """Complete-phase primitive: admit this step's missed neurons into the
+        DRAM cache and record the merged TokenStats."""
+        ts = TokenStats(n_activated=n_activated,
+                        n_hits=n_activated - n_misses, n_misses=n_misses,
+                        io=io, run_lengths=run_lengths)
+        if misses.size:
+            self.cache.admit(misses, self.placement.physical_of(misses))
+        self.history.append(ts)
+        return ts
+
     def _serve_union(self, union: np.ndarray) -> tuple[TokenStats, np.ndarray]:
         """Probe + read + admit for one sorted-unique activated set; returns
         (merged TokenStats, miss mask over `union`)."""
-        ts = TokenStats(n_activated=int(union.size))
-        hit_mask = self.cache.lookup_mask(union)
-        n_hits = int(np.count_nonzero(hit_mask))
-        ts.n_hits, ts.n_misses = n_hits, int(union.size) - n_hits
-        miss_mask = ~hit_mask
-        misses = union[miss_mask]
-        if misses.size:
-            _, io = self.reader.read(misses)
-            ts.io = io
-            ts.run_lengths = io.run_lengths
-            self.cache.admit(misses, self.placement.physical_of(misses))
-        self.history.append(ts)
+        miss_mask, io = self._probe_and_read(union)
+        ts = self._admit_and_record(int(union.size),
+                                    int(np.count_nonzero(miss_mask)),
+                                    union[miss_mask], io, io.run_lengths)
         return ts, miss_mask
 
-    def step(self, activated_ids: np.ndarray) -> tuple[np.ndarray, TokenStats]:
+    def step(self, activated_ids: np.ndarray,
+             fetch_payload: bool = True) -> tuple[Optional[np.ndarray], TokenStats]:
         """Serve one token's activated-neuron set; returns (bundle data, stats).
 
         Returned bundles are in `activated_ids` order (cache hits are served
         from DRAM at zero I/O cost; the payload is identical either way).
+        With `fetch_payload=False` the caller gathers the payload itself
+        (e.g. into a reused staging buffer via `NeuronStore.fetch_into`).
         """
         ids = np.unique(np.asarray(activated_ids, dtype=np.int64))
         ts, _ = self._serve_union(ids)
         # payload for *all* activated neurons (hits came from DRAM)
-        data = self.store.fetch(ids)
+        data = self.store.fetch(ids) if fetch_payload else None
         return data, ts
 
     # ------------------------------------------------------------------
@@ -244,21 +317,108 @@ class OffloadEngine:
         materialises per-request id lists. With `fetch_payload=False` the
         caller gathers payloads itself (e.g. into a reused staging buffer
         via `NeuronStore.fetch_into`) and `result.data` is None.
+
+        Implemented as `complete_step(begin_step_masks(masks))` — the fused
+        step and the split-phase pipeline share every probe/read/admit line,
+        so the two are stats-identical by construction.
+        """
+        return self.complete_step(self.begin_step_masks(masks, fetch_payload))
+
+    # -- split-phase (asynchronous prefetch) ---------------------------
+    def begin_step_masks(self, masks: np.ndarray,
+                         fetch_payload: bool = True) -> PendingStep:
+        """Begin one batched step from (possibly speculative) masks: probe the
+        cache and issue the single collapsed read for all misses. Safe to run
+        on a background worker — admission, history, and attribution are
+        deferred to `complete_step` on the serving thread. Each engine serves
+        one FFN block, so a worker running layer k+1's begin phase never
+        shares mutable state with layer k's complete phase.
         """
         masks = np.atleast_2d(np.asarray(masks, dtype=bool))
         union = np.flatnonzero(masks.any(axis=0))
-        merged, miss_mask = self._serve_union(union)
-        miss_counts = masks[:, union[miss_mask]].sum(axis=1, dtype=np.int64)
-        sizes = masks.sum(axis=1, dtype=np.int64)
+        miss_mask, io = self._probe_and_read(union)
         data = self.store.fetch(union) if fetch_payload else None
-        return self._attributed_result(union, data, merged, sizes, miss_counts)
+        return PendingStep(masks=masks, union=union, miss_mask=miss_mask,
+                           io=io, data=data)
+
+    def complete_step(self, pending: PendingStep,
+                      true_masks: Optional[np.ndarray] = None) -> BatchStepResult:
+        """Finish a split-phase step, reconciling speculation against truth.
+
+        With `true_masks=None` (or equal to the speculated masks) this is
+        exactly the tail of the fused `step_masks`. Otherwise, truly activated
+        neurons the speculation missed are probed and served by a synchronous
+        top-up read — NEVER skipped — and the merged stats cover everything
+        the device actually did (both reads, both probes). Admission happens
+        once over all missed neurons, exactly like a fused step over the same
+        set. Per-request attribution bills the combined read time by each
+        request's share of truly-requested misses, so `req_io_seconds` sums
+        exactly to `merged.io.seconds`; speculative over-reads that no request
+        wanted are split evenly (they are the speculation's cost, not any one
+        request's).
+        """
+        spec_miss = pending.union[pending.miss_mask]
+        io, run_lengths = pending.io, pending.io.run_lengths
+        n_spec_hits = int(pending.union.size) - int(spec_miss.size)
+        if true_masks is None:
+            masks = pending.masks
+            extra = topup_miss = np.zeros(0, dtype=np.int64)
+            n_extra_hits = 0
+        else:
+            masks = np.atleast_2d(np.asarray(true_masks, dtype=bool))
+            true_union = np.flatnonzero(masks.any(axis=0))
+            extra = np.setdiff1d(true_union, pending.union, assume_unique=True)
+            topup_miss = np.zeros(0, dtype=np.int64)
+            n_extra_hits = 0
+            if extra.size:                       # lookahead under-prediction
+                hit2 = self.cache.lookup_mask(extra)
+                topup_miss = extra[~hit2]
+                n_extra_hits = int(np.count_nonzero(hit2))
+                if topup_miss.size:              # synchronous top-up read
+                    _, io2 = self.reader.read(topup_miss, fetch_payload=False)
+                    if self.cfg.emulate_read_latency:
+                        time.sleep(io2.seconds)
+                    io = dataclasses.replace(io)  # don't mutate the pending copy
+                    io.add(io2)
+                    run_lengths = np.concatenate([run_lengths, io2.run_lengths])
+        all_miss = (np.concatenate([spec_miss, topup_miss]) if topup_miss.size
+                    else spec_miss)
+        served = int(pending.union.size) + int(extra.size)
+        merged = self._admit_and_record(
+            served, served - n_spec_hits - n_extra_hits, all_miss, io,
+            run_lengths)
+        sizes = masks.sum(axis=1, dtype=np.int64)
+        # per-request misses: each request's truly-activated neurons that the
+        # device had to read this step (speculated or topped up)
+        if all_miss.size:
+            miss_cols = np.sort(all_miss)
+            miss_counts = masks[:, miss_cols].sum(axis=1, dtype=np.int64)
+        else:
+            miss_counts = np.zeros(masks.shape[0], dtype=np.int64)
+        ids = (np.sort(np.concatenate([pending.union, extra])) if extra.size
+               else pending.union)
+        # keep the documented data contract ([len(ids), w] in ids order) when
+        # the begin phase fetched a payload that top-ups have since widened
+        data = (self.store.fetch(ids) if pending.data is not None and extra.size
+                else pending.data)
+        res = self._attributed_result(ids, data, merged, sizes, miss_counts)
+        res.topup_ids = extra
+        res.n_speculated = int(pending.union.size)
+        return res
 
     def _attributed_result(self, union: np.ndarray, data: Optional[np.ndarray],
                            merged: TokenStats, sizes: np.ndarray,
                            miss_counts: np.ndarray) -> BatchStepResult:
         total_missed = int(miss_counts.sum())
-        shares = (miss_counts / total_missed) if total_missed else \
-            np.zeros(len(miss_counts))
+        if total_missed:
+            shares = miss_counts / total_missed
+        elif merged.io.seconds > 0:
+            # pure over-speculation: bytes were read but no request asked for
+            # them — split the read time evenly so attribution still sums
+            # exactly to the merged read
+            shares = np.full(len(miss_counts), 1.0 / max(len(miss_counts), 1))
+        else:
+            shares = np.zeros(len(miss_counts))
         return BatchStepResult(
             ids=union, data=data, merged=merged,
             req_n_activated=sizes,

@@ -18,6 +18,14 @@ Schedule (prefetch depth 1, one I/O channel, one compute stream):
 
 Invariants (tested): overlapped <= serial, overlapped >= max(sum io,
 sum compute), and overlap disabled => overlapped == serial.
+
+MEASURED mode: when the serving engine runs the real prefetch pipeline it
+passes per-stage host measurements (`StageMeasurement`) and the per-token
+wall clock to `end_token(wall_seconds=...)` — `summary()` then reports the
+`measured_*` counterparts next to the analytic model: wall per token, I/O
+worker busy time, serving-thread blocked/top-up time, hidden time
+(busy − blocked, clamped at 0), and the measured overlap efficiency. The
+analytic schedule predicts; the measured columns are what actually happened.
 """
 from __future__ import annotations
 
@@ -40,14 +48,48 @@ class Stage:
 
 
 @dataclasses.dataclass
+class StageMeasurement:
+    """Measured host timings of one pipelined stage (prefetch serving mode).
+
+    `io_host_seconds` is the wall time the background I/O worker spent on the
+    stage's begin phase (cache probe + read planning + staging gather);
+    `blocked_seconds` is how long the serving thread actually waited for that
+    prefetch; `topup_seconds` is the synchronous complete-phase work on the
+    serving thread (mis-prediction top-up + admission + attribution).
+    """
+    io_host_seconds: float = 0.0
+    blocked_seconds: float = 0.0
+    topup_seconds: float = 0.0
+
+
+@dataclasses.dataclass
 class TokenTiming:
     serial_seconds: float
     overlapped_seconds: float
     n_stages: int
+    # Measured counterpart (zero unless the caller ran the real prefetch
+    # pipeline and passed wall/stage measurements): what actually happened on
+    # this host, as opposed to the analytic schedule above.
+    measured_wall_seconds: float = 0.0      # real end-to-end token time
+    measured_io_busy_seconds: float = 0.0   # worker time spent on I/O stages
+    measured_exposed_seconds: float = 0.0   # serving-thread waits + top-ups
 
     @property
     def hidden_seconds(self) -> float:
         return self.serial_seconds - self.overlapped_seconds
+
+    @property
+    def measured_hidden_seconds(self) -> float:
+        """I/O host time that did NOT extend the token: worker busy time minus
+        the time the serving thread actually spent waiting for it."""
+        return max(0.0, self.measured_io_busy_seconds
+                   - self.measured_exposed_seconds)
+
+    @property
+    def measured_serial_seconds(self) -> float:
+        """What this token would have cost with the same work fully serial:
+        the measured wall clock plus the I/O host time that was hidden."""
+        return self.measured_wall_seconds + self.measured_hidden_seconds
 
 
 def overlapped_latency(stages: Sequence[Stage]) -> float:
@@ -86,24 +128,33 @@ class IOScheduler:
         self.overlap = overlap
         self.history: List[TokenTiming] = []
         self._stages: List[Stage] = []
+        self._measured: List[StageMeasurement] = []
 
     def begin_token(self) -> None:
         self._stages = []
+        self._measured = []
 
     def record_stage(self, layer: int, compute_seconds: float = 0.0,
-                     io_seconds: float = 0.0, flops: float = 0.0) -> None:
+                     io_seconds: float = 0.0, flops: float = 0.0,
+                     measured: Optional[StageMeasurement] = None) -> None:
         """Record one layer's stage. Callers either pass a measured
         `compute_seconds` directly (legacy per-layer wall clocks, which
         require a host sync per layer), or pass `flops` and defer timing to
         `end_token(compute_seconds=...)` — the sync-free path: XLA dispatch
         runs ahead all token, one end-of-token sync measures the whole token,
-        and the measurement is apportioned across stages by FLOPs share."""
+        and the measurement is apportioned across stages by FLOPs share.
+        The prefetch pipeline additionally passes `measured` host timings so
+        `end_token(wall_seconds=...)` can reconcile the analytic schedule
+        against what actually happened."""
         self._stages.append(Stage(layer=layer,
                                   compute_seconds=float(compute_seconds),
                                   io_seconds=float(io_seconds),
                                   flops=float(flops)))
+        if measured is not None:
+            self._measured.append(measured)
 
-    def end_token(self, compute_seconds: Optional[float] = None) -> TokenTiming:
+    def end_token(self, compute_seconds: Optional[float] = None,
+                  wall_seconds: Optional[float] = None) -> TokenTiming:
         if compute_seconds is not None and self._stages:
             total_flops = sum(s.flops for s in self._stages)
             for s in self._stages:
@@ -114,8 +165,15 @@ class IOScheduler:
         over = overlapped_latency(self._stages) if self.overlap else serial
         timing = TokenTiming(serial_seconds=serial, overlapped_seconds=over,
                              n_stages=len(self._stages))
+        if wall_seconds is not None:
+            timing.measured_wall_seconds = float(wall_seconds)
+            timing.measured_io_busy_seconds = sum(
+                m.io_host_seconds for m in self._measured)
+            timing.measured_exposed_seconds = sum(
+                m.blocked_seconds + m.topup_seconds for m in self._measured)
         self.history.append(timing)
         self._stages = []
+        self._measured = []
         return timing
 
     # -- reporting ----------------------------------------------------------
@@ -123,7 +181,7 @@ class IOScheduler:
         n = max(len(self.history), 1)
         serial = sum(t.serial_seconds for t in self.history)
         over = sum(t.overlapped_seconds for t in self.history)
-        return dict(
+        out = dict(
             tokens=len(self.history),
             overlap_enabled=self.overlap,
             serial_seconds_per_token=serial / n,
@@ -131,7 +189,23 @@ class IOScheduler:
             hidden_seconds_per_token=(serial - over) / n,
             overlap_efficiency=(1.0 - over / serial) if serial > 0 else 0.0,
         )
+        wall = sum(t.measured_wall_seconds for t in self.history)
+        if wall > 0:           # the real prefetch pipeline ran: report both
+            hidden = sum(t.measured_hidden_seconds for t in self.history)
+            exposed = sum(t.measured_exposed_seconds for t in self.history)
+            busy = sum(t.measured_io_busy_seconds for t in self.history)
+            out.update(
+                measured_wall_seconds_per_token=wall / n,
+                measured_serial_seconds_per_token=(wall + hidden) / n,
+                measured_hidden_seconds_per_token=hidden / n,
+                measured_exposed_seconds_per_token=exposed / n,
+                measured_io_busy_seconds_per_token=busy / n,
+                measured_overlap_efficiency=(hidden / (wall + hidden)
+                                             if wall + hidden > 0 else 0.0),
+            )
+        return out
 
     def reset(self) -> None:
         self.history.clear()
         self._stages = []
+        self._measured = []

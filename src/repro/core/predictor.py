@@ -53,6 +53,26 @@ def predict_mask(params: PredictorParams, h: jnp.ndarray, threshold: float = 0.5
     return jax.nn.sigmoid(predictor_logits(params, h)) > threshold
 
 
+def predict_mask_np(params_np: Tuple[np.ndarray, ...], h: np.ndarray,
+                    threshold: float = 0.5) -> np.ndarray:
+    """Pure-numpy predictor inference for the serving thread's lookahead: the
+    prefetch pipeline needs the speculative mask on HOST (to hand to the I/O
+    worker) without a jax dispatch competing with the decode computation.
+    `params_np` is the PredictorParams tuple as numpy arrays (see
+    `as_numpy_params`); sigmoid(logit) > t is evaluated as logit > logit(t).
+    """
+    w1, b1, w2, b2 = params_np
+    z = np.maximum(h @ w1 + b1, 0.0)
+    logits = z @ w2 + b2
+    cut = np.log(threshold / (1.0 - threshold))
+    return logits > cut
+
+
+def as_numpy_params(params: PredictorParams) -> Tuple[np.ndarray, ...]:
+    """Host-side copies of predictor params for `predict_mask_np`."""
+    return tuple(np.asarray(p) for p in params)
+
+
 @partial(jax.jit, static_argnames=("pos_weight",))
 def _loss(params: PredictorParams, h, y, pos_weight: float = 2.0):
     logits = predictor_logits(params, h)
@@ -102,6 +122,44 @@ def train_predictor(
                 params, mu, nu, step, jnp.asarray(hiddens[idx]),
                 jnp.asarray(masks[idx]), cfg.lr, cfg.pos_weight)
     return params, float(loss)
+
+
+def train_lookahead_predictors(
+    hiddens_per_layer: np.ndarray,      # [L, T, d_model] pre-FFN hidden states
+    masks_per_layer: np.ndarray,        # [L, T, n_neurons] activation masks
+    d_hidden: int = 64,
+    threshold: float = 0.35,
+    pos_weight: float = 4.0,
+    epochs: int = 4,
+    lr: float = 1e-3,
+    seed: int = 0,
+) -> list:
+    """Cross-layer lookahead predictors for the asynchronous prefetch pipeline.
+
+    Predictor k maps layer k's pre-FFN hidden state to layer k+1's activation
+    mask — exactly the signal available one layer EARLY, so a background I/O
+    worker can probe the cache and read flash for layer k+1 while the device
+    still computes layer k's FFN. Returns L-1 `PredictorParams` (entry k
+    predicts layer k+1 from layer k).
+
+    Tuned to over-predict (low threshold, recall-weighted loss): a neuron the
+    lookahead misses costs a synchronous top-up read on the serving thread,
+    while an over-predicted neuron only inflates the prefetch read that is
+    hidden behind compute anyway.
+    """
+    hiddens = np.asarray(hiddens_per_layer)
+    masks = np.asarray(masks_per_layer)
+    L = hiddens.shape[0]
+    params = []
+    for k in range(L - 1):
+        cfg = PredictorConfig(
+            d_model=hiddens.shape[-1], n_neurons=masks.shape[-1],
+            d_hidden=d_hidden, threshold=threshold, lr=lr,
+            pos_weight=pos_weight)
+        p, _ = train_predictor(cfg, hiddens[k], masks[k + 1],
+                               epochs=epochs, seed=seed + k)
+        params.append(p)
+    return params
 
 
 def recall_precision(params: PredictorParams, hiddens: np.ndarray, masks: np.ndarray,

@@ -167,18 +167,25 @@ class NeuronStore:
         extents, _ = self._plan(phys, collapse_threshold)
         return extents
 
-    def read(self, logical_ids: np.ndarray, collapse_threshold: int = 0) -> Tuple[np.ndarray, IOStats]:
+    def read(self, logical_ids: np.ndarray, collapse_threshold: int = 0,
+             fetch_payload: bool = True) -> Tuple[Optional[np.ndarray], IOStats]:
         """Read bundles for logical ids; returns (data [k, w] in id order, stats).
 
         `stats.run_lengths` carries the pre-collapse run lengths (the maximal
         contiguous runs of the requested neurons in flash order) — computed
         here once from the already-sorted positions instead of by callers.
+        `fetch_payload=False` skips materialising the payload (data is None):
+        the engine's probe/read accounting path discards it anyway because the
+        full activated-union payload — hits included — is gathered separately
+        into a staging buffer via `fetch_into`.
         """
         logical_ids = np.asarray(logical_ids, dtype=np.int64)
         stats = IOStats(n_requests=1)
         if logical_ids.size == 0:
             stats.run_lengths = np.zeros(0, dtype=np.int64)
-            return np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype), stats
+            empty = (np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype)
+                     if fetch_payload else None)
+            return empty, stats
         phys = self.placement.physical_of(logical_ids)
         extents, stats.run_lengths = self._plan(phys, collapse_threshold)
         n_read = sum(length for _, length in extents)
@@ -187,7 +194,8 @@ class NeuronStore:
         stats.bytes_read = n_read * self.bundle_bytes * self.reads_per_bundle
         stats.bytes_useful = n_unique * self.bundle_bytes * self.reads_per_bundle
         stats.seconds = self.device.read_time(stats.n_ops, stats.bytes_read)
-        data = self._phys_data[phys]  # payload identical regardless of extent plan
+        # payload identical regardless of extent plan
+        data = self._phys_data[phys] if fetch_payload else None
         return data, stats
 
 
@@ -208,9 +216,11 @@ class ManagedReader:
         self.detector = BottleneckDetector(store.device.bandwidth_max)
         self.total = IOStats()
 
-    def read(self, logical_ids: np.ndarray) -> Tuple[np.ndarray, IOStats]:
+    def read(self, logical_ids: np.ndarray,
+             fetch_payload: bool = True) -> Tuple[Optional[np.ndarray], IOStats]:
         thr = self.threshold.threshold if (self.adaptive and self.detector.collapse_enabled) else 0
-        data, stats = self.store.read(logical_ids, collapse_threshold=thr)
+        data, stats = self.store.read(logical_ids, collapse_threshold=thr,
+                                      fetch_payload=fetch_payload)
         if self.adaptive and stats.n_ops:
             op_cost = stats.n_ops / self.store.device.iops_max
             byte_cost = stats.bytes_read / self.store.device.bandwidth_max

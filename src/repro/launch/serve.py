@@ -34,6 +34,10 @@ def main() -> None:
                     help="deprecated alias for --mode offload")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable I/O-compute overlap in the offload scheduler")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="EXECUTE the overlap: async layer-ahead prefetch "
+                         "worker driven by trained cross-layer lookahead "
+                         "predictors (mis-predictions topped up synchronously)")
     ap.add_argument("--no-placement", action="store_true",
                     help="identity flash layout (LLMFlash-style baseline)")
     ap.add_argument("--kv-quant", action="store_true")
@@ -58,14 +62,16 @@ def main() -> None:
         t0 = time.perf_counter()
         offload = build_offload_runtime(
             model, params, rng=rng, engine_cfg=EngineConfig(),
-            use_placement=not args.no_placement)
+            use_placement=not args.no_placement,
+            train_lookahead=args.prefetch)
         scheduler = IOScheduler(overlap=not args.no_overlap)
         logger.info("offload runtime calibrated: %d layer engines in %.2fs",
                     offload.n_layers, time.perf_counter() - t0)
 
     engine = ServingEngine(model, params,
                            max_len=args.prompt_len + args.new_tokens + 8,
-                           mode=mode, offload=offload, scheduler=scheduler)
+                           mode=mode, offload=offload, scheduler=scheduler,
+                           prefetch=args.prefetch)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens,
@@ -94,6 +100,15 @@ def main() -> None:
                     p["serial_seconds_per_token"] * 1e3,
                     p["overlapped_seconds_per_token"] * 1e3,
                     p["overlap_efficiency"] * 100, p["overlap_enabled"])
+        if "measured_wall_seconds_per_token" in p:
+            logger.info("prefetch MEASURED: wall %.2fms/token, io-worker busy "
+                        "%.2fms, hidden %.2fms, exposed %.2fms (%.1f%% of "
+                        "I/O host time off the critical path)",
+                        p["measured_wall_seconds_per_token"] * 1e3,
+                        p["measured_io_busy_seconds_per_token"] * 1e3,
+                        p["measured_hidden_seconds_per_token"] * 1e3,
+                        p["measured_exposed_seconds_per_token"] * 1e3,
+                        p["measured_overlap_efficiency"] * 100)
 
 
 if __name__ == "__main__":

@@ -96,6 +96,7 @@ class Model:
         res = {"logits": logits, "aux_loss": out.aux_loss, "hidden": h}
         if capture_activations:
             res["ffn_pre_act"] = out.ffn_pre_act
+            res["ffn_inputs"] = out.ffn_inputs
         return res
 
     def _hidden_and_aux(self, params: Params, batch: Dict[str, jnp.ndarray]):

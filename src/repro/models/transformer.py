@@ -84,6 +84,7 @@ class StackOutput(NamedTuple):
     x: jnp.ndarray
     aux_loss: jnp.ndarray                     # scalar (MoE load balance)
     ffn_pre_act: Optional[jnp.ndarray]        # [L_dense, B, T, d_ff] if captured
+    ffn_inputs: Optional[jnp.ndarray] = None  # [L_dense, B, T, d_model] if captured
 
 
 def stack_forward(
@@ -101,6 +102,7 @@ def stack_forward(
         h = carry
         aux_total = jnp.zeros((), jnp.float32)
         captures: List[jnp.ndarray] = []
+        captures_h: List[jnp.ndarray] = []
         for j in range(P):
             sp = group_params[f"sub_{j}"]
             kind, ffn = kinds[j], ffns[j]
@@ -120,21 +122,27 @@ def stack_forward(
                     y, pre = ffn_forward(sp["ffn"], normed2, cfg, capture=capture_activations)
                     if capture_activations:
                         captures.append(pre)
+                        captures_h.append(normed2)
                 else:
                     y, aux = moe_lib.moe_forward(sp["ffn"], normed2, cfg)
                     aux_total = aux_total + aux
                 h = h + y
         cap = jnp.stack(captures) if captures else jnp.zeros((0,), h.dtype)
-        return h, (aux_total, cap)
+        cap_h = jnp.stack(captures_h) if captures_h else jnp.zeros((0,), h.dtype)
+        return h, (aux_total, cap, cap_h)
 
     fn = jax.checkpoint(group_fn) if cfg.remat else group_fn
-    x, (aux, caps) = jax.lax.scan(fn, x, stack)
+    x, (aux, caps, caps_h) = jax.lax.scan(fn, x, stack)
     aux_loss = aux.sum()
-    pre_act = None
+    pre_act = ffn_inputs = None
     if capture_activations and caps.size:
         # caps: [G, n_dense_per_period, B, T, d_ff] -> [L_dense, B, T, d_ff]
         pre_act = caps.reshape((-1,) + caps.shape[2:])
-    return StackOutput(x=x, aux_loss=aux_loss, ffn_pre_act=pre_act)
+        # pre-FFN hidden states, same layer order — the lookahead predictor's
+        # training input (layer k's hidden predicts layer k+1's mask)
+        ffn_inputs = caps_h.reshape((-1,) + caps_h.shape[2:])
+    return StackOutput(x=x, aux_loss=aux_loss, ffn_pre_act=pre_act,
+                       ffn_inputs=ffn_inputs)
 
 
 # -- caches ----------------------------------------------------------------------

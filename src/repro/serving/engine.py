@@ -8,11 +8,21 @@ Two modes, one `serve()`:
         predict activated neurons (trained predictor or exact ReLU oracle)
         -> one batched engine step (merged cache probe + single collapsed
            extent read over the simulated UFS layout)
-        -> sparse FFN computed from the bundle payloads actually read,
-    while an `IOScheduler` models double-buffered I/O–compute overlap
-    (layer L+1's read hides behind layer L's compute). Per-request I/O is
-    attributed by the engine and lands in `Result.io_seconds`; batch-level
-    overlapped vs serial latency comes from `scheduler.summary()`.
+        -> sparse FFN computed from the bundle payloads actually read.
+
+The offload mode EXECUTES the paper's I/O–compute overlap when built with
+`prefetch=True`: a background I/O worker runs layer k+1's engine begin phase
+(cache probe + collapsed read + staging gather into a double-buffered host
+ring) while the device computes layer k's FFN, driven by a cross-layer
+lookahead predictor (layer k's pre-FFN hidden -> layer k+1's mask). The
+serving thread reconciles each prefetched layer against the true mask — any
+mis-predicted neuron is served by a synchronous top-up read, so pipelined
+decode is never less exact than serial. `IOScheduler` reports BOTH the
+analytic double-buffered schedule (modeled UFS read times) and the MEASURED
+overlap (worker busy time vs serving-thread wait time vs token wall clock);
+in prefetch mode `Result.overlapped_seconds` carries the measured per-token
+wall clock — what actually happened, not a model. Per-request I/O is
+attributed by the engine and lands in `Result.io_seconds`.
 
 The offload path intentionally runs layer-by-layer on host (it models a
 phone-style single-device runtime); the distributed pjit path is the dense
@@ -21,18 +31,22 @@ one exercised by launch/dryrun.py.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.engine import BatchStepResult, EngineConfig, OffloadEngine
-from repro.core.pipeline import IOScheduler
+from repro.core.engine import (BatchStepResult, EngineConfig, OffloadEngine,
+                               PendingStep)
+from repro.core.pipeline import IOScheduler, StageMeasurement
 from repro.core.placement import PlacementResult
-from repro.core.predictor import PredictorParams, predict_mask
+from repro.core.predictor import (PredictorParams, predict_mask,
+                                  train_lookahead_predictors)
 from repro.core.sparse_ffn import sparse_ffn_from_bundles
 from repro.core.storage import UFSDevice
 from repro.models import transformer
@@ -55,10 +69,12 @@ class Result:
     prefill_seconds: float
     decode_seconds: float
     io_seconds: float = 0.0            # this request's attributed flash I/O
-    # Group-level pipelined decode latency. NOTE: a hybrid — stage compute is
-    # MEASURED host wall time (eager jax on this machine), stage io is the
-    # MODELED UFS read time; benchmarks/serving_pipeline.py reports the fully
-    # modeled (machine-independent) counterpart.
+    # Group-level pipelined decode latency. In prefetch mode this is MEASURED:
+    # the summed per-token wall clock of the real overlap pipeline (worker I/O
+    # running under device compute) — scheduler.summary()'s measured_* keys
+    # carry the reconciliation against the analytic model. In serial offload
+    # mode it is the modeled double-buffered schedule (stage compute from the
+    # measured token wall apportioned by FLOPs, stage io from the UFS model).
     overlapped_seconds: float = 0.0
 
 
@@ -84,11 +100,88 @@ def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Offloaded FFN runtime: per-layer engines + batched apply
+# Offloaded FFN runtime: per-layer engines + batched apply + prefetch pipeline
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class PrefetchedLayer:
+    """One layer's staged prefetch, produced by the I/O worker: the engine's
+    pending split-phase step plus where its payload sits in the staging ring."""
+    layer: int
+    pending: PendingStep
+    k_spec: int                  # staged rows [0, k_spec) = speculated union
+    io_host_seconds: float = 0.0  # measured worker wall time for this layer
+
+
+class PrefetchWorker:
+    """Background I/O thread for layer-ahead prefetch.
+
+    The serving thread submits (layer, speculated masks) jobs; the worker
+    runs the engine's begin phase (cache probe + read planning + collapsed
+    read accounting) and gathers the speculated union's payload into the
+    runtime's double-buffered staging ring, then posts the result. Jobs and
+    results ride bounded queues (depth 2 = one job in flight + one queued),
+    so a stalled consumer can never accumulate unbounded staged state.
+    Exceptions are caught on the worker and re-raised on the serving thread
+    at `wait()`; the worker itself stays alive so `shutdown()` always joins
+    cleanly, even mid-decode.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, runtime: "OffloadedFFNRuntime") -> None:
+        self._runtime = runtime
+        self._jobs: "queue.Queue" = queue.Queue(maxsize=2)
+        self._results: "queue.Queue" = queue.Queue(maxsize=2)
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="ripple-prefetch")
+        self._thread.start()
+
+    def submit(self, layer: int, masks: np.ndarray) -> None:
+        self._jobs.put((layer, masks))
+
+    def wait(self, layer: int) -> PrefetchedLayer:
+        """Block until `layer`'s prefetch lands; re-raises worker exceptions."""
+        while True:
+            try:
+                kind, lay, payload = self._results.get(timeout=1.0)
+                break
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    raise RuntimeError("prefetch worker died unexpectedly")
+        if kind == "exc":
+            raise payload
+        if lay != layer:
+            raise RuntimeError(f"prefetch out of order: wanted layer {layer}, "
+                               f"got {lay}")
+        return payload
+
+    def _loop(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is self._SENTINEL:
+                return
+            layer, masks = job
+            try:
+                t0 = time.perf_counter()
+                staged = self._runtime._stage_layer(layer, masks)
+                staged.io_host_seconds = time.perf_counter() - t0
+                self._results.put(("ok", layer, staged))
+            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+                self._results.put(("exc", layer, e))
+
+    def shutdown(self) -> None:
+        self._jobs.put(self._SENTINEL)
+        self._thread.join(timeout=30.0)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+
 class OffloadedFFNRuntime:
-    """Per-layer RIPPLE offload state: engines, predictors, placements."""
+    """Per-layer RIPPLE offload state: engines, predictors, placements,
+    lookahead predictors, and the prefetch staging ring."""
 
     def __init__(
         self,
@@ -98,15 +191,37 @@ class OffloadedFFNRuntime:
         predictors: Optional[List[PredictorParams]] = None,
         device: Optional[UFSDevice] = None,
         engine_cfg: Optional[EngineConfig] = None,
+        lookahead: Optional[List[PredictorParams]] = None,
+        lookahead_threshold: float = 0.35,
+        bundle_bytes: Optional[int] = None,
     ) -> None:
         self.cfg = cfg
+        self.engine_cfg = engine_cfg or EngineConfig()
+        if self.engine_cfg.ffn_kernel == "segments" and \
+                cfg.activation not in ("relu", "relu2"):
+            # the segment kernel covers whole seg_size blocks; covered-but-
+            # inactive neurons only contribute zero when act(pre <= 0) == 0
+            raise ValueError(
+                f"ffn_kernel='segments' is exact only for relu/relu2 "
+                f"activations, not {cfg.activation!r}")
         self.engines = [
-            OffloadEngine(b, placement=pl, device=device, config=engine_cfg)
+            OffloadEngine(b, placement=pl, device=device, config=engine_cfg,
+                          bundle_bytes=bundle_bytes)
             for b, pl in zip(bundles_per_layer, placements)
         ]
         self.predictors = predictors
+        # cross-layer lookahead: lookahead[k] predicts layer k+1's mask from
+        # layer k's pre-FFN hidden state (the prefetch pipeline's driver)
+        self.lookahead = lookahead
+        self.lookahead_threshold = lookahead_threshold
         self.n_mats = 3 if cfg.activation == "silu" else 2
+        # staging ring: 2 pad-bucketed host buffers per (width, dtype), the
+        # worker filling one slot while the serving thread consumes the other
         self._staging: Dict[tuple, np.ndarray] = {}
+        self._worker: Optional[PrefetchWorker] = None
+        self._segment_weights: Dict[int, tuple] = {}
+        self._lookahead_np: Optional[List[tuple]] = None
+        self.topup_total = 0       # neurons served by synchronous top-up reads
 
     # -- single merged activated set (legacy accounting interface) ----------
     def ffn_apply(self, layer: int, h: np.ndarray, oracle_mask: Optional[np.ndarray] = None):
@@ -114,13 +229,15 @@ class OffloadedFFNRuntime:
 
         Activated set = predictor(h) if trained, else oracle mask (exact ReLU
         support, what the paper's predictor approximates with ~high recall).
+        The payload is gathered into the same reused pad-bucketed staging
+        buffer as the batched path — no fresh concatenation allocs.
         """
         if oracle_mask is None:
             assert self.predictors is not None, "need predictor or oracle mask"
             oracle_mask = np.asarray(predict_mask(self.predictors[layer], jnp.asarray(h)))
         ids = np.nonzero(np.any(np.atleast_2d(oracle_mask), axis=0))[0]
-        data, stats = self.engines[layer].step(ids)
-        y = self._ffn_from_bundles(jnp.asarray(h), data)
+        _, stats = self.engines[layer].step(ids, fetch_payload=False)
+        y = self._ffn_from_ids(layer, jnp.asarray(h), ids)
         return np.asarray(y), stats
 
     # -- whole decode batch, per-request attribution -------------------------
@@ -146,22 +263,122 @@ class OffloadedFFNRuntime:
             masks = np.asarray(predict_mask(self.predictors[layer], h))
         masks = np.atleast_2d(np.asarray(masks))
         res = self.engines[layer].step_masks(masks, fetch_payload=False)
-        y = self._ffn_from_ids(layer, h, res.ids)
+        if self.engine_cfg.ffn_kernel == "segments":
+            y = self._ffn_segments(layer, h, res.ids)
+        else:
+            y = self._ffn_from_ids(layer, h, res.ids)
         return y, res
+
+    # -- asynchronous layer-ahead prefetch -----------------------------------
+    def start_prefetch(self) -> None:
+        """Spin up a fresh I/O worker (one per served group: a clean worker
+        means no stale staged state can leak across serve calls)."""
+        if self._worker is not None:
+            self.stop_prefetch()
+        self._worker = PrefetchWorker(self)
+
+    def stop_prefetch(self) -> None:
+        if self._worker is not None:
+            self._worker.shutdown()
+            self._worker = None
+
+    @property
+    def prefetch_active(self) -> bool:
+        return self._worker is not None and self._worker.alive
+
+    def begin_layer(self, layer: int, masks: np.ndarray) -> None:
+        """Submit a (possibly speculative) prefetch for `layer` to the worker."""
+        assert self._worker is not None, "call start_prefetch() first"
+        self._worker.submit(layer, masks)
+
+    def predict_lookahead(self, layer: int, h_np: np.ndarray) -> np.ndarray:
+        """Speculative mask for `layer + 1` from layer `layer`'s pre-FFN
+        hidden state, evaluated in pure numpy on cached host-side predictor
+        params — no jax dispatch competing with the decode computation."""
+        from repro.core.predictor import as_numpy_params, predict_mask_np
+        if self._lookahead_np is None:
+            self._lookahead_np = [as_numpy_params(p) for p in self.lookahead]
+        return predict_mask_np(self._lookahead_np[layer], h_np,
+                               threshold=self.lookahead_threshold)
+
+    def _stage_layer(self, layer: int, masks: np.ndarray) -> PrefetchedLayer:
+        """Worker-side: engine begin phase + staging gather into ring slot
+        `layer % 2` (consecutive layers alternate slots, so the serving
+        thread's buffer is never the one the worker is filling)."""
+        eng = self.engines[layer]
+        pending = eng.begin_step_masks(masks, fetch_payload=False)
+        k = int(pending.union.size)
+        if self.engine_cfg.ffn_kernel != "segments":
+            store = eng.store
+            padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
+            buf = self._ring_slot(store.bundle_width, store._phys_data.dtype,
+                                  padded, layer % 2)
+            store.fetch_into(pending.union, buf)
+            buf[k:padded] = 0
+        return PrefetchedLayer(layer=layer, pending=pending, k_spec=k)
+
+    def complete_layer(
+        self, layer: int, h: jnp.ndarray, true_masks: np.ndarray,
+    ) -> tuple[jnp.ndarray, BatchStepResult, StageMeasurement]:
+        """Serving-thread side: wait for `layer`'s prefetch, reconcile against
+        the true masks (synchronous top-up read for lookahead misses — the
+        mis-predicted payload is fetched and merged before compute, never
+        skipped), and evaluate the FFN from the staged ring buffer.
+        """
+        t0 = time.perf_counter()
+        pf = self._worker.wait(layer)
+        blocked = time.perf_counter() - t0
+        eng = self.engines[layer]
+        t1 = time.perf_counter()
+        res = eng.complete_step(pf.pending, true_masks)
+        extra = res.topup_ids
+        self.topup_total += int(extra.size)
+        k_total = pf.k_spec + int(extra.size)
+        if self.engine_cfg.ffn_kernel == "segments":
+            served = np.concatenate([pf.pending.union, extra])
+            topup = time.perf_counter() - t1
+            y = self._ffn_segments(layer, h, served)
+        else:
+            store = eng.store
+            padded = -(-max(k_total, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
+            buf = self._ring_slot(store.bundle_width, store._phys_data.dtype,
+                                  padded, layer % 2, preserve_rows=pf.k_spec)
+            if extra.size:   # stage the topped-up payload after the prefetch
+                store.fetch_into(extra, buf[pf.k_spec:])
+            buf[k_total:padded] = 0
+            topup = time.perf_counter() - t1
+            valid = jnp.arange(padded) < k_total
+            y = sparse_ffn_from_bundles(
+                h, jnp.asarray(buf[:padded]), self.cfg.d_model, self.n_mats,
+                activation=self.cfg.activation, valid_mask=valid)
+        meas = StageMeasurement(io_host_seconds=pf.io_host_seconds,
+                                blocked_seconds=blocked, topup_seconds=topup)
+        return y, res, meas
 
     # activated-set sizes vary every (step, layer); without bucketing each
     # fresh size triggers a new XLA compilation of the sparse-FFN matmuls.
     PAD_BUCKET = 128
 
-    def _staging_buffer(self, width: int, dtype, padded: int) -> np.ndarray:
-        """Reused pinned-style host buffer for pad-bucketed bundle payloads,
-        grown geometrically and shared by all layers of equal bundle width."""
-        buf = self._staging.get((width, dtype))
+    def _ring_slot(self, width: int, dtype, padded: int, slot: int,
+                   preserve_rows: int = 0) -> np.ndarray:
+        """One slot of the double-buffered staging ring (pad-bucketed host
+        buffers, grown geometrically, shared by all layers of equal bundle
+        width). `preserve_rows` keeps already-staged leading rows across a
+        growth reallocation (the top-up append path)."""
+        key = (width, dtype, slot)
+        buf = self._staging.get(key)
         if buf is None or buf.shape[0] < padded:
             size = max(padded, 2 * buf.shape[0] if buf is not None else padded)
-            buf = np.zeros((size, width), dtype=dtype)
-            self._staging[(width, dtype)] = buf
+            new = np.zeros((size, width), dtype=dtype)
+            if buf is not None and preserve_rows:
+                new[:preserve_rows] = buf[:preserve_rows]
+            buf = new
+            self._staging[key] = buf
         return buf
+
+    def _staging_buffer(self, width: int, dtype, padded: int) -> np.ndarray:
+        """Serial-path staging buffer = slot 0 of the ring."""
+        return self._ring_slot(width, dtype, padded, 0)
 
     def _ffn_from_ids(self, layer: int, h: jnp.ndarray,
                       ids: np.ndarray) -> jnp.ndarray:
@@ -177,16 +394,52 @@ class OffloadedFFNRuntime:
             h, jnp.asarray(buf[:padded]), self.cfg.d_model, self.n_mats,
             activation=self.cfg.activation, valid_mask=valid)
 
-    def _ffn_from_bundles(self, h: jnp.ndarray, data: np.ndarray) -> jnp.ndarray:
-        k = data.shape[0]
-        padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
-        if padded != k:
-            data = np.concatenate(
-                [data, np.zeros((padded - k,) + data.shape[1:], data.dtype)])
-        valid = jnp.arange(padded) < k
-        return sparse_ffn_from_bundles(
-            h, jnp.asarray(data), self.cfg.d_model, self.n_mats,
-            activation=self.cfg.activation, valid_mask=valid)
+    # -- Pallas segment-gather kernel path (EngineConfig.ffn_kernel) ---------
+    def _segment_weight_mats(self, layer: int) -> tuple:
+        """Physical-layout weight matrices for the segment kernel, cached per
+        layer: the store's flash payload reshaped into [N, d] up/down(/gate)
+        matrices in placement order, zero-padded to a segment multiple."""
+        cached = self._segment_weights.get(layer)
+        if cached is not None:
+            return cached
+        store = self.engines[layer].store
+        seg = self.engine_cfg.kernel_seg_size
+        d = self.cfg.d_model
+        parts = store._phys_data.reshape(store.n_neurons, self.n_mats, d)
+        pad = (-store.n_neurons) % seg
+        if pad:
+            parts = np.concatenate(
+                [parts, np.zeros((pad,) + parts.shape[1:], parts.dtype)])
+        if self.n_mats == 3:     # bundle layout [gate | up | down]
+            mats = (jnp.asarray(parts[:, 1]), jnp.asarray(parts[:, 2]),
+                    jnp.asarray(parts[:, 0]))
+        else:                    # [up | down]
+            mats = (jnp.asarray(parts[:, 0]), jnp.asarray(parts[:, 1]), None)
+        self._segment_weights[layer] = mats
+        return mats
+
+    SEG_ID_BUCKET = 8
+
+    def _ffn_segments(self, layer: int, h: jnp.ndarray,
+                      ids: np.ndarray) -> jnp.ndarray:
+        """FFN via the Pallas segment-gather kernel: the activated union maps
+        to seg_size-aligned blocks of the PHYSICAL (placement-permuted)
+        layout — contiguous links become few segments, the kernel's DMA
+        argument. Exact for ReLU models: covered-but-inactive neurons have
+        non-positive pre-activations and contribute zero."""
+        from repro.kernels import ops
+        eng = self.engines[layer]
+        seg = self.engine_cfg.kernel_seg_size
+        phys = eng.placement.physical_of(np.asarray(ids, dtype=np.int64))
+        seg_ids = np.unique(phys // seg)
+        padded = -(-max(int(seg_ids.size), 1) // self.SEG_ID_BUCKET) \
+            * self.SEG_ID_BUCKET
+        seg_ids = np.concatenate(
+            [seg_ids, np.full(padded - seg_ids.size, -1, dtype=np.int64)])
+        w_up, w_down, w_gate = self._segment_weight_mats(layer)
+        return ops.sparse_ffn_segments(
+            h, w_up, w_down, jnp.asarray(seg_ids, jnp.int32), w_gate,
+            seg_size=seg, activation=self.cfg.activation)
 
     @property
     def n_layers(self) -> int:
@@ -220,6 +473,7 @@ class OffloadedFFNRuntime:
     def reset_stats(self) -> None:
         for e in self.engines:
             e.reset_stats()
+        self.topup_total = 0
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +487,19 @@ class ServingEngine:
                  swa: bool = False, mode: str = "resident",
                  offload: Optional[OffloadedFFNRuntime] = None,
                  scheduler: Optional[IOScheduler] = None,
-                 oracle: bool = True):
+                 oracle: bool = True,
+                 prefetch: bool = False,
+                 lookahead: Union[str, List[PredictorParams], None] = None):
+        """`prefetch=True` runs offload decode through the asynchronous
+        layer-ahead pipeline: a background I/O worker serves layer k+1's
+        engine step while the device computes layer k. `lookahead` picks the
+        speculation source: a list of cross-layer predictor params (layer k's
+        hidden -> layer k+1's mask), None to use the runtime's trained
+        `lookahead` (falling back to "oracle"), or "oracle" — the exactness
+        fallback where each layer's prefetch is issued with its TRUE mask
+        (zero speculation depth, so no overlap, but the split-phase worker
+        machinery is exercised bit-identically to serial).
+        """
         if mode not in ("resident", "offload"):
             raise ValueError(f"unknown serving mode {mode!r}")
         if mode == "offload":
@@ -242,6 +508,8 @@ class ServingEngine:
             cfg = model.cfg
             if cfg.is_encdec or cfg.family != "dense":
                 raise ValueError("offload serving covers dense decoder-only archs")
+        if isinstance(lookahead, str) and lookahead != "oracle":
+            raise ValueError(f"unknown lookahead mode {lookahead!r}")
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -249,6 +517,8 @@ class ServingEngine:
         self.mode = mode
         self.offload = offload
         self.oracle = oracle
+        self.prefetch = prefetch
+        self.lookahead = lookahead
         self.scheduler = scheduler or IOScheduler(overlap=True)
         self._decode = jax.jit(
             lambda p, t, pos, c: model.decode_step(p, t, pos, c))
@@ -334,6 +604,12 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in group)
         outs = [[] for _ in group]
         req_io = np.zeros(B)
+        n_layers = runtime.n_layers
+
+        def true_masks_for(dense_idx: int, h2: jnp.ndarray) -> Optional[np.ndarray]:
+            if w_ups is not None:
+                return np.asarray(h2 @ w_ups[dense_idx] > 0)       # exact support
+            return None                                            # predictor path
 
         # Sync-free layerwise decode: the FFN override never blocks on its
         # output — XLA dispatch runs ahead across layers while the engine
@@ -345,11 +621,8 @@ class ServingEngine:
         # device sync).
         def ffn_override(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
             h2 = normed2[:, 0]                                     # [B, d]
-            if w_ups is not None:
-                masks = np.asarray(h2 @ w_ups[dense_idx] > 0)      # exact support
-            else:
-                masks = None                                       # predictor path
-            y, res = runtime.ffn_apply_batch(dense_idx, h2, masks)
+            y, res = runtime.ffn_apply_batch(dense_idx, h2,
+                                             true_masks_for(dense_idx, h2))
             flops = 2.0 * B * res.merged.n_activated * runtime.n_mats * cfg.d_model
             self.scheduler.record_stage(dense_idx,
                                         io_seconds=res.merged.io.seconds,
@@ -357,26 +630,76 @@ class ServingEngine:
             np.add(req_io, res.req_io_seconds, out=req_io)
             return y[:, None]
 
+        # Pipelined decode — EXECUTES the overlap the scheduler models. At
+        # layer k the serving thread (1) submits layer k+1's prefetch from the
+        # cross-layer lookahead prediction of k's pre-FFN hidden, then (2)
+        # completes layer k against its true mask (waiting on the worker only
+        # if the prefetch hasn't landed, topping up mis-predictions with a
+        # synchronous read). The worker thus probes/reads/stages layer k+1
+        # while the device computes layer k's FFN and layer k+1's mixer.
+        # With lookahead="oracle" every layer submits its own TRUE mask
+        # (depth 0): nothing overlaps, but the worker machinery runs — the
+        # exactness arm that must be stats-identical to serial.
+        la_params = self.lookahead if not isinstance(self.lookahead, str) \
+            else None
+        if la_params is None and self.lookahead is None:
+            la_params = runtime.lookahead      # trained with the runtime
+        if la_params is not None and la_params is not runtime.lookahead:
+            runtime.lookahead = la_params      # predict_lookahead uses these
+            runtime._lookahead_np = None
+
+        def ffn_override_prefetch(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
+            h2 = normed2[:, 0]                                     # [B, d]
+            masks_true = true_masks_for(dense_idx, h2)
+            if masks_true is None:
+                masks_true = np.asarray(predict_mask(
+                    runtime.predictors[dense_idx], h2))
+            if dense_idx == 0 or la_params is None:
+                runtime.begin_layer(dense_idx, masks_true)         # depth 0
+            if la_params is not None and dense_idx + 1 < n_layers:
+                spec = runtime.predict_lookahead(dense_idx, np.asarray(h2))
+                runtime.begin_layer(dense_idx + 1, spec)
+            y, res, meas = runtime.complete_layer(dense_idx, h2, masks_true)
+            flops = 2.0 * B * res.merged.n_activated * runtime.n_mats * cfg.d_model
+            self.scheduler.record_stage(dense_idx,
+                                        io_seconds=res.merged.io.seconds,
+                                        flops=flops, measured=meas)
+            np.add(req_io, res.req_io_seconds, out=req_io)
+            return y[:, None]
+
+        override = ffn_override_prefetch if self.prefetch else ffn_override
+        if self.prefetch:
+            runtime.start_prefetch()
         cur = sample_tokens(logits[:, -1], temps, key)
         t0 = time.perf_counter()
         overlapped_total = 0.0
-        for step in range(max_new):
-            for i in range(B):
-                outs[i].append(int(cur[i]))
-            key = jax.random.fold_in(key, step)
-            token_t0 = time.perf_counter()
-            x = embed_tokens(self.params["embed"], cur[:, None].astype(jnp.int32), cfg)
-            self.scheduler.begin_token()
-            h, cache_groups = transformer.stack_decode_step_layerwise(
-                param_groups, x, jnp.int32(T + step), cache_groups, cfg,
-                ffn_override=ffn_override)
-            h = apply_norm(self.params["final_norm"], h, cfg)
-            logits = unembed(self.params["embed"], h, cfg)
-            cur = sample_tokens(logits[:, 0], temps, key)
-            cur.block_until_ready()                   # ONE sync per token
-            timing = self.scheduler.end_token(
-                compute_seconds=time.perf_counter() - token_t0)
-            overlapped_total += timing.overlapped_seconds
+        try:
+            for step in range(max_new):
+                for i in range(B):
+                    outs[i].append(int(cur[i]))
+                key = jax.random.fold_in(key, step)
+                token_t0 = time.perf_counter()
+                x = embed_tokens(self.params["embed"], cur[:, None].astype(jnp.int32), cfg)
+                self.scheduler.begin_token()
+                h, cache_groups = transformer.stack_decode_step_layerwise(
+                    param_groups, x, jnp.int32(T + step), cache_groups, cfg,
+                    ffn_override=override)
+                h = apply_norm(self.params["final_norm"], h, cfg)
+                logits = unembed(self.params["embed"], h, cfg)
+                cur = sample_tokens(logits[:, 0], temps, key)
+                cur.block_until_ready()                   # ONE sync per token
+                token_wall = time.perf_counter() - token_t0
+                timing = self.scheduler.end_token(
+                    compute_seconds=token_wall,
+                    wall_seconds=token_wall if self.prefetch else None)
+                # prefetch mode: report what actually happened (measured wall
+                # clock); otherwise the analytic double-buffered schedule
+                overlapped_total += (timing.measured_wall_seconds
+                                     if self.prefetch
+                                     else timing.overlapped_seconds)
+        finally:
+            if self.prefetch:
+                runtime.stop_prefetch()
         t_decode = time.perf_counter() - t0
         return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
                        prefill_seconds=t_prefill, decode_seconds=t_decode,
@@ -392,12 +715,18 @@ def build_offload_runtime(
     engine_cfg: Optional[EngineConfig] = None,
     device: Optional[UFSDevice] = None,
     use_placement: bool = True,
+    train_lookahead: bool = False,
+    lookahead_threshold: float = 0.35,
+    lookahead_epochs: int = 4,
 ) -> OffloadedFFNRuntime:
     """Calibrate placements from a short random-token trace and pack the
     model's dense-FFN weights into flash bundles, one engine per dense layer.
 
     `use_placement=False` keeps the identity layout (the LLMFlash-style
-    baseline arm of the benchmarks). Works for any stack period: layers are
+    baseline arm of the benchmarks). `train_lookahead=True` additionally fits
+    the cross-layer lookahead predictors (layer k's pre-FFN hidden -> layer
+    k+1's mask) on the same calibration trace, enabling real speculation
+    depth in the prefetch pipeline. Works for any stack period: layers are
     enumerated in the same (group, sublayer) order as `ffn_pre_act` capture.
     """
     from repro.core.coactivation import stats_from_masks
@@ -432,8 +761,18 @@ def build_offload_runtime(
             else:
                 placements.append(identity_placement(cfg.d_ff))
             dense_idx += 1
+    lookahead = None
+    if train_lookahead and dense_idx > 1:
+        hiddens = np.asarray(out["ffn_inputs"]).reshape(
+            dense_idx, -1, cfg.d_model)
+        masks = np.asarray(out["ffn_pre_act"] > 0).reshape(
+            dense_idx, -1, cfg.d_ff)
+        lookahead = train_lookahead_predictors(
+            hiddens, masks, threshold=lookahead_threshold,
+            epochs=lookahead_epochs)
     return OffloadedFFNRuntime(cfg, bundles, placements, device=device,
-                               engine_cfg=engine_cfg)
+                               engine_cfg=engine_cfg, lookahead=lookahead,
+                               lookahead_threshold=lookahead_threshold)
 
 
 def _group_by_len(requests: List[Request]) -> List[List[Request]]:

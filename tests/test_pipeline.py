@@ -1,8 +1,8 @@
 """IOScheduler / overlap-model invariants (core/pipeline.py)."""
 import numpy as np
 
-from repro.core.pipeline import (IOScheduler, Stage, overlapped_latency,
-                                 serial_latency)
+from repro.core.pipeline import (IOScheduler, Stage, StageMeasurement,
+                                 overlapped_latency, serial_latency)
 
 
 def _random_stages(rng, n):
@@ -87,3 +87,49 @@ def test_end_token_apportions_compute_by_flops():
     sch3.record_stage(1, io_seconds=0.0)
     t3 = sch3.end_token(compute_seconds=2e-3)
     assert abs(t3.serial_seconds - 2e-3) < 1e-12
+
+
+def test_measured_mode_reconciles_wall_clock():
+    """Measured mode: end_token(wall_seconds=...) aggregates worker busy /
+    blocked / top-up host timings next to the analytic schedule."""
+    sch = IOScheduler(overlap=True)
+    sch.begin_token()
+    sch.record_stage(0, io_seconds=1e-3, flops=1e9,
+                     measured=StageMeasurement(io_host_seconds=2e-3,
+                                               blocked_seconds=0.5e-3))
+    sch.record_stage(1, io_seconds=1e-3, flops=1e9,
+                     measured=StageMeasurement(io_host_seconds=3e-3,
+                                               blocked_seconds=0.0,
+                                               topup_seconds=0.25e-3))
+    t = sch.end_token(compute_seconds=4e-3, wall_seconds=6e-3)
+    assert t.measured_wall_seconds == 6e-3
+    assert abs(t.measured_io_busy_seconds - 5e-3) < 1e-15
+    assert abs(t.measured_exposed_seconds - 0.75e-3) < 1e-15
+    # hidden = busy - exposed (the I/O host time that did not extend the token)
+    assert abs(t.measured_hidden_seconds - 4.25e-3) < 1e-15
+    assert abs(t.measured_serial_seconds - (6e-3 + 4.25e-3)) < 1e-15
+    s = sch.summary()
+    assert s["measured_wall_seconds_per_token"] == 6e-3
+    assert abs(s["measured_overlap_efficiency"]
+               - 4.25e-3 / (6e-3 + 4.25e-3)) < 1e-12
+
+
+def test_measured_hidden_never_negative():
+    """A slow worker (main thread blocked longer than the worker was busy)
+    clamps hidden time at zero instead of going negative."""
+    sch = IOScheduler(overlap=True)
+    sch.begin_token()
+    sch.record_stage(0, io_seconds=1e-3,
+                     measured=StageMeasurement(io_host_seconds=1e-3,
+                                               blocked_seconds=5e-3))
+    t = sch.end_token(compute_seconds=1e-3, wall_seconds=7e-3)
+    assert t.measured_hidden_seconds == 0.0
+    assert t.measured_serial_seconds == t.measured_wall_seconds
+
+
+def test_unmeasured_tokens_keep_summary_model_only():
+    sch = IOScheduler(overlap=True)
+    sch.begin_token()
+    sch.record_stage(0, compute_seconds=1e-3, io_seconds=1e-3)
+    sch.end_token()
+    assert "measured_wall_seconds_per_token" not in sch.summary()

@@ -79,6 +79,37 @@ def test_degenerate_sizes():
         assert len(res.placement) == n
 
 
+def test_batched_greedy_bit_identical_small_random():
+    """The array-native merge loop must reproduce the reference per-edge loop
+    bit for bit, exact and topk, across random distance matrices."""
+    for n in (2, 5, 17, 64, 200):
+        for seed in range(3):
+            rng = np.random.default_rng(seed)
+            d = _random_dist(rng, n)
+            for mode, kw in (("exact", {}), ("topk", {"topk": 6})):
+                a = search_placement(d, mode=mode, greedy_impl="batched", **kw)
+                b = search_placement(d, mode=mode, greedy_impl="loop", **kw)
+                assert np.array_equal(a.placement, b.placement), (n, seed, mode)
+                assert a.edges_used == b.edges_used
+
+
+def test_batched_greedy_bit_identical_at_4k():
+    """Satellite acceptance: equivalence at n≈4k on a clustered trace (the
+    workload shape the offline stage actually faces) — placement arrays equal
+    element for element, both exact (n=4096 auto) and topk candidates."""
+    cfg = SyntheticTraceConfig(n_neurons=4096, n_clusters=64, seed=11)
+    masks = synthetic_masks(cfg, 120)
+    dist = stats_from_masks(masks).distance_matrix()
+    a = search_placement(dist, mode="exact", greedy_impl="batched")
+    b = search_placement(dist, mode="exact", greedy_impl="loop")
+    assert np.array_equal(a.placement, b.placement)
+    assert np.array_equal(a.inverse, b.inverse)
+    assert a.edges_used == b.edges_used
+    at = search_placement(dist, mode="topk", topk=48, greedy_impl="batched")
+    bt = search_placement(dist, mode="topk", topk=48, greedy_impl="loop")
+    assert np.array_equal(at.placement, bt.placement)
+
+
 def test_topk_matches_exact_on_clustered_data():
     """With strong cluster structure the topk restriction changes nothing."""
     cfg = SyntheticTraceConfig(n_neurons=128, n_clusters=16, noise_p=0.0, seed=11)

@@ -1,0 +1,266 @@
+"""Asynchronous layer-ahead prefetch pipeline: split-phase engine steps,
+worker/staging-ring serving, top-up correctness, measured overlap.
+
+The contract under test (ISSUE 3 acceptance): pipelined offload decode is
+token-identical to serial decode under the oracle mask with equal aggregate
+IOStats; lookahead mis-predictions are served by a synchronous top-up read
+(never skipped); per-request I/O attribution sums exactly to the merged read
+time; and the worker shuts down cleanly even when a layer raises mid-decode.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (OffloadEngine, SyntheticTraceConfig,
+                        search_placement, stats_from_masks, synthetic_masks)
+from repro.core.pipeline import IOScheduler
+from repro.core.sparse_ffn import FFNWeights, dense_ffn, make_bundles
+from repro.core.placement import identity_placement
+from repro.models import build_model
+from repro.configs import get_config
+from repro.serving.engine import (OffloadedFFNRuntime, Request, ServingEngine,
+                                  build_offload_runtime)
+
+
+def _trace_setup(n=512, seed=0):
+    cfg = SyntheticTraceConfig(n_neurons=n, n_clusters=16, seed=seed,
+                               structure_seed=seed)
+    calib = synthetic_masks(cfg, 200)
+    serve = synthetic_masks(
+        SyntheticTraceConfig(n_neurons=n, n_clusters=16, seed=seed + 99,
+                             structure_seed=seed), 60)
+    placement = search_placement(stats_from_masks(calib).distance_matrix(),
+                                 mode="exact")
+    bundles = np.random.default_rng(seed).standard_normal((n, 64)).astype(np.float32)
+    return serve, placement, bundles
+
+
+def _batches(serve, batch=3, offset=7):
+    return [serve[[(t + r * offset) % len(serve) for r in range(batch)]]
+            for t in range(len(serve))]
+
+
+# ---------------------------------------------------------------------------
+# Split-phase engine steps
+# ---------------------------------------------------------------------------
+
+def test_begin_complete_identical_to_fused_step_masks():
+    """begin_step_masks + complete_step must be provably stats-identical to
+    step_masks: same merged stats, same attribution, same cache decisions."""
+    serve, placement, bundles = _trace_setup(seed=1)
+    fused = OffloadEngine(bundles, placement=placement)
+    split = OffloadEngine(bundles, placement=placement)
+    for b in _batches(serve):
+        r1 = fused.step_masks(b, fetch_payload=True)
+        pending = split.begin_step_masks(b, fetch_payload=True)
+        r2 = split.complete_step(pending)
+        np.testing.assert_array_equal(r1.ids, r2.ids)
+        np.testing.assert_array_equal(r1.data, r2.data)
+        assert r1.merged.n_activated == r2.merged.n_activated
+        assert r1.merged.n_hits == r2.merged.n_hits
+        assert r1.merged.io.n_ops == r2.merged.io.n_ops
+        assert r1.merged.io.bytes_read == r2.merged.io.bytes_read
+        assert r1.merged.io.seconds == r2.merged.io.seconds
+        np.testing.assert_array_equal(r1.req_n_misses, r2.req_n_misses)
+        np.testing.assert_array_equal(r1.req_io_seconds, r2.req_io_seconds)
+        assert r2.topup_ids.size == 0
+        assert fused.cache.cache.queues() == split.cache.cache.queues()
+    s1, s2 = fused.summary(), split.summary()
+    assert s1 == s2
+
+
+def test_complete_step_with_true_masks_equal_to_speculation_is_fused():
+    """Oracle lookahead (speculation == truth) reduces exactly to the fused
+    step even when true_masks is passed explicitly."""
+    serve, placement, bundles = _trace_setup(seed=2)
+    fused = OffloadEngine(bundles, placement=placement)
+    split = OffloadEngine(bundles, placement=placement)
+    for b in _batches(serve)[:20]:
+        r1 = fused.step_masks(b, fetch_payload=False)
+        r2 = split.complete_step(split.begin_step_masks(b, fetch_payload=False),
+                                 true_masks=b)
+        assert r1.merged.io.seconds == r2.merged.io.seconds
+        assert r1.merged.n_hits == r2.merged.n_hits
+        np.testing.assert_array_equal(r1.req_io_seconds, r2.req_io_seconds)
+        assert fused.cache.cache.queues() == split.cache.cache.queues()
+
+
+def test_topup_read_never_skipped_and_covers_true_union():
+    """Under-prediction: every truly activated neuron missing from the
+    speculation is served by the synchronous top-up read."""
+    serve, placement, bundles = _trace_setup(seed=3)
+    eng = OffloadEngine(bundles, placement=placement)
+    rng = np.random.default_rng(3)
+    for b in _batches(serve)[:20]:
+        spec = b & (rng.random(b.shape) < 0.7)      # drop ~30% of true neurons
+        pending = eng.begin_step_masks(spec, fetch_payload=False)
+        res = eng.complete_step(pending, true_masks=b)
+        true_union = np.flatnonzero(b.any(axis=0))
+        # served ids cover the true union — mis-predictions were fetched
+        assert np.all(np.isin(true_union, res.ids))
+        expected_topup = np.setdiff1d(true_union, pending.union)
+        np.testing.assert_array_equal(res.topup_ids, expected_topup)
+        # attribution conserves the merged read time (spec read + top-up)
+        assert abs(res.req_io_seconds.sum() - res.merged.io.seconds) < 1e-12
+
+
+def test_complete_step_payload_covers_topups_in_ids_order():
+    """With fetch_payload=True, complete_step's data must match the widened
+    served union ([len(ids), w] in ids order) even after top-up reads."""
+    serve, placement, bundles = _trace_setup(seed=8)
+    eng = OffloadEngine(bundles, placement=placement)
+    rng = np.random.default_rng(8)
+    b = _batches(serve)[0]
+    spec = b & (rng.random(b.shape) < 0.6)           # heavy under-prediction
+    res = eng.complete_step(eng.begin_step_masks(spec, fetch_payload=True),
+                            true_masks=b)
+    assert res.topup_ids.size > 0
+    assert res.data.shape[0] == res.ids.size
+    np.testing.assert_array_equal(res.data, eng.store.fetch(res.ids))
+
+
+def test_over_speculation_attribution_still_sums_to_merged_read():
+    """Pure over-prediction (speculated neurons nobody wanted): the read time
+    is still attributed in full, split evenly across requests."""
+    _, placement, bundles = _trace_setup(seed=4)
+    eng = OffloadEngine(bundles, placement=placement)
+    n = len(bundles)
+    spec = np.zeros((2, n), dtype=bool)
+    spec[:, :40] = True                              # speculated...
+    true = np.zeros((2, n), dtype=bool)              # ...but nothing activated
+    res = eng.complete_step(eng.begin_step_masks(spec, fetch_payload=False),
+                            true_masks=true)
+    assert res.merged.io.seconds > 0
+    assert abs(res.req_io_seconds.sum() - res.merged.io.seconds) < 1e-12
+    assert res.req_n_misses.sum() == 0
+
+
+def test_mixed_speculation_ffn_output_still_exact(rng):
+    """Runtime-level: with both under- and over-prediction, the pipelined FFN
+    (staged prefetch + top-up append) matches the dense FFN under ReLU."""
+    d, n = 32, 256
+    cfg = get_config("granite-3-2b", reduced=True, d_model=d, activation="relu")
+    w = FFNWeights(
+        w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32))
+    runtime = OffloadedFFNRuntime(cfg, [np.asarray(make_bundles(w))],
+                                  [identity_placement(n)])
+    h = rng.standard_normal((3, d)).astype(np.float32)
+    true = np.asarray(h @ np.asarray(w.w_up).T > 0)
+    spec = true.copy()
+    spec[:, ::3] = ~spec[:, ::3]                     # corrupt a third of it
+    runtime.start_prefetch()
+    try:
+        runtime.begin_layer(0, spec)
+        y, res, meas = runtime.complete_layer(0, jnp.asarray(h), true)
+    finally:
+        runtime.stop_prefetch()
+    ref = np.asarray(dense_ffn(jnp.asarray(h), w, activation="relu"))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+    assert res.topup_ids.size > 0                    # under-predictions existed
+    assert meas.io_host_seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end pipelined serving
+# ---------------------------------------------------------------------------
+
+def _offload_setup(seed=0):
+    cfg = get_config("opt-350m", reduced=True, d_model=64, d_ff=256,
+                     n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    return model, params, reqs
+
+
+def test_pipelined_decode_token_identical_and_stats_equal_to_serial():
+    """Acceptance: under the oracle mask, prefetch=True produces the serial
+    path's tokens exactly AND equal aggregate IOStats (n_ops, bytes, hit
+    rate) per layer engine, with measured overlapped_seconds > 0."""
+    model, params, reqs = _offload_setup()
+    rt_serial = build_offload_runtime(model, params, rng=np.random.default_rng(1))
+    serial = ServingEngine(model, params, max_len=32, mode="offload",
+                           offload=rt_serial, scheduler=IOScheduler(overlap=True))
+    res_serial = serial.serve(reqs)
+
+    rt_pipe = build_offload_runtime(model, params, rng=np.random.default_rng(1))
+    pipe = ServingEngine(model, params, max_len=32, mode="offload",
+                         offload=rt_pipe, scheduler=IOScheduler(overlap=True),
+                         prefetch=True, lookahead="oracle")
+    res_pipe = pipe.serve(reqs)
+
+    for a, b in zip(res_serial, res_pipe):
+        assert a.uid == b.uid
+        assert a.tokens == b.tokens
+        assert b.overlapped_seconds > 0          # measured wall clock
+        assert abs(a.io_seconds - b.io_seconds) < 1e-12
+    for es, ep in zip(rt_serial.engines, rt_pipe.engines):
+        ss, sp = es.summary(), ep.summary()
+        assert ss["tokens"] == sp["tokens"]
+        assert ss["io_seconds_per_token"] == sp["io_seconds_per_token"]
+        assert ss["ops_per_token"] == sp["ops_per_token"]
+        assert ss["cache_hit_rate"] == sp["cache_hit_rate"]
+        assert sum(t.io.bytes_read for t in es.history) == \
+            sum(t.io.bytes_read for t in ep.history)
+    s = pipe.scheduler.summary()
+    assert s["measured_wall_seconds_per_token"] > 0
+    assert s["measured_io_busy_seconds_per_token"] > 0
+    # worker cleanly shut down after serve
+    assert rt_pipe._worker is None
+
+
+def test_trained_lookahead_pipelined_decode_matches_serial_tokens():
+    """Real speculation depth: cross-layer lookahead predictors drive the
+    prefetch; mis-predictions are topped up, so tokens still match serial."""
+    model, params, reqs = _offload_setup(seed=5)
+    rt_serial = build_offload_runtime(model, params, rng=np.random.default_rng(2))
+    res_serial = ServingEngine(model, params, max_len=32, mode="offload",
+                               offload=rt_serial).serve(reqs)
+    rt_pipe = build_offload_runtime(model, params, rng=np.random.default_rng(2),
+                                    train_lookahead=True)
+    assert rt_pipe.lookahead is not None and len(rt_pipe.lookahead) == 1
+    pipe = ServingEngine(model, params, max_len=32, mode="offload",
+                         offload=rt_pipe, prefetch=True)
+    res_pipe = pipe.serve(reqs)
+    for a, b in zip(res_serial, res_pipe):
+        assert a.tokens == b.tokens
+    s = pipe.scheduler.summary()
+    assert s["measured_wall_seconds_per_token"] > 0
+    assert s["measured_hidden_seconds_per_token"] >= 0
+
+
+def test_worker_exception_mid_decode_shuts_down_cleanly():
+    """A layer engine failing inside the worker must surface on the serving
+    thread as the original exception, and serve() must still join the worker
+    (no leaked threads, runtime reusable afterwards)."""
+    model, params, reqs = _offload_setup(seed=7)
+    runtime = build_offload_runtime(model, params, rng=np.random.default_rng(3))
+
+    boom = RuntimeError("flash gave up mid-decode")
+    calls = {"n": 0}
+    orig = runtime.engines[1].begin_step_masks
+
+    def failing(masks, fetch_payload=True):
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise boom
+        return orig(masks, fetch_payload)
+
+    runtime.engines[1].begin_step_masks = failing
+    engine = ServingEngine(model, params, max_len=32, mode="offload",
+                           offload=runtime, prefetch=True, lookahead="oracle")
+    before = threading.active_count()
+    with pytest.raises(RuntimeError, match="flash gave up"):
+        engine.serve(reqs)
+    assert runtime._worker is None                  # stop_prefetch ran
+    assert threading.active_count() == before       # worker joined
+    # runtime is reusable: restore the engine and serve again
+    runtime.engines[1].begin_step_masks = orig
+    results = engine.serve(reqs)
+    assert all(len(r.tokens) == 4 for r in results)

@@ -188,6 +188,67 @@ def test_sample_tokens_vectorized_per_row():
     assert int(mixed[1]) == 0
 
 
+def test_segment_kernel_serving_path_matches_bundles_on_permuted_layout(rng):
+    """Satellite: EngineConfig.ffn_kernel='segments' routes the serving FFN
+    through the Pallas segment-gather kernel (interpret mode on CPU) over the
+    PERMUTED physical layout; under the ReLU oracle it must match both the
+    bundle-payload path and the dense reference."""
+    import numpy as _np
+    d, n = 128, 512
+    cfg = get_config("granite-3-2b", reduced=True, d_model=d, activation="relu")
+    w = FFNWeights(
+        w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32))
+    bundles = np.asarray(make_bundles(w))
+    perm = _np.random.default_rng(5).permutation(n).astype(np.int64)
+    inv = np.empty(n, dtype=np.int64)
+    inv[perm] = np.arange(n)
+    from repro.core.placement import PlacementResult
+    pl = PlacementResult(placement=perm, inverse=inv, edges_used=0,
+                         search_seconds=0.0, mode="test-perm")
+    rt_seg = OffloadedFFNRuntime(
+        cfg, [bundles], [pl],
+        engine_cfg=EngineConfig(ffn_kernel="segments", kernel_seg_size=128))
+    rt_ref = OffloadedFFNRuntime(cfg, [bundles], [pl])
+    h = rng.standard_normal((3, d)).astype(np.float32)
+    masks = np.asarray(h @ np.asarray(w.w_up).T > 0)
+    y_seg, res_seg = rt_seg.ffn_apply_batch(0, jnp.asarray(h), masks)
+    y_ref, res_ref = rt_ref.ffn_apply_batch(0, jnp.asarray(h), masks)
+    dense = np.asarray(dense_ffn(jnp.asarray(h), w, activation="relu"))
+    np.testing.assert_allclose(np.asarray(y_seg), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_seg), dense, rtol=1e-4, atol=1e-4)
+    # the kernel choice must not change the I/O accounting
+    assert res_seg.merged.io.seconds == res_ref.merged.io.seconds
+    # and it also serves the prefetch pipeline (imperfect speculation)
+    spec = masks.copy()
+    spec[:, ::4] = False
+    rt_seg.start_prefetch()
+    try:
+        rt_seg.begin_layer(0, spec)
+        y_pipe, _, _ = rt_seg.complete_layer(0, jnp.asarray(h), masks)
+    finally:
+        rt_seg.stop_prefetch()
+    np.testing.assert_allclose(np.asarray(y_pipe), dense, rtol=1e-4, atol=1e-4)
+
+
+def test_segment_kernel_rejects_non_relu_activations(rng):
+    """Block over-coverage only contributes zero when act(pre<=0)==0, so the
+    segments kernel must refuse silu/gelu archs instead of going silently
+    wrong."""
+    d, n = 32, 256
+    cfg = get_config("granite-3-2b", reduced=True, d_model=d, activation="silu")
+    w = FFNWeights(
+        w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
+        w_gate=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32))
+    import pytest
+    with pytest.raises(ValueError, match="relu"):
+        OffloadedFFNRuntime(cfg, [np.asarray(make_bundles(w))],
+                            [identity_placement(n)],
+                            engine_cfg=EngineConfig(ffn_kernel="segments"))
+
+
 def test_io_summary_aggregates_from_sums(rng):
     """Satellite fix: effective_bandwidth / cache_hit_rate were means of
     per-layer ratios; they must be traffic-weighted (summed numerators over
