@@ -22,8 +22,13 @@ writes ``BENCH_prefetch.json``:
 
   PYTHONPATH=src python benchmarks/serving_pipeline.py [--quick] [--check]
 
+A second arm benchmarks the slot-based continuous-batching server against the
+historic length-grouped lockstep path on a mixed-prompt-length Poisson-arrival
+workload and writes ``BENCH_serving.json``.
+
 ``--check`` is the CI gate: non-zero exit unless pipelined decode tokens/s
->= serial within tolerance AND the oracle arm is token-identical to serial.
+>= serial within tolerance AND the oracle arm is token-identical to serial
+AND continuous-batching tokens/s >= --serving-tolerance x length-grouped.
 """
 from __future__ import annotations
 
@@ -253,6 +258,8 @@ def bench_prefetch_engine_loop(quick: bool = False) -> dict:
     sched = IOScheduler(overlap=True)
     summary = None
     for _ in range(repeats):                     # arms interleaved per repeat
+        for rt in (rt_s, rt_p, rt_d):            # per-repeat counters: the
+            rt.reset_stats()                     # reported topup covers ONE
         best["serial"] = max(best["serial"], serial_run(rt_s, warm, warm + T))
         sched.reset()
         tok_s = pipe_run(rt_p, warm, warm + T, scheduler=sched)
@@ -387,6 +394,120 @@ def bench_prefetch_e2e(quick: bool = False) -> dict:
 
 
 
+def bench_continuous_batching(quick: bool = False, seed: int = 0) -> dict:
+    """Continuous batching vs length-grouped lockstep decode (BENCH_serving).
+
+    Workload: mixed prompt lengths x mixed max_new_tokens with Poisson
+    arrivals (arrival clock measured in decode steps, so the schedule is
+    deterministic and no real sleeping pollutes the timing).
+
+      * continuous — one slot-based InferenceServer: requests are admitted
+        into freed slots mid-flight and retire individually, so a slot never
+        burns steps on a finished request;
+      * grouped — the historic ServingEngine behavior, emulated on the same
+        machinery for a fair per-step cost: one server per exact prompt
+        length, every request decoded in lockstep to the GROUP's max
+        max_new_tokens (extra tokens discarded), groups served sequentially,
+        all requests available up front (which only flatters this baseline).
+
+    Both arms share one jitted decode (slot count == group size), produce the
+    same useful tokens, and report decode-only throughput: useful decode
+    tokens / summed decode-iteration wall. The grouped arm's waste is
+    structural — lockstep slot-steps for already-finished requests and no
+    cross-length sharing — so continuous wins on efficiency, not noise.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import Request
+    from repro.serving.server import InferenceServer
+
+    if quick:
+        lengths, new_tok = (8, 16), (4, 6, 10, 16)
+    else:
+        lengths, new_tok = (8, 16, 24), (6, 10, 18, 30)
+    slots = len(new_tok)
+    max_len = max(lengths) + max(new_tok) + 2
+    repeats = 2 if quick else 3
+    cfg = get_config("granite-3-2b", reduced=True, vocab_size=256)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=g * len(new_tok) + i,
+                    prompt=rng.integers(0, 256, T).astype(np.int32),
+                    max_new_tokens=n)
+            for g, T in enumerate(lengths) for i, n in enumerate(new_tok)]
+    # Poisson arrivals at ~1 request per decode step, in submission order
+    arrivals = np.cumsum(rng.exponential(1.0, len(reqs)))
+    useful_decode_tokens = sum(r.max_new_tokens - 1 for r in reqs)
+    # one shared jitted decode: every server below runs slot count == `slots`,
+    # so no arm pays a recompile inside its timed region
+    decode_fn = jax.jit(lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+
+    def run_continuous() -> dict:
+        server = InferenceServer(model, params, max_slots=slots,
+                                 max_len=max_len, seed=seed,
+                                 decode_fn=decode_fn)
+        i = 0
+        while i < len(reqs) or server.has_work:
+            while i < len(reqs) and arrivals[i] <= server.stats.decode_steps:
+                server.submit(reqs[i])
+                i += 1
+            if server.has_work:
+                server.step()
+            else:                      # idle: jump the clock to the arrival
+                server.submit(reqs[i])
+                i += 1
+        st = server.stats
+        return dict(decode_seconds=st.decode_seconds,
+                    decode_steps=st.decode_steps, occupancy=st.occupancy,
+                    tokens_per_s=useful_decode_tokens / st.decode_seconds)
+
+    def run_grouped() -> dict:
+        decode_seconds = 0.0
+        decode_steps = slot_steps = 0
+        by_len = {}
+        for r in reqs:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for group in by_len.values():
+            lockstep = max(r.max_new_tokens for r in group)
+            server = InferenceServer(model, params, max_slots=len(group),
+                                     max_len=max_len, seed=seed,
+                                     decode_fn=decode_fn)
+            for r in group:            # every request decodes to the group max
+                server.submit(Request(uid=r.uid, prompt=r.prompt,
+                                      max_new_tokens=lockstep))
+            server.drain()
+            decode_seconds += server.stats.decode_seconds
+            decode_steps += server.stats.decode_steps
+            slot_steps += server.stats.slot_steps_active
+        return dict(decode_seconds=decode_seconds, decode_steps=decode_steps,
+                    occupancy=slot_steps / max(decode_steps * slots, 1),
+                    tokens_per_s=useful_decode_tokens / decode_seconds)
+
+    run_continuous(), run_grouped()                   # compile warmup
+    best = {"continuous": None, "grouped": None}
+    for _ in range(repeats):                          # arms interleaved
+        for name, fn in (("continuous", run_continuous),
+                         ("grouped", run_grouped)):
+            r = fn()
+            if best[name] is None or r["tokens_per_s"] > best[name]["tokens_per_s"]:
+                best[name] = r
+    return {
+        "continuous": {k: round(v, 4) for k, v in best["continuous"].items()},
+        "grouped": {k: round(v, 4) for k, v in best["grouped"].items()},
+        "speedup": round(best["continuous"]["tokens_per_s"]
+                         / best["grouped"]["tokens_per_s"], 3),
+        "meta": {
+            "arch": "granite-3-2b (reduced)", "slots": slots,
+            "prompt_lengths": list(lengths), "max_new_tokens": list(new_tok),
+            "n_requests": len(reqs), "useful_decode_tokens": useful_decode_tokens,
+            "arrivals": "Poisson, ~1 request/decode-step, grouped arm exempt",
+            "repeats": repeats,
+        },
+    }
+
+
 def bench_placement_search(quick: bool = False) -> dict:
     """Offline placement search: reference per-edge greedy loop vs the
     batched array-native implementation (bit-identical placements asserted
@@ -424,7 +545,12 @@ def main() -> None:
                     help="--check passes if pipelined >= tolerance * serial "
                          "(shared CI runners are noisy; the committed "
                          "BENCH_prefetch.json shows the real improvement)")
+    ap.add_argument("--serving-tolerance", type=float, default=1.0,
+                    help="--check passes if continuous-batching decode "
+                         "tokens/s >= this x length-grouped tokens/s (the "
+                         "committed BENCH_serving.json shows the real margin)")
     ap.add_argument("--out", default="BENCH_prefetch.json")
+    ap.add_argument("--serving-out", default="BENCH_serving.json")
     args = ap.parse_args()
 
     report = {
@@ -434,7 +560,11 @@ def main() -> None:
         "quick": args.quick,
     }
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
-    print(json.dumps(report, indent=2))
+    serving = dict(bench_continuous_batching(quick=args.quick),
+                   quick=args.quick)
+    pathlib.Path(args.serving_out).write_text(
+        json.dumps(serving, indent=2) + "\n")
+    print(json.dumps({**report, "continuous_batching": serving}, indent=2))
     if args.check:
         el, e2e = report["engine_loop"], report["e2e"]
         if not e2e["oracle_token_identical"]:
@@ -449,6 +579,14 @@ def main() -> None:
               f"tok/s vs serial {el['serial_tokens_per_s']} "
               f"({el['improvement']}x, emulated device latency), "
               f"oracle token-identical e2e")
+        cont = serving["continuous"]["tokens_per_s"]
+        grp = serving["grouped"]["tokens_per_s"]
+        if cont < args.serving_tolerance * grp:
+            sys.exit(f"continuous batching regressed: {cont:.1f} tok/s < "
+                     f"{args.serving_tolerance} x grouped ({grp:.1f})")
+        print(f"serving gate OK: continuous {cont:.1f} tok/s vs "
+              f"length-grouped {grp:.1f} ({serving['speedup']}x on the "
+              f"mixed-length Poisson workload)")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
-"""Serving driver: batched prefill + decode, resident or through the full
-RIPPLE offload runtime (predict -> batched engine step -> sparse FFN from
-flash bundles, with double-buffered I/O-compute overlap accounting).
+"""Serving driver: slot-based continuous batching (InferenceServer), resident
+or through the full RIPPLE offload runtime (predict -> batched engine step ->
+sparse FFN from flash bundles, with double-buffered I/O-compute overlap).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --requests 8 --prompt-len 32 --new-tokens 16 \
-      [--mode offload] [--no-overlap] [--no-placement] [--kv-quant]
+      [--mode offload] [--slots 4] [--arrival-rate 2.0] [--stream] \
+      [--no-overlap] [--no-placement] [--kv-quant]
+
+`--slots N` fixes the decode-slot pool (default: one slot per request — the
+one-shot batch). `--arrival-rate R` draws Poisson request arrivals at R req/s
+and admits them mid-flight as slots free up; `--stream` prints tokens as they
+are emitted.
 """
 import argparse
 import time
@@ -15,8 +21,8 @@ import numpy as np
 from repro.configs import ASSIGNED_CONFIGS, get_config
 from repro.core import EngineConfig, IOScheduler
 from repro.models import build_model
-from repro.serving.engine import (Request, ServingEngine,
-                                  build_offload_runtime)
+from repro.serving.engine import Request, build_offload_runtime
+from repro.serving.server import InferenceServer
 from repro.utils import logger
 
 
@@ -32,6 +38,14 @@ def main() -> None:
                     help="offload = serve the decode FFNs from simulated flash")
     ap.add_argument("--offload", action="store_true",
                     help="deprecated alias for --mode offload")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode-slot pool size for continuous batching "
+                         "(0 = one slot per request)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson request arrivals per second; 0 = all "
+                         "requests available at t=0")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each request's tokens as they are emitted")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable I/O-compute overlap in the offload scheduler")
     ap.add_argument("--prefetch", action="store_true",
@@ -68,32 +82,58 @@ def main() -> None:
         logger.info("offload runtime calibrated: %d layer engines in %.2fs",
                     offload.n_layers, time.perf_counter() - t0)
 
-    engine = ServingEngine(model, params,
-                           max_len=args.prompt_len + args.new_tokens + 8,
-                           mode=mode, offload=offload, scheduler=scheduler,
-                           prefetch=args.prefetch)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens,
                     temperature=args.temperature)
             for i in range(args.requests)]
+    arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate, len(reqs)))
+                if args.arrival_rate > 0 else np.zeros(len(reqs)))
+
+    on_token = None
+    if args.stream:
+        def on_token(uid: int, tok: int) -> None:
+            logger.info("  [stream] req %d += token %d", uid, tok)
+
+    server = InferenceServer(
+        model, params, max_slots=args.slots or len(reqs),
+        max_len=args.prompt_len + args.new_tokens + 8,
+        mode=mode, offload=offload, scheduler=scheduler,
+        prefetch=args.prefetch, seed=args.seed)
+    handles = []
     t0 = time.perf_counter()
-    results = engine.serve(reqs, seed=args.seed)
+    try:
+        i = 0
+        while i < len(reqs) or server.has_work:
+            now = time.perf_counter() - t0
+            while i < len(reqs) and arrivals[i] <= now:
+                handles.append(server.submit(reqs[i], on_token=on_token))
+                i += 1
+            if server.has_work:
+                server.step()
+            elif i < len(reqs):                 # idle until the next arrival
+                time.sleep(min(arrivals[i] - now, 0.01))
+    finally:
+        server.close()
     wall = time.perf_counter() - t0
+    results = [h.result for h in handles]
     n_tok = sum(len(r.tokens) for r in results)
-    logger.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
-                len(results), n_tok, wall, n_tok / wall)
+    logger.info("served %d requests, %d tokens in %.2fs (%.1f tok/s), "
+                "slot occupancy %.0f%% over %d decode steps",
+                len(results), n_tok, wall, n_tok / wall,
+                server.stats.occupancy * 100, server.stats.decode_steps)
     for r in results[:3]:
-        logger.info("  req %d: prefill %.0fms decode %.0fms io %.0fms -> %s...",
+        logger.info("  req %d: prefill %.0fms decode %.0fms io %.0fms "
+                    "finish=%s -> %s...",
                     r.uid, r.prefill_seconds * 1e3, r.decode_seconds * 1e3,
-                    r.io_seconds * 1e3, r.tokens[:6])
+                    r.io_seconds * 1e3, r.finish_reason, r.tokens[:6])
 
     if mode == "offload":
         s = offload.io_summary()
         logger.info("offload I/O: %.2fms/token run_len=%.2f bw=%.0fMB/s hit=%.2f",
                     s["io_seconds_per_token"] * 1e3, s["mean_run_length"],
                     s["effective_bandwidth"] / 1e6, s["cache_hit_rate"])
-        p = engine.scheduler.summary()
+        p = server.scheduler.summary()
         logger.info("pipeline (host-measured compute + modeled io): "
                     "serial %.2fms/token overlapped %.2fms/token "
                     "(%.1f%% hidden, overlap=%s)",

@@ -69,6 +69,28 @@ def kv_write(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray, start) -> K
     )
 
 
+def _row_slots(k_new: jnp.ndarray, positions: jnp.ndarray):
+    """Per-row scatter indices for [B, T, ...] writes starting at positions[b]."""
+    B, T = k_new.shape[0], k_new.shape[1]
+    rows = jnp.arange(B)[:, None]
+    slots = positions.astype(jnp.int32)[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    return rows, slots
+
+
+def kv_write_rows(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                  positions: jnp.ndarray) -> KVCache:
+    """Per-row write: [B, T, KV, hd] at slots [positions[b], positions[b]+T).
+
+    The continuous-batching decode path: every slot of the batch sits at its
+    own sequence position, so the write start is a [B] vector instead of the
+    shared scalar `kv_write` takes."""
+    rows, slots = _row_slots(k_new, positions)
+    return KVCache(
+        k=cache.k.at[rows, slots].set(k_new.astype(cache.k.dtype)),
+        v=cache.v.at[rows, slots].set(v_new.astype(cache.v.dtype)),
+    )
+
+
 def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: [B, T, KV, hd] -> (int8 values, per-[B,T,KV] scales)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -91,6 +113,20 @@ def quant_kv_write(cache: QuantKVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
             cache.k_scale, ks.astype(cache.k_scale.dtype), idx3),
         v_scale=jax.lax.dynamic_update_slice(
             cache.v_scale, vs.astype(cache.v_scale.dtype), idx3),
+    )
+
+
+def quant_kv_write_rows(cache: QuantKVCache, k_new: jnp.ndarray,
+                        v_new: jnp.ndarray, positions: jnp.ndarray) -> QuantKVCache:
+    """Per-row variant of `quant_kv_write` (see `kv_write_rows`)."""
+    kq, ks = _quantize(k_new)
+    vq, vs = _quantize(v_new)
+    rows, slots = _row_slots(k_new, positions)
+    return QuantKVCache(
+        k=cache.k.at[rows, slots].set(kq),
+        v=cache.v.at[rows, slots].set(vq),
+        k_scale=cache.k_scale.at[rows, slots].set(ks.astype(cache.k_scale.dtype)),
+        v_scale=cache.v_scale.at[rows, slots].set(vs.astype(cache.v_scale.dtype)),
     )
 
 

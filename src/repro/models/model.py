@@ -202,7 +202,9 @@ class Model:
 
     def decode_step(self, params: Params, tokens: jnp.ndarray, position: jnp.ndarray,
                     cache: Any, window: int = 0) -> Tuple[jnp.ndarray, Any]:
-        """tokens: [B, 1]; position: scalar int32 (position of these tokens)."""
+        """tokens: [B, 1]; position: scalar int32 shared by the batch, or a
+        [B] int32 vector of per-slot positions (continuous-batching decode,
+        decoder-only stacks only — the encdec path takes the shared scalar)."""
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens, cfg)
         if cfg.is_encdec:

@@ -19,7 +19,8 @@ from repro.models import ssm
 from repro.models.kvcache import (KVCache, QuantKVCache, SWACache,
                                   attend_full_cache, attend_swa_cache,
                                   init_kv_cache, init_quant_kv_cache,
-                                  init_swa_cache, kv_write, quant_kv_write,
+                                  init_swa_cache, kv_write, kv_write_rows,
+                                  quant_kv_write, quant_kv_write_rows,
                                   swa_write)
 from repro.models.layers import (apply_norm, attention_forward, ffn_forward,
                                  init_attention, init_ffn, init_ffn_predictor,
@@ -262,6 +263,16 @@ def stack_prefill(
 
 # -- single-token decode -----------------------------------------------------------
 
+def _decode_positions(position: jnp.ndarray, B: int) -> jnp.ndarray:
+    """[B, 1] decode positions from either a shared scalar or a per-slot [B]
+    vector (the continuous-batching server: every KV-cache slot sits at its
+    own sequence position)."""
+    pos = jnp.asarray(position).astype(jnp.int32)
+    if pos.ndim == 1:
+        return pos[:, None]
+    return jnp.broadcast_to(pos, (B, 1))
+
+
 def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
                   position: jnp.ndarray, cfg: ModelConfig, kind: str,
                   window: int) -> Tuple[jnp.ndarray, Any]:
@@ -269,7 +280,10 @@ def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
 
     Shared by the jit'd scan path (stack_decode_step) and the host-driven
     layerwise path (stack_decode_step_layerwise) so both run identical math.
+    `position` is a shared scalar or a per-slot [B] vector; the full-cache
+    writes pick the matching (slice vs per-row scatter) variant.
     """
+    per_row = jnp.asarray(position).ndim == 1
     normed = apply_norm(sp["norm1"], h, cfg)
     if kind == "attn":
         from repro.models.layers import _project_qkv
@@ -280,10 +294,12 @@ def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
             cj = swa_write(cj, k, v, pos_arr)
             mix = attend_swa_cache(q, cj, pos_arr, window or cfg.sliding_window)
         elif isinstance(cj, QuantKVCache):
-            cj = quant_kv_write(cj, k, v, position)
+            cj = (quant_kv_write_rows(cj, k, v, position) if per_row
+                  else quant_kv_write(cj, k, v, position))
             mix = attend_full_cache(q, cj, pos_arr)
         else:
-            cj = kv_write(cj, k, v, position)
+            cj = (kv_write_rows(cj, k, v, position) if per_row
+                  else kv_write(cj, k, v, position))
             mix = attend_full_cache(q, cj, pos_arr)
         return mix @ sp["mixer"]["wo"], cj
     if kind == "mamba":
@@ -298,7 +314,7 @@ def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
 def stack_decode_step(
     stack: Params,
     x: jnp.ndarray,            # [B, 1, d]
-    position: jnp.ndarray,     # scalar int32 — position of this token
+    position: jnp.ndarray,     # scalar int32 (shared) or [B] per-slot positions
     cache: Params,
     cfg: ModelConfig,
     window: int = 0,
@@ -306,7 +322,7 @@ def stack_decode_step(
     P = stack_period(cfg)
     kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
     B = x.shape[0]
-    pos_arr = jnp.broadcast_to(position.astype(jnp.int32), (B, 1))
+    pos_arr = _decode_positions(position, B)
 
     def group_fn(carry, inp):
         h = carry
@@ -354,7 +370,7 @@ def stack_groups(groups: List[Params]) -> Params:
 def stack_decode_step_layerwise(
     param_groups: List[Params],
     x: jnp.ndarray,            # [B, 1, d]
-    position: jnp.ndarray,     # scalar int32
+    position: jnp.ndarray,     # scalar int32 (shared) or [B] per-slot positions
     cache_groups: List[Params],
     cfg: ModelConfig,
     window: int = 0,
@@ -373,7 +389,7 @@ def stack_decode_step_layerwise(
     P = stack_period(cfg)
     kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
     B = x.shape[0]
-    pos_arr = jnp.broadcast_to(position.astype(jnp.int32), (B, 1))
+    pos_arr = _decode_positions(position, B)
     h = x
     dense_idx = 0
     new_groups: List[Params] = []

@@ -1,0 +1,12 @@
+"""Serving front-ends: slot-based continuous batching + the one-shot wrapper."""
+from repro.serving.engine import (OffloadedFFNRuntime, PrefetchWorker, Request,
+                                  Result, ServingEngine, build_offload_runtime,
+                                  request_key, sample_token, sample_tokens)
+from repro.serving.server import (InferenceServer, RequestHandle, RequestState,
+                                  ServerStats)
+
+__all__ = [
+    "InferenceServer", "OffloadedFFNRuntime", "PrefetchWorker", "Request",
+    "RequestHandle", "RequestState", "Result", "ServerStats", "ServingEngine",
+    "build_offload_runtime", "request_key", "sample_token", "sample_tokens",
+]

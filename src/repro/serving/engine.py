@@ -1,6 +1,14 @@
-"""Serving engine: batched prefill + decode, resident or flash-offloaded.
+"""Serving building blocks: requests/results, sampling streams, and the
+flash-offloaded FFN runtime shared by both serving front-ends.
 
-Two modes, one `serve()`:
+Front-ends (see `repro.serving.server` for the primary one):
+  * `InferenceServer` (server.py) — slot-based continuous batching with an
+    explicit request lifecycle, mid-flight admission, per-request retirement,
+    and streaming. The serving runtime proper.
+  * `ServingEngine` (here) — the historic one-shot `serve()` API, kept as a
+    thin submit-all + drain wrapper over InferenceServer.
+
+Two modes, both front-ends:
   * resident  — all weights in device memory; jit'd prefill/decode only.
   * offload   — the paper's §5 online stage, end-to-end: prefill runs dense
     (the paper offloads only the memory-dominant decode FFN), then every
@@ -50,7 +58,6 @@ from repro.core.predictor import (PredictorParams, predict_mask,
 from repro.core.sparse_ffn import sparse_ffn_from_bundles
 from repro.core.storage import UFSDevice
 from repro.models import transformer
-from repro.models.layers import apply_norm, embed_tokens, unembed
 from repro.models.model import Model
 
 
@@ -60,6 +67,9 @@ class Request:
     prompt: np.ndarray          # [T] int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    # generation stops the step any of these tokens is sampled (the stop token
+    # IS included in the output); honored in resident and offload decode alike
+    stop_tokens: tuple = ()
 
 
 @dataclasses.dataclass
@@ -69,13 +79,25 @@ class Result:
     prefill_seconds: float
     decode_seconds: float
     io_seconds: float = 0.0            # this request's attributed flash I/O
-    # Group-level pipelined decode latency. In prefetch mode this is MEASURED:
-    # the summed per-token wall clock of the real overlap pipeline (worker I/O
-    # running under device compute) — scheduler.summary()'s measured_* keys
-    # carry the reconciliation against the analytic model. In serial offload
-    # mode it is the modeled double-buffered schedule (stage compute from the
-    # measured token wall apportioned by FLOPs, stage io from the UFS model).
+    # Pipelined decode latency summed over the decode iterations this request
+    # was active in. In prefetch mode this is MEASURED: the per-token wall
+    # clock of the real overlap pipeline (worker I/O running under device
+    # compute) — scheduler.summary()'s measured_* keys carry the
+    # reconciliation against the analytic model. In serial offload mode it is
+    # the modeled double-buffered schedule (stage compute from the measured
+    # token wall apportioned by FLOPs, stage io from the UFS model).
     overlapped_seconds: float = 0.0
+    finish_reason: str = "length"      # "length" | "stop"
+
+
+def request_key(base_key, uid: int):
+    """Per-request sampling stream root: `fold_in(serve seed, uid)`.
+
+    Token t of request `uid` is sampled from `fold_in(request_key(...), t)`,
+    so a request's sampled tokens depend only on (seed, uid, t) and its own
+    logits — NOT on which batch, group, or decode slot the request landed in
+    (grouping-invariant sampling)."""
+    return jax.random.fold_in(base_key, uid)
 
 
 def sample_tokens(logits: jnp.ndarray, temperatures, key) -> jnp.ndarray:
@@ -481,7 +503,20 @@ class OffloadedFFNRuntime:
 # ---------------------------------------------------------------------------
 
 class ServingEngine:
-    """Continuous-batching-lite: fixed decode batch, greedy/temperature sampling."""
+    """One-shot batch front-end, kept as a thin compatibility wrapper.
+
+    `serve(requests)` submits every request to a fresh slot-based
+    `InferenceServer` (one slot per request) and drains it. For greedy
+    same-length request groups the output is token-identical to the historic
+    group-by-length lockstep path (rows are independent and sampling streams
+    are per-request); what changed underneath: mixed-length requests now share
+    one continuous batch, each request retires at its own `max_new_tokens` or
+    stop token (freed rows leave the activation-mask unions, so finished
+    requests stop incurring attributed flash I/O), and in prefetch mode ONE
+    `PrefetchWorker` spans the whole call instead of one per group. New code
+    should use `repro.serving.server.InferenceServer` directly — it adds
+    mid-flight admission and streaming on the same machinery.
+    """
 
     def __init__(self, model: Model, params: Any, max_len: int = 512,
                  swa: bool = False, mode: str = "resident",
@@ -524,187 +559,23 @@ class ServingEngine:
             lambda p, t, pos, c: model.decode_step(p, t, pos, c))
 
     def serve(self, requests: List[Request], seed: int = 0) -> List[Result]:
-        results = []
-        key = jax.random.PRNGKey(seed)
-        for g, group in enumerate(_group_by_len(requests)):
-            # distinct sampling stream per prompt-length group
-            group_key = jax.random.fold_in(key, g)
-            if self.mode == "offload":
-                results.extend(self._serve_group_offload(group, group_key))
-            else:
-                results.extend(self._serve_group_resident(group, group_key))
-        return results
-
-    # -- resident (dense jit) path ------------------------------------------
-    def _serve_group_resident(self, group: List[Request], key) -> List[Result]:
-        toks = np.stack([r.prompt for r in group])
-        temps = np.array([r.temperature for r in group], dtype=np.float32)
-        B, T = toks.shape
-        cache = self.model.init_cache(B, self.max_len, swa=self.swa)
-        t0 = time.perf_counter()
-        logits, cache = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, cache)
-        logits.block_until_ready()
-        t_prefill = time.perf_counter() - t0
-        max_new = max(r.max_new_tokens for r in group)
-        outs = [[] for _ in group]
-        cur = sample_tokens(logits[:, -1], temps, key)
-        t0 = time.perf_counter()
-        for step in range(max_new):
-            for i in range(B):
-                outs[i].append(int(cur[i]))
-            key = jax.random.fold_in(key, step)
-            logits, cache = self._decode(
-                self.params, cur[:, None].astype(jnp.int32),
-                jnp.int32(T + step), cache)
-            cur = sample_tokens(logits[:, 0], temps, key)
-        jax.block_until_ready(cur)
-        t_decode = time.perf_counter() - t0
-        return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
-                       prefill_seconds=t_prefill, decode_seconds=t_decode)
-                for r, o in zip(group, outs)]
-
-    # -- offloaded (paper §5) path ------------------------------------------
-    def _oracle_w_ups(self) -> List[jnp.ndarray]:
-        """Resident w_up handles per dense layer, in capture order — the exact
-        ReLU support oracle the predictor approximates. The simulated flash
-        still pays for every neuron the mask selects."""
-        cfg = self.model.cfg
-        P = transformer.stack_period(cfg)
-        G = cfg.n_layers // P
-        ffns = cfg.ffn_kinds()
-        w_ups = []
-        for g in range(G):
-            for j in range(P):
-                if ffns[j] == "dense":
-                    w_ups.append(self.params["stack"][f"sub_{j}"]["ffn"]["w_up"][g])
-        return w_ups
-
-    def _serve_group_offload(self, group: List[Request], key) -> List[Result]:
-        cfg = self.model.cfg
-        runtime = self.offload
-        toks = np.stack([r.prompt for r in group])
-        temps = np.array([r.temperature for r in group], dtype=np.float32)
-        B, T = toks.shape
-        cache = self.model.init_cache(B, self.max_len, swa=self.swa)
-        t0 = time.perf_counter()
-        logits, cache = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, cache)
-        logits.block_until_ready()
-        t_prefill = time.perf_counter() - t0
-
-        param_groups = transformer.unstack_groups(self.params["stack"], cfg)
-        cache_groups = transformer.unstack_groups(cache, cfg)
-        w_ups = self._oracle_w_ups() if self.oracle else None
-        if w_ups is not None and len(w_ups) != runtime.n_layers:
-            raise ValueError(
-                f"runtime has {runtime.n_layers} layer engines, model has "
-                f"{len(w_ups)} dense FFN layers")
-
-        max_new = max(r.max_new_tokens for r in group)
-        outs = [[] for _ in group]
-        req_io = np.zeros(B)
-        n_layers = runtime.n_layers
-
-        def true_masks_for(dense_idx: int, h2: jnp.ndarray) -> Optional[np.ndarray]:
-            if w_ups is not None:
-                return np.asarray(h2 @ w_ups[dense_idx] > 0)       # exact support
-            return None                                            # predictor path
-
-        # Sync-free layerwise decode: the FFN override never blocks on its
-        # output — XLA dispatch runs ahead across layers while the engine
-        # (host-side) serves the NEXT layer's masks and payload gather. The
-        # only per-layer host materialisation is the small activation-mask
-        # matrix the engine needs. One end-of-token sync measures the whole
-        # token; the scheduler apportions it across stages by modeled FFN
-        # FLOPs instead of per-layer wall clocks (which would each force a
-        # device sync).
-        def ffn_override(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
-            h2 = normed2[:, 0]                                     # [B, d]
-            y, res = runtime.ffn_apply_batch(dense_idx, h2,
-                                             true_masks_for(dense_idx, h2))
-            flops = 2.0 * B * res.merged.n_activated * runtime.n_mats * cfg.d_model
-            self.scheduler.record_stage(dense_idx,
-                                        io_seconds=res.merged.io.seconds,
-                                        flops=flops)
-            np.add(req_io, res.req_io_seconds, out=req_io)
-            return y[:, None]
-
-        # Pipelined decode — EXECUTES the overlap the scheduler models. At
-        # layer k the serving thread (1) submits layer k+1's prefetch from the
-        # cross-layer lookahead prediction of k's pre-FFN hidden, then (2)
-        # completes layer k against its true mask (waiting on the worker only
-        # if the prefetch hasn't landed, topping up mis-predictions with a
-        # synchronous read). The worker thus probes/reads/stages layer k+1
-        # while the device computes layer k's FFN and layer k+1's mixer.
-        # With lookahead="oracle" every layer submits its own TRUE mask
-        # (depth 0): nothing overlaps, but the worker machinery runs — the
-        # exactness arm that must be stats-identical to serial.
-        la_params = self.lookahead if not isinstance(self.lookahead, str) \
-            else None
-        if la_params is None and self.lookahead is None:
-            la_params = runtime.lookahead      # trained with the runtime
-        if la_params is not None and la_params is not runtime.lookahead:
-            runtime.lookahead = la_params      # predict_lookahead uses these
-            runtime._lookahead_np = None
-
-        def ffn_override_prefetch(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
-            h2 = normed2[:, 0]                                     # [B, d]
-            masks_true = true_masks_for(dense_idx, h2)
-            if masks_true is None:
-                masks_true = np.asarray(predict_mask(
-                    runtime.predictors[dense_idx], h2))
-            if dense_idx == 0 or la_params is None:
-                runtime.begin_layer(dense_idx, masks_true)         # depth 0
-            if la_params is not None and dense_idx + 1 < n_layers:
-                spec = runtime.predict_lookahead(dense_idx, np.asarray(h2))
-                runtime.begin_layer(dense_idx + 1, spec)
-            y, res, meas = runtime.complete_layer(dense_idx, h2, masks_true)
-            flops = 2.0 * B * res.merged.n_activated * runtime.n_mats * cfg.d_model
-            self.scheduler.record_stage(dense_idx,
-                                        io_seconds=res.merged.io.seconds,
-                                        flops=flops, measured=meas)
-            np.add(req_io, res.req_io_seconds, out=req_io)
-            return y[:, None]
-
-        override = ffn_override_prefetch if self.prefetch else ffn_override
-        if self.prefetch:
-            runtime.start_prefetch()
-        cur = sample_tokens(logits[:, -1], temps, key)
-        t0 = time.perf_counter()
-        overlapped_total = 0.0
+        """Submit every request to a fresh InferenceServer (one decode slot
+        per request) and drain it. Results come back in request order."""
+        from repro.serving.server import InferenceServer
+        if not requests:
+            return []
+        server = InferenceServer(
+            self.model, self.params, max_slots=len(requests),
+            max_len=self.max_len, swa=self.swa, mode=self.mode,
+            offload=self.offload, scheduler=self.scheduler, oracle=self.oracle,
+            prefetch=self.prefetch, lookahead=self.lookahead, seed=seed,
+            decode_fn=self._decode if self.mode == "resident" else None)
         try:
-            for step in range(max_new):
-                for i in range(B):
-                    outs[i].append(int(cur[i]))
-                key = jax.random.fold_in(key, step)
-                token_t0 = time.perf_counter()
-                x = embed_tokens(self.params["embed"], cur[:, None].astype(jnp.int32), cfg)
-                self.scheduler.begin_token()
-                h, cache_groups = transformer.stack_decode_step_layerwise(
-                    param_groups, x, jnp.int32(T + step), cache_groups, cfg,
-                    ffn_override=override)
-                h = apply_norm(self.params["final_norm"], h, cfg)
-                logits = unembed(self.params["embed"], h, cfg)
-                cur = sample_tokens(logits[:, 0], temps, key)
-                cur.block_until_ready()                   # ONE sync per token
-                token_wall = time.perf_counter() - token_t0
-                timing = self.scheduler.end_token(
-                    compute_seconds=token_wall,
-                    wall_seconds=token_wall if self.prefetch else None)
-                # prefetch mode: report what actually happened (measured wall
-                # clock); otherwise the analytic double-buffered schedule
-                overlapped_total += (timing.measured_wall_seconds
-                                     if self.prefetch
-                                     else timing.overlapped_seconds)
+            handles = [server.submit(r) for r in requests]
+            server.drain()
         finally:
-            if self.prefetch:
-                runtime.stop_prefetch()
-        t_decode = time.perf_counter() - t0
-        return [Result(uid=r.uid, tokens=o[: r.max_new_tokens],
-                       prefill_seconds=t_prefill, decode_seconds=t_decode,
-                       io_seconds=float(io), overlapped_seconds=overlapped_total)
-                for r, o, io in zip(group, outs, req_io)]
+            server.close()
+        return [h.result for h in handles]
 
 
 def build_offload_runtime(
@@ -773,10 +644,3 @@ def build_offload_runtime(
     return OffloadedFFNRuntime(cfg, bundles, placements, device=device,
                                engine_cfg=engine_cfg, lookahead=lookahead,
                                lookahead_threshold=lookahead_threshold)
-
-
-def _group_by_len(requests: List[Request]) -> List[List[Request]]:
-    by_len: Dict[int, List[Request]] = {}
-    for r in requests:
-        by_len.setdefault(len(r.prompt), []).append(r)
-    return list(by_len.values())

@@ -1,0 +1,535 @@
+"""InferenceServer — slot-based continuous batching with an explicit request
+lifecycle (QUEUED -> PREFILL -> DECODE -> FINISHED).
+
+The one-shot `ServingEngine.serve()` bucketed requests by exact prompt length
+and decoded each bucket in lockstep for max(max_new_tokens) steps: mixed-length
+traffic never shared a batch, finished requests kept burning compute *and
+attributed flash I/O*, and nothing could arrive mid-flight. This module is the
+request-lifecycle runtime that replaces that barrier:
+
+  * a fixed pool of `max_slots` KV-cache decode slots, each with its own
+    sequence position (`models/transformer.py` decode steps take a per-slot
+    position vector);
+  * `submit(request) -> RequestHandle`, valid any time — including while other
+    requests are decoding (mid-flight admission);
+  * `step()` advances the server by one iteration: queued requests are
+    admitted into free slots (each gets its own dense prefill, written into
+    its slot — no group-by-length barrier), then one batched decode iteration
+    runs over the active slots;
+  * retirement on `max_new_tokens` ("length") or a stop token ("stop") frees
+    the slot immediately: the retired row is dropped from every subsequent
+    activation-mask union, so a finished request stops incurring flash I/O
+    the step it finishes;
+  * streaming via `submit(..., on_token=...)` callbacks or the pull-based
+    `stream(handle)` iterator.
+
+Offload mode rides the same loop: the [n_slots, n_neurons] activation-mask
+matrix (inactive rows zeroed) feeds `OffloadEngine.step_masks`, per-uid I/O
+attribution accumulates on each handle (summing exactly to the engines' merged
+read time), and in prefetch mode ONE `PrefetchWorker` stays up across the
+whole server run instead of starting/stopping per request group.
+
+Sampling is grouping-invariant: request `uid`'s token `t` is sampled from the
+stream `fold_in(fold_in(PRNGKey(seed), uid), t)`, so a request's tokens do not
+depend on which batch, group, or slot it landed in — serving a request alone
+and serving it inside any continuous batch produce identical output (greedy
+AND temperature sampling), which is what the admission-order identity tests
+assert.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import IOScheduler
+from repro.core.predictor import PredictorParams, predict_mask
+from repro.models import transformer
+from repro.models.layers import apply_norm, embed_tokens, unembed
+from repro.models.model import Model
+from repro.serving.engine import (OffloadedFFNRuntime, Request, Result,
+                                  request_key)
+
+
+class RequestState(enum.Enum):
+    """Lifecycle of a request inside the server."""
+    QUEUED = "queued"        # submitted, waiting for a free decode slot
+    PREFILL = "prefill"      # admitted; its prompt is being prefilled
+    DECODE = "decode"        # occupying a slot, generating tokens
+    FINISHED = "finished"    # retired; `result` is populated
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """Live view of one submitted request.
+
+    `tokens` grows as the server steps (the streaming surface — read it, or
+    register `on_token`, or drive `server.stream(handle)`); `result` is set at
+    retirement. Timing fields accumulate while the request is in flight:
+    `decode_seconds`/`overlapped_seconds` add each decode iteration's wall
+    (every active request shares the batched step, same convention as the
+    one-shot path), `io_seconds` adds this request's attributed share of the
+    engines' flash reads.
+    """
+    request: Request
+    state: RequestState = RequestState.QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None      # "length" | "stop" once FINISHED
+    result: Optional[Result] = None
+    slot: Optional[int] = None
+    on_token: Optional[Callable[[int, int], None]] = None   # (uid, token)
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    io_seconds: float = 0.0
+    overlapped_seconds: float = 0.0
+    _key: Any = None                         # fold_in(base_key, uid)
+    _order: int = 0                          # submission order
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Aggregate counters over the server's lifetime (benchmark surface)."""
+    n_slots: int = 0
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0       # wall of the batched decode iterations
+    decode_steps: int = 0
+    tokens_emitted: int = 0
+    admitted: int = 0
+    slot_steps_active: int = 0        # Σ over decode steps of active slots
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        denom = self.decode_steps * max(self.n_slots, 1)
+        return self.slot_steps_active / denom if denom else 0.0
+
+
+class InferenceServer:
+    """Slot-based continuous-batching front-end over one model.
+
+    Same mode surface as `ServingEngine` (resident | offload, optional
+    prefetch pipeline + lookahead source), but requests are individually
+    admitted, decoded at per-slot positions, and individually retired.
+    `ServingEngine.serve()` is the submit-all + drain compatibility wrapper
+    over this class.
+
+    Typical use::
+
+        server = InferenceServer(model, params, max_slots=4, max_len=256)
+        h = server.submit(Request(uid=0, prompt=prompt, max_new_tokens=32))
+        for tok in server.stream(h):      # pumps server.step() as needed
+            ...
+        server.close()
+
+    or batch-style: submit many, then `drain()`.
+    """
+
+    def __init__(self, model: Model, params: Any, *, max_slots: int = 4,
+                 max_len: int = 512, swa: bool = False, mode: str = "resident",
+                 offload: Optional[OffloadedFFNRuntime] = None,
+                 scheduler: Optional[IOScheduler] = None,
+                 oracle: bool = True, prefetch: bool = False,
+                 lookahead: Union[str, List[PredictorParams], None] = None,
+                 seed: int = 0, decode_fn=None):
+        """`decode_fn` lets a long-lived caller (ServingEngine) share one
+        jitted resident decode across servers; by default the server jits its
+        own. `lookahead` follows ServingEngine: predictor params, None (use
+        the runtime's trained lookahead), or "oracle" (zero speculation
+        depth — the exactness fallback)."""
+        if mode not in ("resident", "offload"):
+            raise ValueError(f"unknown serving mode {mode!r}")
+        cfg = model.cfg
+        if cfg.is_encdec:
+            raise ValueError("InferenceServer covers decoder-only stacks")
+        if mode == "offload":
+            if offload is None:
+                raise ValueError("mode='offload' needs an OffloadedFFNRuntime")
+            if cfg.family != "dense":
+                raise ValueError("offload serving covers dense decoder-only archs")
+        if isinstance(lookahead, str) and lookahead != "oracle":
+            raise ValueError(f"unknown lookahead mode {lookahead!r}")
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.swa = swa
+        self.mode = mode
+        self.offload = offload
+        self.oracle = oracle
+        self.prefetch = prefetch
+        self.lookahead = lookahead
+        self.scheduler = scheduler or IOScheduler(overlap=True)
+        self.stats = ServerStats(n_slots=max_slots)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._queue: "collections.deque[RequestHandle]" = collections.deque()
+        self._handles: Dict[int, RequestHandle] = {}   # queued + in-flight
+        self._finished: List[RequestHandle] = []
+        self._n_submitted = 0
+        # slot pool: per-slot handle / next-decode position / last token
+        self._slot_handle: List[Optional[RequestHandle]] = [None] * max_slots
+        self._slot_pos = np.zeros(max_slots, dtype=np.int32)
+        self._cur = np.zeros(max_slots, dtype=np.int32)
+        if mode == "resident":
+            self._cache = model.init_cache(max_slots, max_len, swa=swa)
+            self._decode_fn = decode_fn or jax.jit(
+                lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+        else:
+            self._cache_groups = transformer.unstack_groups(
+                model.init_cache(max_slots, max_len, swa=swa), cfg)
+            self._param_groups = transformer.unstack_groups(
+                params["stack"], cfg)
+            self._w_ups = _oracle_w_ups(model, params) if oracle else None
+            if self._w_ups is not None and len(self._w_ups) != offload.n_layers:
+                raise ValueError(
+                    f"runtime has {offload.n_layers} layer engines, model has "
+                    f"{len(self._w_ups)} dense FFN layers")
+            # lookahead source resolution, identical to ServingEngine: params
+            # > runtime-trained > "oracle" (depth 0)
+            la = lookahead if not isinstance(lookahead, str) else None
+            if la is None and lookahead is None:
+                la = offload.lookahead
+            if la is not None and la is not offload.lookahead:
+                offload.lookahead = la
+                offload._lookahead_np = None
+            self._la_params = la
+            if prefetch and la is not None and \
+                    cfg.activation not in ("relu", "relu2"):
+                # speculative lookahead OVER-predicts by design; the staged
+                # FFN evaluates the whole speculated union, which is only
+                # exact when act(pre <= 0) == 0. Oracle lookahead (la=None,
+                # zero speculation depth) stays exact for any activation.
+                raise ValueError(
+                    f"prefetch with speculative lookahead is exact only for "
+                    f"relu/relu2 activations, not {cfg.activation!r}; use "
+                    f"lookahead='oracle' or serve serially")
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, request: Request,
+               on_token: Optional[Callable[[int, int], None]] = None
+               ) -> RequestHandle:
+        """Queue a request; valid any time, including mid-decode.
+
+        Raises ValueError if the request cannot fit its slot: the prompt plus
+        `max_new_tokens` must fit in `max_len` KV-cache positions (prompt
+        tokens occupy [0, T); generated token i is decoded at position T+i-1,
+        so the last decode writes position T + max_new_tokens - 2 < max_len).
+        """
+        T = len(request.prompt)
+        if T < 1:
+            raise ValueError(f"request {request.uid}: empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError(f"request {request.uid}: max_new_tokens must be >= 1")
+        if T + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt ({T} tokens) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds the server's max_len "
+                f"({self.max_len}); shorten the request or raise max_len")
+        if request.uid in self._handles:
+            raise ValueError(f"duplicate request uid {request.uid}")
+        handle = RequestHandle(request=request, on_token=on_token,
+                               _key=request_key(self._base_key, request.uid),
+                               _order=self._n_submitted)
+        self._n_submitted += 1
+        self._handles[request.uid] = handle
+        self._queue.append(handle)
+        return handle
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(h is not None for h in self._slot_handle)
+
+    @property
+    def n_active(self) -> int:
+        return sum(h is not None for h in self._slot_handle)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def results(self) -> List[Result]:
+        """Finished results the server still holds, in submission order."""
+        return [h.result for h in sorted(self._finished,
+                                         key=lambda h: h._order)]
+
+    def release_finished(self) -> int:
+        """Drop the server's references to finished requests (their handles
+        stay valid for the caller). A long-lived server should call this
+        periodically — or after consuming `drain()`/`results()` — so memory
+        stays bounded by in-flight work, not by total requests served.
+        Returns the number of handles released."""
+        n = len(self._finished)
+        self._finished.clear()
+        return n
+
+    # -- the serving loop ----------------------------------------------------
+    def step(self) -> int:
+        """Advance the server one iteration: admit queued requests into free
+        slots (per-request prefill), then run one batched decode iteration
+        over the active slots. Returns the number of tokens emitted."""
+        emitted = 0
+        while self._queue and None in self._slot_handle:
+            emitted += self._admit(self._queue.popleft())
+        if any(h is not None for h in self._slot_handle):
+            emitted += self._decode_iteration()
+        return emitted
+
+    def drain(self) -> List[Result]:
+        """Step until every submitted request is finished."""
+        while self.has_work:
+            self.step()
+        return self.results()
+
+    def stream(self, handle: RequestHandle) -> Iterator[int]:
+        """Yield `handle`'s tokens as they are generated, pumping `step()`
+        whenever the caller is ahead of the server. Other in-flight requests
+        advance too — they share the batched decode iterations."""
+        i = 0
+        while True:
+            while i < len(handle.tokens):
+                yield handle.tokens[i]
+                i += 1
+            if handle.done:
+                return
+            self.step()
+
+    def close(self) -> None:
+        """Release background resources (the prefetch worker). The server
+        stays usable for inspection; further steps would restart the worker."""
+        if self.mode == "offload" and self.prefetch and self.offload is not None:
+            self.offload.stop_prefetch()
+
+    def __enter__(self) -> "InferenceServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- admission / retirement ----------------------------------------------
+    def _admit(self, handle: RequestHandle) -> int:
+        slot = self._slot_handle.index(None)
+        r = handle.request
+        handle.state = RequestState.PREFILL
+        handle.slot = slot
+        T = len(r.prompt)
+        prompt = jnp.asarray(np.asarray(r.prompt, dtype=np.int32)[None])
+        t0 = time.perf_counter()
+        small = self.model.init_cache(1, self.max_len, swa=self.swa)
+        logits, small = self.model.prefill(self.params, {"tokens": prompt}, small)
+        row = np.asarray(logits[0, -1], dtype=np.float32)   # forces the sync
+        handle.prefill_seconds = time.perf_counter() - t0
+        self.stats.prefill_seconds += handle.prefill_seconds
+        self.stats.admitted += 1
+        self._write_slot(slot, small)
+        self._slot_handle[slot] = handle
+        self._slot_pos[slot] = T
+        handle.state = RequestState.DECODE
+        tok = self._sample_row(handle, row)
+        self._cur[slot] = tok
+        self._emit(handle, tok)
+        return 1
+
+    def _write_slot(self, slot: int, small_cache: Any) -> None:
+        """Copy a freshly prefilled B=1 cache into row `slot` of the pool.
+
+        Stale KV beyond the new prompt is harmless: decode writes a position's
+        KV before attending to it, and causal masking hides everything past
+        the current position."""
+        if self.mode == "resident":
+            # stacked leaves are [G, B, ...]: batch is axis 1
+            self._cache = jax.tree_util.tree_map(
+                lambda big, s: big.at[:, slot].set(s[:, 0]),
+                self._cache, small_cache)
+        else:
+            small_groups = transformer.unstack_groups(small_cache, self.cfg)
+            self._cache_groups = [
+                jax.tree_util.tree_map(lambda big, s: big.at[slot].set(s[0]),
+                                       big_g, small_g)
+                for big_g, small_g in zip(self._cache_groups, small_groups)]
+
+    def _emit(self, handle: RequestHandle, tok: int) -> None:
+        handle.tokens.append(tok)
+        self.stats.tokens_emitted += 1
+        if handle.on_token is not None:
+            handle.on_token(handle.uid, tok)
+        if tok in handle.request.stop_tokens:
+            self._retire(handle, "stop")
+        elif len(handle.tokens) >= handle.request.max_new_tokens:
+            self._retire(handle, "length")
+
+    def _retire(self, handle: RequestHandle, reason: str) -> None:
+        handle.finish_reason = reason
+        handle.state = RequestState.FINISHED
+        handle.result = Result(
+            uid=handle.uid, tokens=list(handle.tokens),
+            prefill_seconds=handle.prefill_seconds,
+            decode_seconds=handle.decode_seconds,
+            io_seconds=handle.io_seconds,
+            overlapped_seconds=handle.overlapped_seconds,
+            finish_reason=reason)
+        self._slot_handle[handle.slot] = None       # freed for admission; the
+        handle.slot = None                          # row leaves every future mask
+        del self._handles[handle.uid]               # uid reusable once finished
+        self._finished.append(handle)
+
+    # -- sampling (per-request streams) ---------------------------------------
+    def _sample_row(self, handle: RequestHandle, row: np.ndarray) -> int:
+        """Sample token t = len(handle.tokens) of this request from its own
+        stream. Row-wise, so the value is independent of batch composition."""
+        temp = handle.request.temperature
+        if temp <= 0:
+            return int(np.argmax(row))
+        key = jax.random.fold_in(handle._key, len(handle.tokens))
+        return int(jax.random.categorical(
+            key, jnp.asarray(row, jnp.float32) / temp))
+
+    # -- decode ---------------------------------------------------------------
+    def _active_mask(self) -> np.ndarray:
+        return np.array([h is not None for h in self._slot_handle], dtype=bool)
+
+    def _decode_iteration(self) -> int:
+        active = self._active_mask()
+        if self.mode == "resident":
+            logits_rows, token_wall, req_io, over = self._decode_resident()
+        else:
+            logits_rows, token_wall, req_io, over = self._decode_offload(active)
+        self.stats.decode_seconds += token_wall
+        self.stats.decode_steps += 1
+        self.stats.slot_steps_active += int(active.sum())
+        # conservation: I/O the engine attributed to now-inactive rows (pure
+        # over-speculation splits evenly over ALL rows) is re-billed evenly to
+        # the active requests, so Σ per-request io == Σ engine merged reads
+        orphan = float(req_io[~active].sum())
+        share = orphan / max(int(active.sum()), 1)
+        emitted = 0
+        for slot in np.flatnonzero(active):
+            handle = self._slot_handle[slot]
+            handle.decode_seconds += token_wall
+            handle.overlapped_seconds += over
+            handle.io_seconds += float(req_io[slot]) + share
+            tok = self._sample_row(handle, logits_rows[slot])
+            self._slot_pos[slot] += 1
+            self._cur[slot] = tok
+            self._emit(handle, tok)                 # may free the slot
+            emitted += 1
+        return emitted
+
+    def _decode_resident(self):
+        t0 = time.perf_counter()
+        logits, self._cache = self._decode_fn(
+            self.params, jnp.asarray(self._cur)[:, None],
+            jnp.asarray(self._slot_pos), self._cache)
+        rows = np.asarray(logits[:, 0], dtype=np.float32)   # the per-token sync
+        wall = time.perf_counter() - t0
+        return rows, wall, np.zeros(self.max_slots), 0.0
+
+    # -- offload decode: masks -> batched engine step -> sparse FFN ----------
+    def _true_masks(self, dense_idx: int, h2: jnp.ndarray,
+                    active: np.ndarray) -> np.ndarray:
+        """[n_slots, n_neurons] activation masks for one layer: the exact ReLU
+        oracle (or trained predictor), with retired/free rows zeroed so they
+        leave the union — a finished request incurs no further I/O."""
+        if self._w_ups is not None:
+            masks = np.asarray(h2 @ self._w_ups[dense_idx] > 0)
+        else:
+            assert self.offload.predictors is not None, \
+                "oracle=False needs runtime predictors"
+            masks = np.asarray(predict_mask(self.offload.predictors[dense_idx], h2))
+        return masks & active[:, None]
+
+    def _decode_offload(self, active: np.ndarray):
+        cfg = self.cfg
+        runtime = self.offload
+        n_slots = self.max_slots
+        n_layers = runtime.n_layers
+        req_io = np.zeros(n_slots)
+        if self.prefetch and not runtime.prefetch_active:
+            runtime.start_prefetch()        # one worker for the whole run
+        la_params = self._la_params if self.prefetch else None
+
+        # Sync-free serial path: XLA dispatch runs ahead across layers while
+        # the engine serves each layer's masks host-side; one end-of-token
+        # sync, apportioned across stages by FLOPs (see ServingEngine notes).
+        def override(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
+            h2 = normed2[:, 0]
+            masks = self._true_masks(dense_idx, h2, active)
+            y, res = runtime.ffn_apply_batch(dense_idx, h2, masks)
+            flops = (2.0 * n_slots * res.merged.n_activated
+                     * runtime.n_mats * cfg.d_model)
+            self.scheduler.record_stage(dense_idx,
+                                        io_seconds=res.merged.io.seconds,
+                                        flops=flops)
+            np.add(req_io, res.req_io_seconds, out=req_io)
+            return y[:, None]
+
+        # Pipelined path: submit layer k+1's speculated prefetch, then
+        # complete layer k against its true mask (top-up for mis-predictions).
+        def override_prefetch(dense_idx: int, normed2: jnp.ndarray) -> jnp.ndarray:
+            h2 = normed2[:, 0]
+            masks_true = self._true_masks(dense_idx, h2, active)
+            if dense_idx == 0 or la_params is None:
+                runtime.begin_layer(dense_idx, masks_true)   # depth 0
+            if la_params is not None and dense_idx + 1 < n_layers:
+                spec = runtime.predict_lookahead(dense_idx, np.asarray(h2))
+                spec = spec & active[:, None]
+                runtime.begin_layer(dense_idx + 1, spec)
+            y, res, meas = runtime.complete_layer(dense_idx, h2, masks_true)
+            flops = (2.0 * n_slots * res.merged.n_activated
+                     * runtime.n_mats * cfg.d_model)
+            self.scheduler.record_stage(dense_idx,
+                                        io_seconds=res.merged.io.seconds,
+                                        flops=flops, measured=meas)
+            np.add(req_io, res.req_io_seconds, out=req_io)
+            return y[:, None]
+
+        ffn_override = override_prefetch if self.prefetch else override
+        t0 = time.perf_counter()
+        x = embed_tokens(self.params["embed"],
+                         jnp.asarray(self._cur)[:, None], cfg)
+        self.scheduler.begin_token()
+        h, self._cache_groups = transformer.stack_decode_step_layerwise(
+            self._param_groups, x, jnp.asarray(self._slot_pos),
+            self._cache_groups, cfg, ffn_override=ffn_override)
+        h = apply_norm(self.params["final_norm"], h, cfg)
+        logits = unembed(self.params["embed"], h, cfg)
+        rows = np.asarray(logits[:, 0], dtype=np.float32)   # ONE sync per token
+        token_wall = time.perf_counter() - t0
+        timing = self.scheduler.end_token(
+            compute_seconds=token_wall,
+            wall_seconds=token_wall if self.prefetch else None)
+        over = (timing.measured_wall_seconds if self.prefetch
+                else timing.overlapped_seconds)
+        return rows, token_wall, req_io, over
+
+
+def _oracle_w_ups(model: Model, params: Any) -> List[jnp.ndarray]:
+    """Resident w_up handles per dense layer, in capture order — the exact
+    ReLU support oracle the predictor approximates. The simulated flash still
+    pays for every neuron the mask selects."""
+    cfg = model.cfg
+    P = transformer.stack_period(cfg)
+    G = cfg.n_layers // P
+    ffns = cfg.ffn_kinds()
+    w_ups = []
+    for g in range(G):
+        for j in range(P):
+            if ffns[j] == "dense":
+                w_ups.append(params["stack"][f"sub_{j}"]["ffn"]["w_up"][g])
+    return w_ups

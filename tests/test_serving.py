@@ -125,7 +125,10 @@ def test_offload_serve_token_identical_to_resident():
         assert b.io_seconds > 0
         assert b.overlapped_seconds > 0
     p = engine.scheduler.summary()
-    assert p["tokens"] == 4
+    # max_new=4 => 3 batched decode iterations: the first token of each
+    # request comes from its prefill, and the server never runs the old
+    # path's trailing decode step whose sample was discarded
+    assert p["tokens"] == 3
     assert p["overlapped_seconds_per_token"] <= p["serial_seconds_per_token"]
     assert runtime.io_summary()["io_seconds_per_token"] > 0
 
