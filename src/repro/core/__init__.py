@@ -10,7 +10,8 @@ from repro.core.cache import (ArrayLinkingAlignedCache, ArrayS3FIFOCache,
                               CacheStats, FIFOCache, LRUCache,
                               LinkingAlignedCache, LoopCounters, S3FIFOCache,
                               make_linking_aligned_cache)
-from repro.core.coactivation import CoActivationStats, expected_io_ops, stats_from_masks
+from repro.core.coactivation import (CoActivationStats, expected_io_ops,
+                                     stats_from_mask_shards, stats_from_masks)
 from repro.core.collapse import (AdaptiveThreshold, BottleneckDetector,
                                  collapse_extents, collapse_positions,
                                  run_bounds_from_sorted, runs_from_positions)
@@ -33,7 +34,8 @@ from repro.core.sparse_ffn import (FFNWeights, dense_ffn, ffn_pre_activation,
                                    sparse_ffn_gather)
 from repro.core.storage import (UFS31, UFS40, IOStats, ManagedReader, NeuronStore,
                                 UFSDevice)
-from repro.core.trace import (SyntheticTraceConfig, relu_activation_mask,
+from repro.core.trace import (ShardedTraceWriter, SyntheticTraceConfig,
+                              iter_trace_shards, relu_activation_mask,
                               synthetic_masks, topk_activation_mask,
                               trace_model_activations)
 

@@ -11,7 +11,7 @@ column activated by the same intermediate value) are the unit of accounting — 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -72,9 +72,18 @@ class CoActivationStats:
             return np.zeros(self.n_neurons)
         return self.counts / self.n_tokens
 
-    def merge(self, other: "CoActivationStats") -> "CoActivationStats":
+    def merge(self, other: "CoActivationStats",
+              inplace: bool = False) -> "CoActivationStats":
+        """Combine two accumulators. `inplace=True` folds `other` into `self`
+        (and returns self) without allocating a third [n, n] pair matrix —
+        what the shard-streaming path uses to keep one running matrix."""
         if other.n_neurons != self.n_neurons:
             raise ValueError("cannot merge stats of different widths")
+        if inplace:
+            self.counts += other.counts
+            self.pair_counts += other.pair_counts
+            self.n_tokens += other.n_tokens
+            return self
         out = CoActivationStats(self.n_neurons)
         out.counts = self.counts + other.counts
         out.pair_counts = self.pair_counts + other.pair_counts
@@ -86,6 +95,28 @@ def stats_from_masks(masks: np.ndarray) -> CoActivationStats:
     s = CoActivationStats(masks.shape[-1])
     s.update(masks)
     return s
+
+
+def stats_from_mask_shards(shards: Iterable[np.ndarray],
+                           n_neurons: Optional[int] = None) -> CoActivationStats:
+    """`stats_from_masks` over a shard iterator (traces larger than RAM).
+
+    Each shard is accumulated into its own `CoActivationStats` and folded in
+    via `CoActivationStats.merge(inplace=True)`, so only one shard's masks,
+    its [n, n] pair matrix, and the single running pair matrix are resident
+    at a time — the entry point the offline packer uses with
+    `repro.core.trace.iter_trace_shards`. An empty iterator needs
+    `n_neurons` to size the (zero) stats.
+    """
+    out: Optional[CoActivationStats] = None
+    for masks in shards:
+        s = stats_from_masks(np.asarray(masks))
+        out = s if out is None else out.merge(s, inplace=True)
+    if out is None:
+        if n_neurons is None:
+            raise ValueError("empty shard iterator and no n_neurons given")
+        out = CoActivationStats(n_neurons)
+    return out
 
 
 def expected_io_ops(masks: Iterable[np.ndarray], placement: np.ndarray) -> float:

@@ -65,19 +65,37 @@ class IOStats:
     bytes_useful: int = 0
     seconds: float = 0.0
     n_requests: int = 0
+    # Measured (wall-clock) accounting for stores that perform REAL reads
+    # (`repro.store.FileNeuronStore`): what the filesystem actually did,
+    # recorded alongside — never instead of — the calibrated UFS model above.
+    # In-memory stores leave all three at zero.
+    measured_ops: int = 0
+    measured_bytes: int = 0
+    measured_seconds: float = 0.0
     # pre-collapse run lengths of the requested neurons in flash order — a
     # by-product of read planning (the positions are already sorted there),
-    # recorded so callers don't re-derive runs from scratch. Not aggregated
-    # by `add`.
+    # recorded so callers don't re-derive runs from scratch. Per-read only:
+    # `add` resets it to None (see below).
     run_lengths: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     def add(self, other: "IOStats") -> None:
+        """Aggregate counters. `run_lengths` is a per-read by-product, not an
+        aggregate: merging two reads' runs element-wise is meaningless, and
+        silently keeping `self`'s array would hand callers a stale view of
+        only the FIRST read. The contract is therefore that an aggregated
+        IOStats never carries run lengths — `add` explicitly clears them;
+        callers that want runs across reads concatenate them per read (as the
+        engine's split-phase step does)."""
         self.n_ops += other.n_ops
         self.bytes_read += other.bytes_read
         self.bytes_useful += other.bytes_useful
         self.seconds += other.seconds
         self.n_requests += other.n_requests
+        self.measured_ops += other.measured_ops
+        self.measured_bytes += other.measured_bytes
+        self.measured_seconds += other.measured_seconds
+        self.run_lengths = None
 
     @property
     def effective_bandwidth(self) -> float:
@@ -91,6 +109,13 @@ class IOStats:
     @property
     def iops(self) -> float:
         return self.n_ops / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def measured_bandwidth(self) -> float:
+        """Real bytes actually read per real second — only meaningful for
+        file-backed stores; 0.0 on the pure device model."""
+        return (self.measured_bytes / self.measured_seconds
+                if self.measured_seconds > 0 else 0.0)
 
 
 class NeuronStore:
@@ -122,6 +147,18 @@ class NeuronStore:
                              else int(self.bundle_width * data.dtype.itemsize))
         self._phys_data = np.ascontiguousarray(data[self.placement.placement])
 
+    # -- payload surface -----------------------------------------------------
+    @property
+    def payload_dtype(self) -> np.dtype:
+        """dtype of the bundle payloads this store SERVES (file-backed int8
+        packs store int8 but serve dequantized float32)."""
+        return self._phys_data.dtype
+
+    def physical_payload(self) -> np.ndarray:
+        """Full [n_neurons, bundle_width] payload in PHYSICAL (placement)
+        order — the segment-kernel weight source. Zero modelled I/O."""
+        return self._phys_data
+
     # -- zero-cost payload access -------------------------------------------
     def fetch(self, logical_ids: np.ndarray) -> np.ndarray:
         """Bundle payloads for logical ids, in id order, at zero modelled I/O.
@@ -134,7 +171,7 @@ class NeuronStore:
         """
         logical_ids = np.asarray(logical_ids, dtype=np.int64)
         if logical_ids.size == 0:
-            return np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype)
+            return np.zeros((0, self.bundle_width), dtype=self.payload_dtype)
         return self._phys_data[self.placement.physical_of(logical_ids)]
 
     def fetch_into(self, logical_ids: np.ndarray, out: np.ndarray) -> np.ndarray:
@@ -183,7 +220,7 @@ class NeuronStore:
         stats = IOStats(n_requests=1)
         if logical_ids.size == 0:
             stats.run_lengths = np.zeros(0, dtype=np.int64)
-            empty = (np.zeros((0, self.bundle_width), dtype=self._phys_data.dtype)
+            empty = (np.zeros((0, self.bundle_width), dtype=self.payload_dtype)
                      if fetch_payload else None)
             return empty, stats
         phys = self.placement.physical_of(logical_ids)
@@ -194,9 +231,24 @@ class NeuronStore:
         stats.bytes_read = n_read * self.bundle_bytes * self.reads_per_bundle
         stats.bytes_useful = n_unique * self.bundle_bytes * self.reads_per_bundle
         stats.seconds = self.device.read_time(stats.n_ops, stats.bytes_read)
-        # payload identical regardless of extent plan
-        data = self._phys_data[phys] if fetch_payload else None
+        data = self._serve_extents(extents, phys, fetch_payload, stats)
         return data, stats
+
+    def _serve_extents(self, extents: List[Extent], phys: np.ndarray,
+                       fetch_payload: bool,
+                       stats: IOStats) -> Optional[np.ndarray]:
+        """Payload-materialisation hook behind `read`'s accounting.
+
+        The in-memory store serves straight from the DRAM-backed physical
+        array — the extent plan affects accounting only, and the payload is
+        identical regardless of it. File-backed stores
+        (`repro.store.FileNeuronStore`) override this to issue one REAL
+        positional file read per collapsed extent and record the measured_*
+        fields on `stats` (the read happens even with `fetch_payload=False`:
+        the extent reads ARE the I/O; only the row-gathered payload array is
+        skipped)."""
+        del extents, stats
+        return self._phys_data[phys] if fetch_payload else None
 
 
 class ManagedReader:

@@ -1,8 +1,12 @@
 """Activation-trace capture and synthetic co-activation workloads.
 
-Two sources of FFN activation masks:
+Three sources of FFN activation masks:
   * `trace_model_activations` — run a real model (models/) over a token stream
     and record per-layer FFN activation masks (ReLU > 0 or top-k magnitude).
+  * `ShardedTraceWriter` / `iter_trace_shards` — the same capture streamed to
+    disk as per-layer `.npy` shards, so the offline packer can accumulate
+    co-activation statistics over traces larger than RAM
+    (`repro.core.coactivation.stats_from_mask_shards` merges per-shard stats).
   * `synthetic_masks` — a planted-cluster generator matching the paper's
     Figure-6 observation: neurons belong to co-activation groups; each token
     activates a few groups plus background noise. Used by unit tests and
@@ -11,7 +15,10 @@ Two sources of FFN activation masks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import json
+import os
+import pathlib
+from typing import Callable, Dict, Iterator, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +82,61 @@ def topk_activation_mask(pre_act: jnp.ndarray, k: int) -> jnp.ndarray:
     """Magnitude top-k per token — used for non-ReLU (SiLU) models."""
     thresh = -jax.lax.top_k(-(-jnp.abs(pre_act)), k)[0][..., -1:]
     return jnp.abs(pre_act) >= thresh
+
+
+class ShardedTraceWriter:
+    """Streaming activation-trace store: per-layer boolean mask shards.
+
+    Each `append(layer, masks)` writes one `.npy` shard
+    (``layer{l:03d}_shard{k:05d}.npy``, bool [T_k, n]) — nothing but the
+    current batch's masks is ever held in memory, so the offline packer can
+    trace arbitrarily long token streams. `finish()` writes a
+    ``manifest.json`` recording the shard lists and token counts; readers go
+    through `iter_trace_shards`, which prefers the manifest and falls back to
+    a directory glob for unfinished traces.
+    """
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, root: Union[str, os.PathLike], n_layers: int,
+                 n_neurons: int) -> None:
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.n_layers = n_layers
+        self.n_neurons = n_neurons
+        self._shards: List[List[str]] = [[] for _ in range(n_layers)]
+        self._tokens = [0] * n_layers
+
+    def append(self, layer: int, masks: np.ndarray) -> pathlib.Path:
+        masks = np.atleast_2d(np.asarray(masks, dtype=bool))
+        if masks.shape[-1] != self.n_neurons:
+            raise ValueError(f"mask width {masks.shape[-1]} != n_neurons "
+                             f"{self.n_neurons}")
+        k = len(self._shards[layer])
+        path = self.root / f"layer{layer:03d}_shard{k:05d}.npy"
+        np.save(path, masks)
+        self._shards[layer].append(path.name)
+        self._tokens[layer] += masks.shape[0]
+        return path
+
+    def finish(self) -> dict:
+        manifest = dict(n_layers=self.n_layers, n_neurons=self.n_neurons,
+                        tokens_per_layer=self._tokens, shards=self._shards)
+        (self.root / self.MANIFEST).write_text(json.dumps(manifest, indent=1))
+        return manifest
+
+
+def iter_trace_shards(root: Union[str, os.PathLike],
+                      layer: int) -> Iterator[np.ndarray]:
+    """Yield one layer's mask shards in write order, one array at a time."""
+    root = pathlib.Path(root)
+    manifest = root / ShardedTraceWriter.MANIFEST
+    if manifest.exists():
+        names = json.loads(manifest.read_text())["shards"][layer]
+    else:
+        names = sorted(p.name for p in root.glob(f"layer{layer:03d}_shard*.npy"))
+    for name in names:
+        yield np.load(root / name)
 
 
 def trace_model_activations(

@@ -56,7 +56,7 @@ from repro.core.placement import PlacementResult
 from repro.core.predictor import (PredictorParams, predict_mask,
                                   train_lookahead_predictors)
 from repro.core.sparse_ffn import sparse_ffn_from_bundles
-from repro.core.storage import UFSDevice
+from repro.core.storage import NeuronStore, UFSDevice
 from repro.models import transformer
 from repro.models.model import Model
 
@@ -208,15 +208,20 @@ class OffloadedFFNRuntime:
     def __init__(
         self,
         cfg: ModelConfig,
-        bundles_per_layer: List[np.ndarray],       # [L][n_neurons, bundle_width]
-        placements: List[PlacementResult],
+        bundles_per_layer: Optional[List[np.ndarray]] = None,  # [L][n, width]
+        placements: Optional[List[PlacementResult]] = None,
         predictors: Optional[List[PredictorParams]] = None,
         device: Optional[UFSDevice] = None,
         engine_cfg: Optional[EngineConfig] = None,
         lookahead: Optional[List[PredictorParams]] = None,
         lookahead_threshold: float = 0.35,
         bundle_bytes: Optional[int] = None,
+        *,
+        stores: Optional[List[NeuronStore]] = None,
     ) -> None:
+        """Either raw `bundles_per_layer` + `placements` (in-memory stores are
+        built per layer) or prebuilt `stores` — e.g. `FileNeuronStore`s over a
+        NeuronPack, the `from_pack` path."""
         self.cfg = cfg
         self.engine_cfg = engine_cfg or EngineConfig()
         if self.engine_cfg.ffn_kernel == "segments" and \
@@ -226,11 +231,21 @@ class OffloadedFFNRuntime:
             raise ValueError(
                 f"ffn_kernel='segments' is exact only for relu/relu2 "
                 f"activations, not {cfg.activation!r}")
-        self.engines = [
-            OffloadEngine(b, placement=pl, device=device, config=engine_cfg,
-                          bundle_bytes=bundle_bytes)
-            for b, pl in zip(bundles_per_layer, placements)
-        ]
+        if stores is not None:
+            if bundles_per_layer is not None or placements is not None:
+                raise ValueError("pass either prebuilt `stores` or raw "
+                                 "bundles_per_layer/placements, not both")
+            self.engines = [OffloadEngine.from_store(s, config=engine_cfg)
+                            for s in stores]
+        else:
+            if bundles_per_layer is None or placements is None:
+                raise ValueError("OffloadedFFNRuntime needs bundles_per_layer"
+                                 " + placements, or `stores`")
+            self.engines = [
+                OffloadEngine(b, placement=pl, device=device,
+                              config=engine_cfg, bundle_bytes=bundle_bytes)
+                for b, pl in zip(bundles_per_layer, placements)
+            ]
         self.predictors = predictors
         # cross-layer lookahead: lookahead[k] predicts layer k+1's mask from
         # layer k's pre-FFN hidden state (the prefetch pipeline's driver)
@@ -244,6 +259,35 @@ class OffloadedFFNRuntime:
         self._segment_weights: Dict[int, tuple] = {}
         self._lookahead_np: Optional[List[tuple]] = None
         self.topup_total = 0       # neurons served by synchronous top-up reads
+
+    @classmethod
+    def from_pack(
+        cls,
+        cfg: ModelConfig,
+        pack,                               # path | NeuronPack
+        device: Optional[UFSDevice] = None,
+        engine_cfg: Optional[EngineConfig] = None,
+        predictors: Optional[List[PredictorParams]] = None,
+        lookahead: Optional[List[PredictorParams]] = None,
+        lookahead_threshold: float = 0.35,
+    ) -> "OffloadedFFNRuntime":
+        """Serve straight from an on-disk NeuronPack artifact: one
+        `FileNeuronStore` per layer, placements read from the pack, every
+        collapsed extent a REAL positional file read. Raises ValueError when
+        the pack's geometry does not match the model config (layer count,
+        neuron count, bundle width)."""
+        from repro.store.file_store import FileNeuronStore
+        from repro.store.format import NeuronPack
+
+        pack = NeuronPack.open(pack)
+        validate_pack_for_model(pack, cfg)
+        ecfg = engine_cfg or EngineConfig()
+        stores = [FileNeuronStore(pack, l, device=device,
+                                  reads_per_bundle=ecfg.reads_per_bundle)
+                  for l in range(pack.n_layers)]
+        return cls(cfg, stores=stores, predictors=predictors,
+                   engine_cfg=engine_cfg, lookahead=lookahead,
+                   lookahead_threshold=lookahead_threshold)
 
     # -- single merged activated set (legacy accounting interface) ----------
     def ffn_apply(self, layer: int, h: np.ndarray, oracle_mask: Optional[np.ndarray] = None):
@@ -333,7 +377,7 @@ class OffloadedFFNRuntime:
         if self.engine_cfg.ffn_kernel != "segments":
             store = eng.store
             padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
-            buf = self._ring_slot(store.bundle_width, store._phys_data.dtype,
+            buf = self._ring_slot(store.bundle_width, store.payload_dtype,
                                   padded, layer % 2)
             store.fetch_into(pending.union, buf)
             buf[k:padded] = 0
@@ -363,7 +407,7 @@ class OffloadedFFNRuntime:
         else:
             store = eng.store
             padded = -(-max(k_total, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
-            buf = self._ring_slot(store.bundle_width, store._phys_data.dtype,
+            buf = self._ring_slot(store.bundle_width, store.payload_dtype,
                                   padded, layer % 2, preserve_rows=pf.k_spec)
             if extra.size:   # stage the topped-up payload after the prefetch
                 store.fetch_into(extra, buf[pf.k_spec:])
@@ -408,7 +452,7 @@ class OffloadedFFNRuntime:
         k = int(ids.size)
         padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
         buf = self._staging_buffer(store.bundle_width,
-                                   store._phys_data.dtype, padded)
+                                   store.payload_dtype, padded)
         store.fetch_into(ids, buf)
         buf[k:padded] = 0
         valid = jnp.arange(padded) < k
@@ -427,7 +471,8 @@ class OffloadedFFNRuntime:
         store = self.engines[layer].store
         seg = self.engine_cfg.kernel_seg_size
         d = self.cfg.d_model
-        parts = store._phys_data.reshape(store.n_neurons, self.n_mats, d)
+        parts = np.asarray(store.physical_payload()).reshape(
+            store.n_neurons, self.n_mats, d)
         pad = (-store.n_neurons) % seg
         if pad:
             parts = np.concatenate(
@@ -483,7 +528,7 @@ class OffloadedFFNRuntime:
         runs = (np.concatenate([np.asarray(t.run_lengths) for t in tokens])
                 if tokens else np.zeros(0, dtype=np.int64))
         per_layer = [e.summary() for e in self.engines]
-        return {
+        out = {
             "io_seconds_per_token": sum(s["io_seconds_per_token"]
                                         for s in per_layer),
             "mean_run_length": float(runs.mean()) if runs.size else 0.0,
@@ -491,11 +536,56 @@ class OffloadedFFNRuntime:
             "cache_hit_rate": hits / accesses if accesses else 0.0,
             "ops_per_token": sum(s["ops_per_token"] for s in per_layer),
         }
+        # dual accounting: wall-clock of REAL file reads, when the stores
+        # perform any (FileNeuronStore over a NeuronPack) — alongside, never
+        # instead of, the modeled device seconds above
+        meas_ops = sum(t.io.measured_ops for t in tokens)
+        if meas_ops:
+            n_tok = max(max(len(e.history) for e in self.engines), 1)
+            out["measured_file_seconds_per_token"] = (
+                sum(t.io.measured_seconds for t in tokens) / n_tok)
+            out["measured_extents_total"] = meas_ops
+            out["measured_bytes_total"] = sum(t.io.measured_bytes
+                                              for t in tokens)
+        return out
 
     def reset_stats(self) -> None:
         for e in self.engines:
             e.reset_stats()
         self.topup_total = 0
+
+
+def dense_ffn_layer_count(cfg: ModelConfig) -> int:
+    """Number of dense-FFN layers the offload runtime serves (capture order:
+    dense sublayers of the periodic stack prefix, times the group count)."""
+    P = transformer.stack_period(cfg)
+    return (cfg.n_layers // P) * sum(k == "dense"
+                                     for k in cfg.ffn_kinds()[:P])
+
+
+def validate_pack_for_model(pack, cfg: ModelConfig) -> None:
+    """Submit-time geometry check: a NeuronPack can only serve a model whose
+    dense-FFN layer count, neuron count (d_ff), and bundle width
+    (n_mats * d_model) it matches. Packs built by the offline packer also
+    record d_model / n_mats / activation in `meta`, which is checked when
+    present — bundle_width alone cannot distinguish a [gate|up|down] silu
+    bundle from an [up|down] relu bundle of 1.5x the d_model. Raises
+    ValueError listing every mismatch."""
+    n_mats = 3 if cfg.activation == "silu" else 2
+    expected = dict(n_layers=dense_ffn_layer_count(cfg), n_neurons=cfg.d_ff,
+                    bundle_width=n_mats * cfg.d_model)
+    mismatches = [f"{k}: pack has {getattr(pack, k)}, model needs {v}"
+                  for k, v in expected.items() if getattr(pack, k) != v]
+    meta = getattr(pack, "meta", None) or {}
+    mismatches += [
+        f"meta.{k}: pack built for {meta[k]!r}, model is {v!r}"
+        for k, v in (("d_model", cfg.d_model), ("n_mats", n_mats),
+                     ("activation", cfg.activation))
+        if k in meta and meta[k] != v]
+    if mismatches:
+        raise ValueError(
+            f"NeuronPack {pack.path} does not fit this model config: "
+            + "; ".join(mismatches))
 
 
 # ---------------------------------------------------------------------------
@@ -524,7 +614,8 @@ class ServingEngine:
                  scheduler: Optional[IOScheduler] = None,
                  oracle: bool = True,
                  prefetch: bool = False,
-                 lookahead: Union[str, List[PredictorParams], None] = None):
+                 lookahead: Union[str, List[PredictorParams], None] = None,
+                 pack_path: Optional[str] = None):
         """`prefetch=True` runs offload decode through the asynchronous
         layer-ahead pipeline: a background I/O worker serves layer k+1's
         engine step while the device computes layer k. `lookahead` picks the
@@ -534,9 +625,20 @@ class ServingEngine:
         fallback where each layer's prefetch is issued with its TRUE mask
         (zero speculation depth, so no overlap, but the split-phase worker
         machinery is exercised bit-identically to serial).
+
+        `pack_path` loads the offload runtime from an on-disk NeuronPack
+        artifact (`OffloadedFFNRuntime.from_pack`, geometry-validated against
+        the model config) instead of a caller-built runtime.
         """
         if mode not in ("resident", "offload"):
             raise ValueError(f"unknown serving mode {mode!r}")
+        if pack_path is not None:
+            if offload is not None:
+                raise ValueError("pass either `offload` or `pack_path`, "
+                                 "not both")
+            if mode != "offload":
+                raise ValueError("pack_path= requires mode='offload'")
+            offload = OffloadedFFNRuntime.from_pack(model.cfg, pack_path)
         if mode == "offload":
             if offload is None:
                 raise ValueError("mode='offload' needs an OffloadedFFNRuntime")
@@ -602,7 +704,7 @@ def build_offload_runtime(
     """
     from repro.core.coactivation import stats_from_masks
     from repro.core.placement import identity_placement, search_placement
-    from repro.core.sparse_ffn import FFNWeights, make_bundles
+    from repro.store.packer import extract_dense_ffn_bundles
 
     cfg = model.cfg
     if cfg.family != "dense" or cfg.is_encdec:
@@ -610,28 +712,17 @@ def build_offload_runtime(
     rng = rng or np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, calib_batch), jnp.int32)
     out = model.forward(params, {"tokens": tokens}, capture_activations=True)
-    P = transformer.stack_period(cfg)
-    G = cfg.n_layers // P
-    ffns = cfg.ffn_kinds()
-    placements, bundles = [], []
-    dense_idx = 0
-    for g in range(G):
-        for j in range(P):
-            if ffns[j] != "dense":
-                continue
-            ffn_p = params["stack"][f"sub_{j}"]["ffn"]
-            w = FFNWeights(
-                w_up=ffn_p["w_up"][g].T, w_down=ffn_p["w_down"][g],
-                w_gate=(ffn_p["w_gate"][g].T if "w_gate" in ffn_p else None))
-            bundles.append(np.asarray(make_bundles(w)))
-            if use_placement:
-                masks = np.asarray(
-                    out["ffn_pre_act"][dense_idx] > 0).reshape(-1, cfg.d_ff)
-                placements.append(search_placement(
-                    stats_from_masks(masks).distance_matrix(), mode="auto"))
-            else:
-                placements.append(identity_placement(cfg.d_ff))
-            dense_idx += 1
+    bundles = extract_dense_ffn_bundles(cfg, params)
+    placements = []
+    for dense_idx in range(len(bundles)):
+        if use_placement:
+            masks = np.asarray(
+                out["ffn_pre_act"][dense_idx] > 0).reshape(-1, cfg.d_ff)
+            placements.append(search_placement(
+                stats_from_masks(masks).distance_matrix(), mode="auto"))
+        else:
+            placements.append(identity_placement(cfg.d_ff))
+    dense_idx = len(bundles)
     lookahead = None
     if train_lookahead and dense_idx > 1:
         hiddens = np.asarray(out["ffn_inputs"]).reshape(

@@ -144,17 +144,28 @@ class InferenceServer:
                  scheduler: Optional[IOScheduler] = None,
                  oracle: bool = True, prefetch: bool = False,
                  lookahead: Union[str, List[PredictorParams], None] = None,
-                 seed: int = 0, decode_fn=None):
+                 seed: int = 0, decode_fn=None,
+                 pack_path: Optional[str] = None):
         """`decode_fn` lets a long-lived caller (ServingEngine) share one
         jitted resident decode across servers; by default the server jits its
         own. `lookahead` follows ServingEngine: predictor params, None (use
         the runtime's trained lookahead), or "oracle" (zero speculation
-        depth — the exactness fallback)."""
+        depth — the exactness fallback). `pack_path` loads the offload
+        runtime from an on-disk NeuronPack artifact
+        (`OffloadedFFNRuntime.from_pack`, geometry-validated against the
+        model config) instead of a caller-built runtime."""
         if mode not in ("resident", "offload"):
             raise ValueError(f"unknown serving mode {mode!r}")
         cfg = model.cfg
         if cfg.is_encdec:
             raise ValueError("InferenceServer covers decoder-only stacks")
+        if pack_path is not None:
+            if offload is not None:
+                raise ValueError("pass either `offload` or `pack_path`, "
+                                 "not both")
+            if mode != "offload":
+                raise ValueError("pack_path= requires mode='offload'")
+            offload = OffloadedFFNRuntime.from_pack(cfg, pack_path)
         if mode == "offload":
             if offload is None:
                 raise ValueError("mode='offload' needs an OffloadedFFNRuntime")

@@ -1,0 +1,23 @@
+"""On-disk NeuronPack artifact + file-backed flash store.
+
+Offline, `build_pack` runs the paper's whole offline stage (trace ->
+co-activation stats -> linked placement) and serializes the result as a
+NeuronPack: per-layer neuron bundles written in PHYSICAL placement order,
+so byte offsets in the file ARE flash positions. Online, `FileNeuronStore`
+serves the existing `NeuronStore` contract from that file with one real
+positional read per collapsed extent, keeping the calibrated device model's
+accounting bit-identical to the in-memory store while adding measured
+wall-clock fields.
+"""
+from repro.store.file_store import FileNeuronStore, open_layer_stores
+from repro.store.format import (MAGIC, VERSION, NeuronPack, dequantize_int8,
+                                quantize_int8, write_pack)
+from repro.store.packer import (PackBuildReport, build_pack,
+                                extract_dense_ffn_bundles, trace_to_shards)
+
+__all__ = [
+    "MAGIC", "VERSION", "NeuronPack", "FileNeuronStore", "open_layer_stores",
+    "write_pack", "quantize_int8", "dequantize_int8",
+    "PackBuildReport", "build_pack", "extract_dense_ffn_bundles",
+    "trace_to_shards",
+]

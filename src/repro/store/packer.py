@@ -1,0 +1,164 @@
+"""Offline NeuronPack builder — the paper's offline stage, end to end, into a
+deployable artifact.
+
+    trace FFN activations (streamed to disk shards)
+      -> CoActivationStats per dense layer (shard-merged, bounded memory)
+      -> greedy linked-placement search (Algorithm 1)
+      -> serialize bundles in physical order (`repro.store.format.write_pack`)
+
+The resulting file is everything the online stage needs to serve from flash:
+`FileNeuronStore` opens it per layer, and `OffloadedFFNRuntime.from_pack`
+wires it into the serving runtime. `launch/pack.py` is the CLI driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.coactivation import stats_from_mask_shards
+from repro.core.placement import (PlacementResult, identity_placement,
+                                  search_placement)
+from repro.core.trace import ShardedTraceWriter, iter_trace_shards
+from repro.store.format import write_pack
+
+
+def extract_dense_ffn_bundles(cfg, params) -> List[np.ndarray]:
+    """Per dense-FFN layer, the [n_neurons, bundle_width] flash bundles in
+    LOGICAL neuron order, enumerated in the same (group, sublayer) order as
+    `ffn_pre_act` capture — the single source of truth shared by the packer
+    and `build_offload_runtime`."""
+    from repro.core.sparse_ffn import FFNWeights, make_bundles
+    from repro.models import transformer
+
+    P = transformer.stack_period(cfg)
+    G = cfg.n_layers // P
+    ffns = cfg.ffn_kinds()
+    bundles = []
+    for g in range(G):
+        for j in range(P):
+            if ffns[j] != "dense":
+                continue
+            ffn_p = params["stack"][f"sub_{j}"]["ffn"]
+            w = FFNWeights(
+                w_up=ffn_p["w_up"][g].T, w_down=ffn_p["w_down"][g],
+                w_gate=(ffn_p["w_gate"][g].T if "w_gate" in ffn_p else None))
+            bundles.append(np.asarray(make_bundles(w)))
+    return bundles
+
+
+def trace_to_shards(model, params, token_batches, writer: ShardedTraceWriter,
+                    sparsity_topk: Optional[int] = None) -> int:
+    """Run the model over token batches, appending each batch's per-layer
+    activation masks straight to the shard writer (nothing accumulates in
+    RAM). Returns the number of tokens traced."""
+    import jax.numpy as jnp
+
+    from repro.core.trace import relu_activation_mask, topk_activation_mask
+
+    total = 0
+    for tokens in token_batches:
+        out = model.forward(params, {"tokens": jnp.asarray(tokens)},
+                            capture_activations=True)
+        pre = out["ffn_pre_act"]                   # [L, B, T, N]
+        masks = np.asarray(relu_activation_mask(pre) if sparsity_topk is None
+                           else topk_activation_mask(pre, sparsity_topk))
+        for l in range(masks.shape[0]):
+            writer.append(l, masks[l].reshape(-1, masks.shape[-1]))
+        total += int(np.prod(np.asarray(tokens).shape))
+    return total
+
+
+@dataclasses.dataclass
+class PackBuildReport:
+    path: str
+    n_layers: int
+    n_neurons: int
+    bundle_width: int
+    quantized: bool
+    file_bytes: int
+    tokens_traced: int
+    search_seconds: float              # summed over layers
+    placement_mode: str
+    build_seconds: float
+
+
+def build_pack(
+    model,
+    params,
+    out_path,
+    *,
+    calib_tokens: int = 512,
+    calib_batch: int = 8,
+    calib_seqlen: int = 64,
+    seed: int = 0,
+    use_placement: bool = True,
+    placement_mode: str = "auto",
+    quantize: str = "none",
+    shard_dir=None,
+    sparsity_topk: Optional[int] = None,
+    meta: Optional[dict] = None,
+) -> PackBuildReport:
+    """The full offline stage for one model: calibration trace -> linked
+    placement per dense layer -> NeuronPack on disk.
+
+    The calibration stream is random tokens (the co-activation structure is
+    model-intrinsic, paper Fig. 15); `shard_dir=None` stages trace shards in
+    a temporary directory that is deleted after the stats pass.
+    """
+    cfg = model.cfg
+    if cfg.family != "dense" or cfg.is_encdec:
+        raise ValueError("NeuronPack packing covers dense decoder-only archs")
+    t_start = time.perf_counter()
+    bundles = extract_dense_ffn_bundles(cfg, params)
+    rng = np.random.default_rng(seed)
+
+    def batches():
+        done = 0
+        while done < calib_tokens:
+            yield rng.integers(0, cfg.vocab_size,
+                               (calib_batch, calib_seqlen)).astype(np.int32)
+            done += calib_batch * calib_seqlen
+
+    tmp = None
+    if shard_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="npack-trace-")
+        shard_dir = tmp.name
+    try:
+        writer = ShardedTraceWriter(shard_dir, n_layers=len(bundles),
+                                    n_neurons=cfg.d_ff)
+        traced = trace_to_shards(model, params, batches(), writer,
+                                 sparsity_topk=sparsity_topk)
+        writer.finish()
+        placements: List[PlacementResult] = []
+        for l in range(len(bundles)):
+            if use_placement:
+                stats = stats_from_mask_shards(iter_trace_shards(shard_dir, l),
+                                               n_neurons=cfg.d_ff)
+                placements.append(search_placement(stats.distance_matrix(),
+                                                   mode=placement_mode))
+            else:
+                placements.append(identity_placement(cfg.d_ff))
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    n_mats = 3 if cfg.activation == "silu" else 2
+    pack_meta = dict(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_mats=n_mats,
+        activation=cfg.activation, tokens_traced=traced,
+        placement="linked" if use_placement else "identity",
+    )
+    pack_meta.update(meta or {})
+    manifest = write_pack(out_path, bundles, placements,
+                          quantize=quantize, meta=pack_meta)
+    return PackBuildReport(
+        path=manifest["path"], n_layers=len(bundles), n_neurons=cfg.d_ff,
+        bundle_width=bundles[0].shape[1], quantized=manifest["quantized"],
+        file_bytes=manifest["file_bytes"], tokens_traced=traced,
+        search_seconds=sum(p.search_seconds for p in placements),
+        placement_mode="linked" if use_placement else "identity",
+        build_seconds=time.perf_counter() - t_start)

@@ -1,0 +1,350 @@
+"""NeuronPack artifact + FileNeuronStore (ISSUE 5).
+
+The contract under test: the on-disk pack is a faithful serialization of the
+offline placement — `FileNeuronStore` serves the exact `NeuronStore`
+read/fetch/plan contract with bit-identical payloads AND bit-identical
+modeled IOStats on randomized placements (float32 and int8 packs), while
+additionally issuing one REAL positional file read per collapsed extent
+(measured_* accounting). End to end, a pack built by the offline packer
+serves tokens through the serving stack identical to the in-memory path,
+under both the ReLU oracle and trained predictor masks. Satellites: the
+sharded streaming trace writer + merge-based stats entry point, and the
+`IOStats.add` run-lengths aggregation contract.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.coactivation import stats_from_mask_shards, stats_from_masks
+from repro.core.engine import EngineConfig, OffloadEngine
+from repro.core.placement import identity_placement, search_placement
+from repro.core.storage import IOStats, ManagedReader, NeuronStore
+from repro.core.trace import (ShardedTraceWriter, SyntheticTraceConfig,
+                              iter_trace_shards, synthetic_masks)
+from repro.models import build_model
+from repro.serving.engine import (OffloadedFFNRuntime, Request, ServingEngine,
+                                  dense_ffn_layer_count,
+                                  validate_pack_for_model)
+from repro.store import (FileNeuronStore, NeuronPack, build_pack,
+                         dequantize_int8, quantize_int8, write_pack)
+from repro.store.packer import extract_dense_ffn_bundles
+
+
+def _random_placement(rng, n):
+    d = rng.random((n, n))
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, np.inf)
+    return search_placement(d, mode="exact")
+
+
+# ---------------------------------------------------------------------------
+# format round-trip + store identity
+# ---------------------------------------------------------------------------
+
+def test_pack_roundtrip_header_placement_and_logical_bundles(tmp_path, rng):
+    n, w = 64, 12
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    pl = _random_placement(rng, n)
+    path = tmp_path / "a.npack"
+    manifest = write_pack(path, [data, data * 2], [pl, identity_placement(n)],
+                          meta={"arch": "test"})
+    assert manifest["n_layers"] == 2 and manifest["file_bytes"] > 0
+    pack = NeuronPack.open(path)
+    assert (pack.n_neurons, pack.bundle_width) == (n, w)
+    assert not pack.quantized and pack.meta["arch"] == "test"
+    np.testing.assert_array_equal(pack.placement(0).placement, pl.placement)
+    np.testing.assert_array_equal(pack.placement(0).inverse, pl.inverse)
+    # physical-order on disk, logical order recovered exactly
+    np.testing.assert_array_equal(np.asarray(pack.bundles_memmap(0)),
+                                  data[pl.placement])
+    np.testing.assert_array_equal(pack.logical_bundles(0), data)
+    np.testing.assert_array_equal(pack.logical_bundles(1), data * 2)
+
+
+def test_pack_rejects_bad_magic_and_geometry(tmp_path, rng):
+    bad = tmp_path / "bad.npack"
+    bad.write_bytes(b"NOTAPACKxxxxxxxx")
+    with pytest.raises(ValueError, match="magic"):
+        NeuronPack.open(bad)
+    data = rng.standard_normal((8, 4)).astype(np.float32)
+    with pytest.raises(ValueError, match="homogeneous"):
+        write_pack(tmp_path / "b.npack",
+                   [data, data[:4]],
+                   [identity_placement(8), identity_placement(4)])
+
+
+@pytest.mark.parametrize("quantize", ["none", "int8"])
+def test_file_store_bit_identical_to_in_memory(tmp_path, quantize):
+    """fetch / fetch_into / read payloads and every MODELED IOStats field
+    bit-equal to the in-memory NeuronStore, on randomized placements."""
+    rng = np.random.default_rng(7)
+    n, w = 96, 16
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    pl = _random_placement(rng, n)
+    path = tmp_path / f"{quantize}.npack"
+    write_pack(path, [data], [pl], quantize=quantize)
+    fst = FileNeuronStore(path, 0)
+
+    if quantize == "int8":
+        q, scales = quantize_int8(data[pl.placement])
+        ref_logical = dequantize_int8(q, scales)[pl.inverse]
+        assert fst.bundle_bytes == w            # billed at stored int8 bytes
+    else:
+        ref_logical = data
+        assert fst.bundle_bytes == w * 4
+    mem = NeuronStore(ref_logical, pl, bundle_bytes=fst.bundle_bytes)
+
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        ids = r.choice(n, size=r.integers(1, 40), replace=False)
+        thr = int(r.integers(0, 6))
+        assert mem.plan_extents(ids, thr) == fst.plan_extents(ids, thr)
+        pm, sm = mem.read(ids, collapse_threshold=thr)
+        pf, sf = fst.read(ids, collapse_threshold=thr)
+        np.testing.assert_array_equal(pm, pf)
+        assert pf.dtype == np.float32
+        assert (sm.n_ops, sm.bytes_read, sm.bytes_useful, sm.seconds) == \
+               (sf.n_ops, sf.bytes_read, sf.bytes_useful, sf.seconds)
+        np.testing.assert_array_equal(sm.run_lengths, sf.run_lengths)
+        # dual accounting: real reads happened on the file store only
+        assert sf.measured_ops == len(fst.plan_extents(ids, thr))
+        assert sf.measured_bytes > 0 and sf.measured_seconds > 0
+        assert (sm.measured_ops, sm.measured_bytes, sm.measured_seconds) == \
+               (0, 0, 0.0)
+        np.testing.assert_array_equal(mem.fetch(ids), fst.fetch(ids))
+        buf_m = np.full((48, w), -1, np.float32)
+        buf_f = np.full((48, w), -1, np.float32)
+        np.testing.assert_array_equal(mem.fetch_into(ids, buf_m),
+                                      fst.fetch_into(ids, buf_f))
+    fst.close()
+
+
+def test_file_store_real_reads_happen_without_payload(tmp_path, rng):
+    """The engine's probe path (`fetch_payload=False`) must still hit the
+    file: the extent reads ARE the I/O, only row gathering is skipped."""
+    n, w = 64, 8
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    path = tmp_path / "p.npack"
+    write_pack(path, [data], [identity_placement(n)])
+    fst = FileNeuronStore(path, 0)
+    payload, stats = fst.read(np.array([1, 2, 3, 30, 31]),
+                              fetch_payload=False)
+    assert payload is None
+    assert stats.measured_ops == 2 and stats.measured_bytes == 5 * w * 4
+    # mmap fallback path serves the same bytes
+    fb = FileNeuronStore(path, 0, use_pread=False)
+    p1, _ = fst.read(np.array([5, 6, 40]))
+    p2, s2 = fb.read(np.array([5, 6, 40]))
+    np.testing.assert_array_equal(p1, p2)
+    assert s2.measured_ops == 2
+
+
+def test_file_store_through_engine_and_managed_reader(tmp_path, rng):
+    """OffloadEngine.from_store over a FileNeuronStore: token stats identical
+    to the in-memory engine, measured accounting aggregated by the reader."""
+    n, w = 128, 8
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    pl = _random_placement(np.random.default_rng(3), n)
+    path = tmp_path / "e.npack"
+    write_pack(path, [data], [pl])
+    masks = synthetic_masks(SyntheticTraceConfig(n_neurons=n, n_clusters=8,
+                                                 seed=4), 20)
+    e_mem = OffloadEngine(data, placement=pl, config=EngineConfig())
+    e_file = OffloadEngine.from_store(FileNeuronStore(path, 0),
+                                      config=EngineConfig())
+    e_mem.run_trace(masks)
+    e_file.run_trace(masks)
+    s_mem, s_file = e_mem.summary(), e_file.summary()
+    for key in ("io_seconds_per_token", "ops_per_token", "cache_hit_rate",
+                "mean_run_length", "effective_bandwidth"):
+        assert s_mem[key] == pytest.approx(s_file[key]), key
+    assert sum(t.io.measured_ops for t in e_file.history) > 0
+    assert sum(t.io.measured_ops for t in e_mem.history) == 0
+    # ManagedReader.total aggregates measured fields; run_lengths obey the
+    # aggregation contract (never a stale array on an aggregate)
+    assert e_file.reader.total.measured_seconds > 0
+    assert e_file.reader.total.run_lengths is None
+
+
+# ---------------------------------------------------------------------------
+# satellites: IOStats.add contract, sharded trace writer
+# ---------------------------------------------------------------------------
+
+def test_iostats_add_never_carries_stale_run_lengths():
+    """Regression (satellite): `add` used to keep `self`'s run_lengths,
+    handing aggregates a stale view of only the first read."""
+    a = IOStats(n_ops=1, bytes_read=10, seconds=0.5,
+                run_lengths=np.array([1, 2]))
+    b = IOStats(n_ops=2, bytes_read=20, bytes_useful=5, seconds=0.25,
+                n_requests=1, measured_ops=3, measured_bytes=7,
+                measured_seconds=0.125, run_lengths=np.array([9]))
+    a.add(b)
+    assert a.run_lengths is None                 # the contract
+    assert (a.n_ops, a.bytes_read, a.bytes_useful) == (3, 30, 5)
+    assert (a.measured_ops, a.measured_bytes) == (3, 7)
+    assert a.seconds == 0.75 and a.measured_seconds == 0.125
+    # aggregating INTO a fresh total clears too (other has runs, self None)
+    total = IOStats()
+    total.add(b)
+    assert total.run_lengths is None
+    assert total.measured_bandwidth == pytest.approx(7 / 0.125)
+
+
+def test_sharded_trace_writer_roundtrip_and_merged_stats(tmp_path, rng):
+    n = 48
+    tc = SyntheticTraceConfig(n_neurons=n, n_clusters=6, seed=9)
+    all_masks = synthetic_masks(tc, 30)
+    writer = ShardedTraceWriter(tmp_path / "trace", n_layers=2, n_neurons=n)
+    for lo in range(0, 30, 10):                   # 3 shards per layer
+        writer.append(0, all_masks[lo:lo + 10])
+        writer.append(1, ~all_masks[lo:lo + 10])
+    manifest = writer.finish()
+    assert manifest["tokens_per_layer"] == [30, 30]
+    assert len(manifest["shards"][0]) == 3
+    got = np.concatenate(list(iter_trace_shards(tmp_path / "trace", 0)))
+    np.testing.assert_array_equal(got, all_masks)
+    # shard-merged stats == one-shot stats (counts, pairs, tokens)
+    merged = stats_from_mask_shards(iter_trace_shards(tmp_path / "trace", 0))
+    whole = stats_from_masks(all_masks)
+    assert merged.n_tokens == whole.n_tokens
+    np.testing.assert_array_equal(merged.counts, whole.counts)
+    np.testing.assert_array_equal(merged.pair_counts, whole.pair_counts)
+    with pytest.raises(ValueError, match="n_neurons"):
+        stats_from_mask_shards(iter([]))
+    assert stats_from_mask_shards(iter([]), n_neurons=4).n_tokens == 0
+    with pytest.raises(ValueError, match="width"):
+        writer.append(0, np.zeros((2, n + 1), bool))
+
+
+# ---------------------------------------------------------------------------
+# end to end: packer -> pack -> serving identity
+# ---------------------------------------------------------------------------
+
+def _tiny_model(seed=0):
+    cfg = get_config("opt-350m", reduced=True, d_model=48, d_ff=192,
+                     n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _mem_runtime_like_pack(cfg, params, pack, **kw):
+    """In-memory arm over the SAME bundles + the pack's placements."""
+    return OffloadedFFNRuntime(
+        cfg, extract_dense_ffn_bundles(cfg, params),
+        [pack.placement(l) for l in range(pack.n_layers)], **kw)
+
+
+def test_build_pack_then_serve_token_and_io_identity(tmp_path, rng):
+    """ISSUE 5 acceptance: a pack built by the offline packer serves tokens
+    through the serving stack identical to the in-memory NeuronStore path
+    (greedy, ReLU oracle), with per-request io_seconds matching too."""
+    cfg, model, params = _tiny_model()
+    path = tmp_path / "m.npack"
+    report = build_pack(model, params, path, calib_tokens=128, calib_batch=4,
+                        calib_seqlen=16, shard_dir=tmp_path / "shards")
+    assert report.n_layers == dense_ffn_layer_count(cfg) == 2
+    assert os.path.exists(path) and report.tokens_traced >= 128
+    assert (tmp_path / "shards" / "manifest.json").exists()
+    pack = NeuronPack.open(path)
+    validate_pack_for_model(pack, cfg)
+
+    reqs = [Request(uid=i, prompt=rng.integers(0, 128, 6 + 3 * i).astype(np.int32),
+                    max_new_tokens=3 + i) for i in range(3)]
+    res_mem = ServingEngine(model, params, max_len=64, mode="offload",
+                            offload=_mem_runtime_like_pack(cfg, params, pack)
+                            ).serve(reqs)
+    res_pack = ServingEngine(model, params, max_len=64, mode="offload",
+                             pack_path=str(path)).serve(reqs)
+    for a, b in zip(res_mem, res_pack):
+        assert a.tokens == b.tokens
+        assert a.io_seconds == pytest.approx(b.io_seconds, abs=1e-12)
+
+
+def test_pack_serving_identity_with_trained_predictor_masks(tmp_path, rng):
+    """Acceptance, predictor arm: same trained predictors attached to both
+    runtimes -> identical tokens from the pack and the in-memory path."""
+    from repro.core.predictor import PredictorConfig, train_predictor
+
+    cfg, model, params = _tiny_model()
+    path = tmp_path / "m.npack"
+    build_pack(model, params, path, calib_tokens=64, calib_batch=4,
+               calib_seqlen=16)
+    pack = NeuronPack.open(path)
+    # train tiny per-layer predictors on a short captured trace
+    import jax.numpy as jnp
+    tokens = jnp.asarray(rng.integers(0, 128, (4, 16)), jnp.int32)
+    out = model.forward(params, {"tokens": tokens}, capture_activations=True)
+    hiddens = np.asarray(out["ffn_inputs"]).reshape(2, -1, cfg.d_model)
+    masks = np.asarray(out["ffn_pre_act"] > 0).reshape(2, -1, cfg.d_ff)
+    predictors = [train_predictor(
+        PredictorConfig(d_model=cfg.d_model, n_neurons=cfg.d_ff, d_hidden=16),
+        hiddens[l], masks[l], epochs=1)[0] for l in range(2)]
+
+    rt_mem = _mem_runtime_like_pack(cfg, params, pack, predictors=predictors)
+    rt_pack = OffloadedFFNRuntime.from_pack(cfg, pack, predictors=predictors)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new_tokens=4) for i in range(2)]
+    res_mem = ServingEngine(model, params, max_len=32, mode="offload",
+                            offload=rt_mem, oracle=False).serve(reqs)
+    res_pack = ServingEngine(model, params, max_len=32, mode="offload",
+                             offload=rt_pack, oracle=False).serve(reqs)
+    for a, b in zip(res_mem, res_pack):
+        assert a.tokens == b.tokens
+
+
+def test_from_pack_validates_model_geometry(tmp_path, rng):
+    cfg, model, params = _tiny_model()
+    path = tmp_path / "m.npack"
+    build_pack(model, params, path, calib_tokens=32, calib_batch=2,
+               calib_seqlen=8, use_placement=False)
+    wrong = get_config("opt-350m", reduced=True, d_model=48, d_ff=256,
+                       n_layers=2, vocab_size=128)
+    with pytest.raises(ValueError, match="n_neurons"):
+        OffloadedFFNRuntime.from_pack(wrong, path)
+    wrong2 = get_config("opt-350m", reduced=True, d_model=48, d_ff=192,
+                        n_layers=4, vocab_size=128)
+    with pytest.raises(ValueError, match="n_layers"):
+        validate_pack_for_model(NeuronPack.open(path), wrong2)
+    # geometry collision caught by meta: a 3-mat silu pack of d_model=32 has
+    # the same bundle width (96) as this 2-mat relu model of d_model=48
+    silu_path = tmp_path / "silu.npack"
+    write_pack(silu_path, [np.zeros((192, 96), np.float32)],
+               [identity_placement(192)],
+               meta=dict(d_model=32, n_mats=3, activation="silu"))
+    with pytest.raises(ValueError, match="meta.activation"):
+        validate_pack_for_model(NeuronPack.open(silu_path), cfg)
+    # pack_path= + offload= is ambiguous; resident mode can't take a pack
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(model, params, mode="offload", pack_path=str(path),
+                      offload=OffloadedFFNRuntime.from_pack(cfg, path))
+    with pytest.raises(ValueError, match="offload"):
+        ServingEngine(model, params, mode="resident", pack_path=str(path))
+
+
+def test_int8_pack_serves_tokens_end_to_end(tmp_path, rng):
+    """Quantized packs serve through the whole stack (tokens need not match
+    the float32 path — int8 IS lossy — but the pipeline must be exact w.r.t.
+    the dequantized bundles)."""
+    cfg, model, params = _tiny_model()
+    path = tmp_path / "q.npack"
+    build_pack(model, params, path, calib_tokens=32, calib_batch=2,
+               calib_seqlen=8, quantize="int8")
+    pack = NeuronPack.open(path)
+    assert pack.quantized
+    rt_pack = OffloadedFFNRuntime.from_pack(cfg, pack)
+    rt_mem = OffloadedFFNRuntime(
+        cfg, [pack.logical_bundles(l) for l in range(pack.n_layers)],
+        [pack.placement(l) for l in range(pack.n_layers)],
+        bundle_bytes=pack.row_bytes)
+    reqs = [Request(uid=0, prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new_tokens=4)]
+    res_pack = ServingEngine(model, params, max_len=32, mode="offload",
+                             offload=rt_pack).serve(reqs)
+    res_mem = ServingEngine(model, params, max_len=32, mode="offload",
+                            offload=rt_mem).serve(reqs)
+    assert res_pack[0].tokens == res_mem[0].tokens
+    assert len(res_pack[0].tokens) == 4
