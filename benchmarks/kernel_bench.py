@@ -41,6 +41,38 @@ def kernel_bench() -> List[Row]:
                      f"interpret-us; dma_descriptors={n_seg * 2} "
                      f"(vs {n_seg * seg * 2} per-neuron scattered)"))
 
+    # fused-vs-unfused arm: same covered-neuron count served either as few
+    # contiguous segments (linked layout) or as many scattered ones. int8
+    # tiles quarter the HBM->VMEM weight bytes per descriptor; the scale
+    # tiles add S*seg*4 bytes (one f32 row per segment).
+    q8u = jnp.asarray(rng.integers(-127, 128, (N, D)), jnp.int8)
+    q8d = jnp.asarray(rng.integers(-127, 128, (N, D)), jnp.int8)
+    scales = rng.random(N).astype(np.float32) * 0.01
+    for layout, n_seg in (("linked", 2), ("scattered", 8)):
+        covered = 2 * seg                      # equal work in both layouts
+        if layout == "linked":
+            ids_np = np.arange(n_seg, dtype=np.int32)
+            live = np.arange(covered)
+        else:                                  # same neurons/segment count
+            ids_np = np.arange(0, n_seg * 2, 2, dtype=np.int32)
+            live = (ids_np[:, None] * seg
+                    + np.arange(covered // n_seg)[None, :]).ravel()
+        tiles = np.zeros((ids_np.size, seg), np.float32)
+        tiles[np.searchsorted(ids_np, live // seg), live % seg] = scales[live]
+        ids = jnp.asarray(ids_np)
+        tls = jnp.asarray(tiles)
+        us = _time(ops.sparse_ffn_segments_fused, x, wu, wd, ids, tls,
+                   interpret=True, seg_size=seg)
+        rows.append((f"kernels/sparse_ffn_fused/f32_{layout}", us,
+                     f"interpret-us; dma_descriptors={ids_np.size * 2 + ids_np.size}"
+                     f" weight_bytes={ids_np.size * seg * D * 4 * 2}"))
+        us = _time(ops.sparse_ffn_segments_fused, x, q8u, q8d, ids, tls,
+                   interpret=True, seg_size=seg)
+        rows.append((f"kernels/sparse_ffn_fused/int8_{layout}", us,
+                     f"interpret-us; dma_descriptors={ids_np.size * 2 + ids_np.size}"
+                     f" weight_bytes={ids_np.size * seg * D * 2}"
+                     f" (4x fewer HBM->VMEM bytes than f32)"))
+
     m = jnp.asarray((rng.random((512, 1024)) < 0.2), jnp.float32)
     us = _time(ops.coact_accumulate, m, tile_n=256, tile_t=256)
     rows.append(("kernels/coact/512x1024", us, "interpret-us; A+=M^T M tiles=4x4x2"))

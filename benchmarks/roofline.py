@@ -96,6 +96,59 @@ def analytic_terms(cfg: ModelConfig, shape: InputShape, swa: bool,
     }
 
 
+def sparse_ffn_segment_terms(batch: int, k_active: int, n_mats: int,
+                             d_model: int, weight_itemsize: int = 4,
+                             seg_size: int = 128) -> Dict[str, float]:
+    """Single-chip roofline terms for ONE fused sparse-FFN segment call
+    (kernels/sparse_ffn.py): the decode-step hot path after placement.
+
+    The kernel streams ceil(k/seg) weight segments per matrix from HBM into
+    VMEM (int8 tiles quarter those bytes), one f32 scale/membership row per
+    segment (always present — it carries the activated-union mask even for
+    f32 payloads), revisits the [B, d] activation block once per segment,
+    and writes one [B, d] output. FLOPs count the full covered span
+    (pad neurons inside a segment still multiply, against zeroed scales).
+    """
+    n_seg = -(-k_active // seg_size)
+    covered = n_seg * seg_size
+    flops = 2.0 * batch * covered * n_mats * d_model
+    weight_bytes = float(covered * n_mats * d_model * weight_itemsize)
+    scale_bytes = float(covered * 4)
+    act_bytes = float(batch * d_model * 4 * (n_seg + 1))
+    hlo_bytes = weight_bytes + scale_bytes + act_bytes
+    return {
+        "flops": flops,
+        "weight_bytes": weight_bytes,
+        "scale_bytes": scale_bytes,
+        "hlo_bytes": hlo_bytes,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hlo_bytes / HBM_BW,
+        "intensity": flops / hlo_bytes,
+    }
+
+
+def sparse_ffn_rows(batch: int = 8, k_active: int = 2048, n_mats: int = 2,
+                    d_model: int = 2048) -> List[Tuple[str, float, str]]:
+    """`sparse_ffn_segments` roofline rows: f32 vs int8 weight streaming for
+    the same activated union. Decode batches are tiny, so the kernel lives on
+    the memory roof — quantised tiles cut the dominant term ~4x, which is why
+    the fused in-kernel dequant (never materialising f32 rows) is the win."""
+    out = []
+    for tag, itemsize in (("f32", 4), ("int8", 1)):
+        t = sparse_ffn_segment_terms(batch, k_active, n_mats, d_model,
+                                     weight_itemsize=itemsize)
+        dominant = "memory" if t["memory_s"] >= t["compute_s"] else "compute"
+        out.append((
+            f"roofline/sparse_ffn_segments/{tag}",
+            max(t["compute_s"], t["memory_s"]) * 1e6,
+            f"dominant={dominant} compute={t['compute_s']*1e6:.2f}us "
+            f"memory={t['memory_s']*1e6:.2f}us "
+            f"intensity={t['intensity']:.1f}flop/B "
+            f"weight_bytes={t['weight_bytes']:.0f} "
+            f"(B={batch} k={k_active} mats={n_mats} d={d_model})"))
+    return out
+
+
 def _advice(dominant: str, cfg: ModelConfig, shape: InputShape) -> str:
     if dominant == "memory":
         if shape.kind == "decode":
@@ -160,4 +213,5 @@ def rows_for_run() -> List[Tuple[str, float, str]]:
             f"dominant={r['dominant']} compute={r['compute_s']*1e3:.2f}ms "
             f"memory={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
             f"useful={r['useful_ratio']:.2f}"))
+    out.extend(sparse_ffn_rows())
     return out

@@ -28,7 +28,11 @@ workload and writes ``BENCH_serving.json``.
 
 ``--check`` is the CI gate: non-zero exit unless pipelined decode tokens/s
 >= serial within tolerance AND the oracle arm is token-identical to serial
-AND continuous-batching tokens/s >= --serving-tolerance x length-grouped.
+AND the auto-resolved FFN kernel (the fused segment path on searched
+layouts) is token-identical to the forced-bundles arm AND the fresh
+engine-loop overlap efficiency >= --efficiency-tolerance x the committed
+BENCH_prefetch.json value (read before the fresh run overwrites it) AND
+continuous-batching tokens/s >= --serving-tolerance x length-grouped.
 """
 from __future__ import annotations
 
@@ -166,7 +170,13 @@ def bench_prefetch_engine_loop(quick: bool = False) -> dict:
     Geometry: n=8192 neurons/block on the linked (cluster-contiguous) layout,
     fp16-bundle I/O accounting (`bundle_bytes=8192`, a d_model≈2k 2-matrix
     model) over a reduced f32 compute payload — the same accounting split
-    benchmarks/common.py uses.
+    benchmarks/common.py uses. The compute payload is d=512 per matrix: the
+    fused segment kernel (the `ffn_kernel="auto"` default on this linked
+    layout) cut the per-layer host glue to a fraction of the bundles path,
+    so a thinner payload leaves almost no layer-k compute to hide layer
+    k+1's flash stall behind — d=512 restores a realistic compute window
+    for the same modeled I/O (`bundle_bytes` fixes the accounting; the
+    payload dim only sets how much real FFN work the device does).
     """
     import jax.numpy as jnp
     from repro.configs import get_config
@@ -177,7 +187,7 @@ def bench_prefetch_engine_loop(quick: bool = False) -> dict:
 
     # quick mode trims tokens/repeats, not geometry — below ~8k neurons the
     # per-layer flash stall is too small to measure the overlap against
-    n, d, L, batch = 8192, 128, 2, 8
+    n, d, L, batch = 8192, 512, 2, 8
     T, warm = (12, 8) if quick else (24, 10)
     repeats = 2 if quick else 3
     n_clusters = 64
@@ -274,6 +284,7 @@ def bench_prefetch_engine_loop(quick: bool = False) -> dict:
         "degraded_lookahead_tokens_per_s": round(best["degraded"], 1),
         "improvement": round(best["pipelined"] / best["serial"], 3),
         "degraded_improvement": round(best["degraded"] / best["serial"], 3),
+        "ffn_kernel": rt_s.ffn_kernel,
         "topup_neurons_total": rt_d.topup_total,
         "measured": {
             "wall_seconds_per_token": summary["measured_wall_seconds_per_token"],
@@ -312,9 +323,15 @@ def bench_prefetch_e2e(quick: bool = False) -> dict:
     pad-bucket FFN shape), then the arms are timed back to back inside each
     repeat so host-load drift cancels out of the ratio; the reported number
     is each arm's best repeat (same convention as engine_hotpath).
+
+    A fourth arm forces `ffn_kernel="bundles"` on the same searched layout
+    and the same requests: the serial arm's auto-resolved kernel (segments,
+    since the layout is placement-ordered) must produce bit-identical tokens
+    — `kernel_token_identical` is part of the `--check` gate.
     """
     import jax
     from repro.configs import get_config
+    from repro.core.engine import EngineConfig
     from repro.models import build_model
     from repro.serving.engine import (Request, ServingEngine,
                                       build_offload_runtime)
@@ -340,9 +357,14 @@ def bench_prefetch_e2e(quick: bool = False) -> dict:
     rt_pipe = build_offload_runtime(model, params,
                                     rng=np.random.default_rng(1),
                                     train_lookahead=True)
+    rt_bundles = build_offload_runtime(
+        model, params, rng=np.random.default_rng(1),
+        engine_cfg=EngineConfig(ffn_kernel="bundles"))
     engines = {
         "serial": ServingEngine(model, params, max_len=n_tokens + 24,
                                 mode="offload", offload=rt_serial),
+        "bundles": ServingEngine(model, params, max_len=n_tokens + 24,
+                                 mode="offload", offload=rt_bundles),
         "oracle": ServingEngine(model, params, max_len=n_tokens + 24,
                                 mode="offload", offload=rt_oracle,
                                 prefetch=True, lookahead="oracle"),
@@ -370,9 +392,12 @@ def bench_prefetch_e2e(quick: bool = False) -> dict:
         "serial_tokens_per_s": round(best["serial"], 1),
         "pipelined_tokens_per_s": round(best["pipelined"], 1),
         "oracle_tokens_per_s": round(best["oracle"], 1),
+        "bundles_kernel_tokens_per_s": round(best["bundles"], 1),
         "improvement": round(best["pipelined"] / best["serial"], 3),
         "oracle_token_identical": tokens["serial"] == tokens["oracle"],
         "lookahead_token_identical": tokens["serial"] == tokens["pipelined"],
+        "auto_ffn_kernel": rt_serial.ffn_kernel,
+        "kernel_token_identical": tokens["serial"] == tokens["bundles"],
         "measured": {
             "wall_seconds_per_token": s["measured_wall_seconds_per_token"],
             "serial_seconds_per_token": s["measured_serial_seconds_per_token"],
@@ -549,9 +574,26 @@ def main() -> None:
                     help="--check passes if continuous-batching decode "
                          "tokens/s >= this x length-grouped tokens/s (the "
                          "committed BENCH_serving.json shows the real margin)")
+    ap.add_argument("--efficiency-tolerance", type=float, default=0.5,
+                    help="--check passes if the fresh engine-loop measured "
+                         "overlap_efficiency >= this x the committed "
+                         "BENCH_prefetch.json value (guards the fused-kernel "
+                         "hot path against glue creep; loose because shared "
+                         "CI runners overlap far worse than the committed "
+                         "dedicated-host run)")
     ap.add_argument("--out", default="BENCH_prefetch.json")
     ap.add_argument("--serving-out", default="BENCH_serving.json")
     args = ap.parse_args()
+
+    # read the committed baseline BEFORE the fresh run overwrites --out
+    committed_eff = None
+    committed = pathlib.Path(args.out)
+    if committed.exists():
+        try:
+            committed_eff = json.loads(committed.read_text())[
+                "engine_loop"]["measured"]["overlap_efficiency"]
+        except (json.JSONDecodeError, KeyError, TypeError):
+            committed_eff = None
 
     report = {
         "engine_loop": bench_prefetch_engine_loop(quick=args.quick),
@@ -570,15 +612,28 @@ def main() -> None:
         if not e2e["oracle_token_identical"]:
             sys.exit("pipelined decode (oracle lookahead) is not "
                      "token-identical to serial")
+        if not e2e["kernel_token_identical"]:
+            sys.exit(f"auto ffn_kernel ({e2e['auto_ffn_kernel']}) is not "
+                     "token-identical to the forced-bundles arm")
         floor = args.tolerance * el["serial_tokens_per_s"]
         if el["pipelined_tokens_per_s"] < floor:
             sys.exit(f"pipelined decode regressed: "
                      f"{el['pipelined_tokens_per_s']} tok/s < "
                      f"{args.tolerance} * serial ({floor:.1f})")
+        fresh_eff = el["measured"]["overlap_efficiency"]
+        if committed_eff is not None:
+            eff_floor = args.efficiency_tolerance * committed_eff
+            if fresh_eff < eff_floor:
+                sys.exit(f"overlap efficiency regressed: {fresh_eff:.3f} < "
+                         f"{args.efficiency_tolerance} x committed "
+                         f"({committed_eff:.3f})")
         print(f"prefetch gate OK: pipelined {el['pipelined_tokens_per_s']} "
               f"tok/s vs serial {el['serial_tokens_per_s']} "
-              f"({el['improvement']}x, emulated device latency), "
-              f"oracle token-identical e2e")
+              f"({el['improvement']}x, emulated device latency, "
+              f"ffn_kernel={el['ffn_kernel']}), oracle + kernel "
+              f"token-identical e2e, overlap efficiency {fresh_eff:.3f}"
+              + (f" vs committed {committed_eff:.3f}"
+                 if committed_eff is not None else ""))
         cont = serving["continuous"]["tokens_per_s"]
         grp = serving["grouped"]["tokens_per_s"]
         if cont < args.serving_tolerance * grp:

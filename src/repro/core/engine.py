@@ -147,10 +147,14 @@ class EngineConfig:
     cache_impl: str = "array"         # "array" (vectorized) | "dict" (reference)
     # FFN compute source for the serving runtime: "bundles" evaluates the
     # sparse FFN straight from the staged flash payloads; "segments" routes
-    # through the Pallas segment-gather kernel (kernels/sparse_ffn.py) over
-    # seg_size-aligned blocks of the permuted physical layout — exact for
-    # ReLU models because block over-coverage contributes zero.
-    ffn_kernel: str = "bundles"       # "bundles" | "segments"
+    # through the fused segment-gather kernel (kernels/sparse_ffn.py) over
+    # seg_size-aligned blocks of the permuted physical layout — exact for all
+    # supported activations (covered-but-not-activated neurons are masked
+    # in-kernel via the per-neuron scale tiles). "auto" promotes segments
+    # when the layout is physical-placement-ordered (no identity-placement
+    # layer, and the payload maps onto [n_mats * d_model] bundles) and falls
+    # back to bundles otherwise; the decision is logged in io_summary().
+    ffn_kernel: str = "auto"          # "auto" | "bundles" | "segments"
     kernel_seg_size: int = 128
     # Temporally faithful device emulation: actually wait out each modeled
     # flash read (a real UFS link stalls the pipeline for exactly this long —

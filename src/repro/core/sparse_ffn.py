@@ -78,13 +78,19 @@ def sparse_ffn_from_bundles(
     n_mats: int,
     activation: str = "relu",
     valid_mask: Optional[jnp.ndarray] = None,
+    scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """FFN computed directly from flash bundle payloads (engine read path).
 
     bundles: [k, n_mats * d_model] rows as stored in flash —
     layout per neuron: [up | down] (n_mats=2) or [gate | up | down] (n_mats=3).
+    scales: optional [k] f32 per-neuron symmetric dequant scales; when given,
+    bundles may be raw int8 rows and are dequantized on-device (bitwise equal
+    to `store.format.dequantize_int8`, which is q.astype(f32) * scale).
     """
     k = bundles.shape[0]
+    if scales is not None:
+        bundles = bundles.astype(jnp.float32) * scales[:, None]
     parts = bundles.reshape(k, n_mats, d_model)
     if n_mats == 3:
         w = FFNWeights(w_up=parts[:, 1], w_down=parts[:, 2], w_gate=parts[:, 0])

@@ -126,6 +126,10 @@ class NeuronStore:
     physical slot p stores logical neuron placement[p].
     """
 
+    # In-memory stores hold the payload at its serving dtype; quantized
+    # subclasses (FileNeuronStore over an int8 pack) override these.
+    quantized: bool = False
+
     def __init__(
         self,
         data: np.ndarray,
@@ -150,14 +154,34 @@ class NeuronStore:
     # -- payload surface -----------------------------------------------------
     @property
     def payload_dtype(self) -> np.dtype:
-        """dtype of the bundle payloads this store SERVES (file-backed int8
-        packs store int8 but serve dequantized float32)."""
+        """dtype of the bundle payloads this store SERVES by default
+        (file-backed int8 packs store int8 but `fetch` dequantizes to
+        float32 unless the caller asks for the raw dtype)."""
         return self._phys_data.dtype
 
-    def physical_payload(self) -> np.ndarray:
+    @property
+    def stored_dtype(self) -> np.dtype:
+        """Raw on-media dtype — equals payload_dtype unless the store
+        quantizes. Dtype-faithful staging allocates ring slots at this dtype
+        so int8 pack rows never become float32 on the host."""
+        return self._phys_data.dtype
+
+    def physical_payload(self, dequantize: bool = True) -> np.ndarray:
         """Full [n_neurons, bundle_width] payload in PHYSICAL (placement)
-        order — the segment-kernel weight source. Zero modelled I/O."""
+        order — the segment-kernel weight source. Zero modelled I/O.
+        dequantize=False returns the raw stored dtype (a no-op here; int8
+        file stores return the raw memmap rows)."""
         return self._phys_data
+
+    def physical_scales(self) -> Optional[np.ndarray]:
+        """Per-neuron dequant scales in PHYSICAL order, or None for float
+        payloads (consumers then use an implicit scale of 1.0)."""
+        return None
+
+    def fetch_scales_into(self, logical_ids: np.ndarray, out: np.ndarray) -> np.ndarray:
+        """Gather per-neuron scales for logical ids into `out[:k]` (the
+        staged companion of `fetch_into` on quantized stores)."""
+        raise RuntimeError("store is not quantized: no scales to fetch")
 
     # -- zero-cost payload access -------------------------------------------
     def fetch(self, logical_ids: np.ndarray) -> np.ndarray:

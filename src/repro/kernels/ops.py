@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.coact import coact_accumulate_kernel
-from repro.kernels.sparse_ffn import sparse_ffn_segments_kernel
+from repro.kernels.sparse_ffn import (_apply_act, sparse_ffn_segments_fused_kernel,
+                                      sparse_ffn_segments_kernel)
 from repro.kernels.swa_decode import swa_decode_kernel
 
 
@@ -61,6 +62,86 @@ def sparse_ffn_segments(
         x_p, w_up_p, w_down_p, ids, w_gate_p,
         seg_size=seg_size, activation=activation, interpret=interpret)
     return out[:B]
+
+
+@partial(jax.jit, static_argnames=("seg_size", "activation"))
+def _sparse_ffn_segments_fused_xla(x, w_up, w_down, seg_ids, scale_tiles, w_gate,
+                                   *, seg_size: int, activation: str) -> jnp.ndarray:
+    """Pure-XLA twin of the fused kernel for the CPU serving path.
+
+    Same math in the same order as the Pallas kernel — gather raw [seg, D]
+    tiles, upcast, multiply by the per-neuron scale column pre-matmul — so
+    outputs are bitwise comparable with the interpreted kernel. The Pallas
+    interpreter executes one Python iteration per grid step, which is far too
+    slow for the decode hot loop; XLA fuses the whole thing instead.
+    """
+    S = seg_ids.shape[0]
+    D = x.shape[1]
+    tiles = jnp.where(seg_ids < 0, 0, seg_ids).astype(jnp.int32)
+    sv = jnp.where((seg_ids < 0)[:, None], 0.0,
+                   scale_tiles.astype(jnp.float32)).reshape(S * seg_size, 1)
+
+    def eff(w):
+        t = w.reshape(-1, seg_size, D)[tiles].reshape(S * seg_size, D)
+        return t.astype(jnp.float32) * sv
+
+    pre = jnp.dot(x.astype(jnp.float32), eff(w_up).T,
+                  preferred_element_type=jnp.float32)
+    act = _apply_act(pre, activation)
+    if w_gate is not None:
+        act = act * jnp.dot(x.astype(jnp.float32), eff(w_gate).T,
+                            preferred_element_type=jnp.float32)
+    return jnp.dot(act, eff(w_down), preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("seg_size", "activation", "interpret"))
+def _sparse_ffn_segments_fused_pallas(x, w_up, w_down, seg_ids, scale_tiles, w_gate,
+                                      *, seg_size: int, activation: str,
+                                      interpret: bool) -> jnp.ndarray:
+    B, D = x.shape
+    ids = jnp.where(seg_ids < 0, 0, seg_ids).astype(jnp.int32)
+    sv = jnp.where((seg_ids < 0)[:, None], 0.0, scale_tiles.astype(jnp.float32))
+    x_p = _pad_axis(x.astype(jnp.float32), 0, 8)
+    out = sparse_ffn_segments_fused_kernel(
+        x_p, w_up, w_down, ids, sv, w_gate,
+        seg_size=seg_size, activation=activation, interpret=interpret)
+    return out[:B]
+
+
+def sparse_ffn_segments_fused(
+    x: jnp.ndarray,              # [B, D]
+    w_up: jnp.ndarray,           # [N, D] raw storage dtype (int8 stays int8)
+    w_down: jnp.ndarray,         # [N, D]
+    seg_ids: jnp.ndarray,        # [S] int32 segment block-indices (pad with -1)
+    scale_tiles: jnp.ndarray,    # [S, seg] f32 dequant-scale x activated-mask
+    w_gate: Optional[jnp.ndarray] = None,
+    *,
+    seg_size: int = 128,
+    activation: str = "relu",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused dequant + mask + segment-gather FFN.
+
+    `scale_tiles[s, j]` multiplies the weight rows of physical neuron
+    `seg_ids[s] * seg_size + j` before both matmuls: the int8 dequant scale
+    (1.0 for float payloads) for neurons in the activated union, 0.0 for
+    covered-but-not-activated neurons — exact for relu/relu2/gelu/silu since
+    act(0) == 0. seg_ids entries of -1 are padding (their scale row is forced
+    to 0, so they contribute exactly 0 regardless of the clamped gather).
+
+    interpret=None picks the fused-XLA twin on CPU (fast) and the Pallas
+    kernel elsewhere; interpret=True forces the Pallas interpreter (tests).
+    """
+    assert w_up.shape[0] % seg_size == 0, "neuron axis must be a segment multiple"
+    if interpret is None:
+        if _on_cpu():
+            return _sparse_ffn_segments_fused_xla(
+                x, w_up, w_down, seg_ids, scale_tiles, w_gate,
+                seg_size=seg_size, activation=activation)
+        interpret = False
+    return _sparse_ffn_segments_fused_pallas(
+        x, w_up, w_down, seg_ids, scale_tiles, w_gate,
+        seg_size=seg_size, activation=activation, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("tile_n", "tile_t", "interpret"))

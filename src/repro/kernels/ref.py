@@ -44,6 +44,36 @@ def sparse_ffn_segments_ref(
     return out
 
 
+def sparse_ffn_segments_fused_ref(
+    x: jnp.ndarray,            # [B, D]
+    w_up: jnp.ndarray,         # [N, D] raw storage dtype (int8 or float)
+    w_down: jnp.ndarray,       # [N, D]
+    seg_ids: jnp.ndarray,      # [S] int32 (-1 = padding, contributes 0)
+    scale_tiles: jnp.ndarray,  # [S, seg] f32 dequant-scale x activated-mask
+    w_gate: Optional[jnp.ndarray] = None,
+    *,
+    seg_size: int = 128,
+    activation: str = "relu",
+) -> jnp.ndarray:
+    """Per-segment python loop applying the scale multiplier pre-matmul."""
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros((x.shape[0], x.shape[1]), jnp.float32)
+    for i, s in enumerate(list(seg_ids)):
+        if int(s) < 0:
+            continue
+        lo = int(s) * seg_size
+        sv = scale_tiles[i].astype(jnp.float32)[:, None]       # [seg, 1]
+        up = w_up[lo : lo + seg_size].astype(jnp.float32) * sv
+        down = w_down[lo : lo + seg_size].astype(jnp.float32) * sv
+        pre = xf @ up.T
+        act = _act(pre, activation)
+        if w_gate is not None:
+            gate_w = w_gate[lo : lo + seg_size].astype(jnp.float32) * sv
+            act = act * (xf @ gate_w.T)
+        out = out + act @ down
+    return out
+
+
 def coact_accumulate_ref(masks: jnp.ndarray) -> jnp.ndarray:
     m = masks.astype(jnp.float32)
     return m.T @ m

@@ -201,6 +201,40 @@ class PrefetchWorker:
         return self._thread.is_alive()
 
 
+def _resolve_ffn_kernel(requested: str, placements: List[PlacementResult],
+                        bundle_width: int, expected_width: int) -> tuple:
+    """Resolve EngineConfig.ffn_kernel to a concrete path + human reason.
+
+    "auto" promotes the fused segment kernel exactly when the layout can
+    profit from it: every layer's placement is physical-placement-ordered
+    (mode != "identity" — an identity layout carries no co-activation links,
+    so segment blocks would cover mostly-inactive neurons) AND the stored
+    bundle width maps onto [n_mats * d_model] weight rows (accounting-only
+    stores with synthetic widths cannot be reshaped into FFN matrices).
+    The segment path is exact for all supported activations: covered-but-
+    not-activated neurons are masked in-kernel by the fused scale tiles.
+    """
+    if requested == "bundles":
+        return "bundles", "explicitly requested"
+    if requested == "segments":
+        if bundle_width != expected_width:
+            raise ValueError(
+                f"ffn_kernel='segments' needs bundle_width == n_mats*d_model "
+                f"({expected_width}), store has {bundle_width}")
+        return "segments", "explicitly requested"
+    if requested != "auto":
+        raise ValueError(f"unknown ffn_kernel {requested!r}")
+    if bundle_width != expected_width:
+        return "bundles", (f"bundle_width {bundle_width} != n_mats*d_model "
+                           f"{expected_width}: payload is not segment-mappable")
+    modes = sorted({p.mode for p in placements})
+    if not modes or "identity" in modes:
+        return "bundles", ("identity layout: physical order carries no "
+                           "co-activation links to exploit")
+    return "segments", (f"physical-placement-ordered layout "
+                        f"(modes: {', '.join(modes)})")
+
+
 class OffloadedFFNRuntime:
     """Per-layer RIPPLE offload state: engines, predictors, placements,
     lookahead predictors, and the prefetch staging ring."""
@@ -224,13 +258,6 @@ class OffloadedFFNRuntime:
         NeuronPack, the `from_pack` path."""
         self.cfg = cfg
         self.engine_cfg = engine_cfg or EngineConfig()
-        if self.engine_cfg.ffn_kernel == "segments" and \
-                cfg.activation not in ("relu", "relu2"):
-            # the segment kernel covers whole seg_size blocks; covered-but-
-            # inactive neurons only contribute zero when act(pre <= 0) == 0
-            raise ValueError(
-                f"ffn_kernel='segments' is exact only for relu/relu2 "
-                f"activations, not {cfg.activation!r}")
         if stores is not None:
             if bundles_per_layer is not None or placements is not None:
                 raise ValueError("pass either prebuilt `stores` or raw "
@@ -252,6 +279,11 @@ class OffloadedFFNRuntime:
         self.lookahead = lookahead
         self.lookahead_threshold = lookahead_threshold
         self.n_mats = 3 if cfg.activation == "silu" else 2
+        self.ffn_kernel, self.ffn_kernel_reason = _resolve_ffn_kernel(
+            self.engine_cfg.ffn_kernel,
+            [e.placement for e in self.engines],
+            self.engines[0].store.bundle_width if self.engines else 0,
+            self.n_mats * cfg.d_model)
         # staging ring: 2 pad-bucketed host buffers per (width, dtype), the
         # worker filling one slot while the serving thread consumes the other
         self._staging: Dict[tuple, np.ndarray] = {}
@@ -303,7 +335,7 @@ class OffloadedFFNRuntime:
             oracle_mask = np.asarray(predict_mask(self.predictors[layer], jnp.asarray(h)))
         ids = np.nonzero(np.any(np.atleast_2d(oracle_mask), axis=0))[0]
         _, stats = self.engines[layer].step(ids, fetch_payload=False)
-        y = self._ffn_from_ids(layer, jnp.asarray(h), ids)
+        y = self._ffn_compute(layer, jnp.asarray(h), ids)
         return np.asarray(y), stats
 
     # -- whole decode batch, per-request attribution -------------------------
@@ -329,10 +361,7 @@ class OffloadedFFNRuntime:
             masks = np.asarray(predict_mask(self.predictors[layer], h))
         masks = np.atleast_2d(np.asarray(masks))
         res = self.engines[layer].step_masks(masks, fetch_payload=False)
-        if self.engine_cfg.ffn_kernel == "segments":
-            y = self._ffn_segments(layer, h, res.ids)
-        else:
-            y = self._ffn_from_ids(layer, h, res.ids)
+        y = self._ffn_compute(layer, h, res.ids)
         return y, res
 
     # -- asynchronous layer-ahead prefetch -----------------------------------
@@ -374,13 +403,21 @@ class OffloadedFFNRuntime:
         eng = self.engines[layer]
         pending = eng.begin_step_masks(masks, fetch_payload=False)
         k = int(pending.union.size)
-        if self.engine_cfg.ffn_kernel != "segments":
+        if self.ffn_kernel != "segments":
             store = eng.store
             padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
-            buf = self._ring_slot(store.bundle_width, store.payload_dtype,
+            # dtype-faithful staging: the ring slot is allocated at the RAW
+            # stored dtype, so int8 pack rows stay int8 from pread to device
+            # transfer; the companion scale slot rides along and the dequant
+            # happens on-device inside sparse_ffn_from_bundles.
+            buf = self._ring_slot(store.bundle_width, store.stored_dtype,
                                   padded, layer % 2)
             store.fetch_into(pending.union, buf)
             buf[k:padded] = 0
+            if store.quantized:
+                sbuf = self._scale_slot(padded, layer % 2)
+                store.fetch_scales_into(pending.union, sbuf)
+                sbuf[k:padded] = 0
         return PrefetchedLayer(layer=layer, pending=pending, k_spec=k)
 
     def complete_layer(
@@ -400,23 +437,33 @@ class OffloadedFFNRuntime:
         extra = res.topup_ids
         self.topup_total += int(extra.size)
         k_total = pf.k_spec + int(extra.size)
-        if self.engine_cfg.ffn_kernel == "segments":
-            served = np.concatenate([pf.pending.union, extra])
+        if self.ffn_kernel == "segments":
+            served = (pf.pending.union if extra.size == 0
+                      else np.concatenate([pf.pending.union, extra]))
             topup = time.perf_counter() - t1
             y = self._ffn_segments(layer, h, served)
         else:
             store = eng.store
             padded = -(-max(k_total, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
-            buf = self._ring_slot(store.bundle_width, store.payload_dtype,
+            buf = self._ring_slot(store.bundle_width, store.stored_dtype,
                                   padded, layer % 2, preserve_rows=pf.k_spec)
             if extra.size:   # stage the topped-up payload after the prefetch
                 store.fetch_into(extra, buf[pf.k_spec:])
             buf[k_total:padded] = 0
+            scales = None
+            if store.quantized:
+                sbuf = self._scale_slot(padded, layer % 2,
+                                        preserve_rows=pf.k_spec)
+                if extra.size:
+                    store.fetch_scales_into(extra, sbuf[pf.k_spec:])
+                sbuf[k_total:padded] = 0
+                scales = jnp.asarray(sbuf[:padded])
             topup = time.perf_counter() - t1
             valid = jnp.arange(padded) < k_total
             y = sparse_ffn_from_bundles(
                 h, jnp.asarray(buf[:padded]), self.cfg.d_model, self.n_mats,
-                activation=self.cfg.activation, valid_mask=valid)
+                activation=self.cfg.activation, valid_mask=valid,
+                scales=scales)
         meas = StageMeasurement(io_host_seconds=pf.io_host_seconds,
                                 blocked_seconds=blocked, topup_seconds=topup)
         return y, res, meas
@@ -442,9 +489,32 @@ class OffloadedFFNRuntime:
             self._staging[key] = buf
         return buf
 
+    def _scale_slot(self, padded: int, slot: int,
+                    preserve_rows: int = 0) -> np.ndarray:
+        """Companion ring slot for per-neuron dequant scales (f32 [k]) —
+        staged alongside each quantized payload slot so scales ride the same
+        double-buffering discipline as the bundles they describe."""
+        key = ("scales", slot)
+        buf = self._staging.get(key)
+        if buf is None or buf.shape[0] < padded:
+            size = max(padded, 2 * buf.shape[0] if buf is not None else padded)
+            new = np.zeros((size,), dtype=np.float32)
+            if buf is not None and preserve_rows:
+                new[:preserve_rows] = buf[:preserve_rows]
+            buf = new
+            self._staging[key] = buf
+        return buf
+
     def _staging_buffer(self, width: int, dtype, padded: int) -> np.ndarray:
         """Serial-path staging buffer = slot 0 of the ring."""
         return self._ring_slot(width, dtype, padded, 0)
+
+    def _ffn_compute(self, layer: int, h: jnp.ndarray,
+                     ids: np.ndarray) -> jnp.ndarray:
+        """Dispatch the resolved FFN path for an activated-union id list."""
+        if self.ffn_kernel == "segments":
+            return self._ffn_segments(layer, h, ids)
+        return self._ffn_from_ids(layer, h, ids)
 
     def _ffn_from_ids(self, layer: int, h: jnp.ndarray,
                       ids: np.ndarray) -> jnp.ndarray:
@@ -452,36 +522,50 @@ class OffloadedFFNRuntime:
         k = int(ids.size)
         padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
         buf = self._staging_buffer(store.bundle_width,
-                                   store.payload_dtype, padded)
+                                   store.stored_dtype, padded)
         store.fetch_into(ids, buf)
         buf[k:padded] = 0
+        scales = None
+        if store.quantized:
+            sbuf = self._scale_slot(padded, 0)
+            store.fetch_scales_into(ids, sbuf)
+            sbuf[k:padded] = 0
+            scales = jnp.asarray(sbuf[:padded])
         valid = jnp.arange(padded) < k
         return sparse_ffn_from_bundles(
             h, jnp.asarray(buf[:padded]), self.cfg.d_model, self.n_mats,
-            activation=self.cfg.activation, valid_mask=valid)
+            activation=self.cfg.activation, valid_mask=valid, scales=scales)
 
-    # -- Pallas segment-gather kernel path (EngineConfig.ffn_kernel) ---------
+    # -- fused segment-gather kernel path (EngineConfig.ffn_kernel) ----------
     def _segment_weight_mats(self, layer: int) -> tuple:
-        """Physical-layout weight matrices for the segment kernel, cached per
-        layer: the store's flash payload reshaped into [N, d] up/down(/gate)
-        matrices in placement order, zero-padded to a segment multiple."""
+        """Physical-layout weight matrices for the fused segment kernel,
+        cached per layer: the store's RAW flash payload (int8 stays int8 —
+        dequant happens in-kernel) reshaped into [N, d] up/down(/gate)
+        matrices in placement order, zero-padded to a segment multiple, plus
+        the host-side per-neuron base multipliers (dequant scales, or 1.0 for
+        float payloads) in physical order."""
         cached = self._segment_weights.get(layer)
         if cached is not None:
             return cached
         store = self.engines[layer].store
         seg = self.engine_cfg.kernel_seg_size
         d = self.cfg.d_model
-        parts = np.asarray(store.physical_payload()).reshape(
+        parts = np.asarray(store.physical_payload(dequantize=False)).reshape(
             store.n_neurons, self.n_mats, d)
         pad = (-store.n_neurons) % seg
         if pad:
             parts = np.concatenate(
                 [parts, np.zeros((pad,) + parts.shape[1:], parts.dtype)])
+        base = np.ones(store.n_neurons + pad, dtype=np.float32)
+        scales = store.physical_scales()
+        if scales is not None:
+            base[:store.n_neurons] = scales
         if self.n_mats == 3:     # bundle layout [gate | up | down]
             mats = (jnp.asarray(parts[:, 1]), jnp.asarray(parts[:, 2]),
-                    jnp.asarray(parts[:, 0]))
+                    jnp.asarray(parts[:, 0]), base)
         else:                    # [up | down]
-            mats = (jnp.asarray(parts[:, 0]), jnp.asarray(parts[:, 1]), None)
+            mats = (jnp.asarray(parts[:, 0]), jnp.asarray(parts[:, 1]),
+                    None, base)
         self._segment_weights[layer] = mats
         return mats
 
@@ -489,24 +573,52 @@ class OffloadedFFNRuntime:
 
     def _ffn_segments(self, layer: int, h: jnp.ndarray,
                       ids: np.ndarray) -> jnp.ndarray:
-        """FFN via the Pallas segment-gather kernel: the activated union maps
+        """FFN via the fused segment-gather kernel: the activated union maps
         to seg_size-aligned blocks of the PHYSICAL (placement-permuted)
         layout — contiguous links become few segments, the kernel's DMA
-        argument. Exact for ReLU models: covered-but-inactive neurons have
-        non-positive pre-activations and contribute zero."""
+        argument. Exact for every supported activation: each segment carries
+        a per-neuron multiplier tile (dequant scale x membership in the
+        served union) applied to the weight rows in-kernel, so covered-but-
+        not-activated neurons contribute exactly zero and int8 payloads are
+        dequantized in VMEM, never on the host. Consumes two reused host
+        buffers (segment ids + scale tiles) via jnp.asarray — no fresh
+        concatenate/pad in the decode loop."""
         from repro.kernels import ops
         eng = self.engines[layer]
         seg = self.engine_cfg.kernel_seg_size
+        w_up, w_down, w_gate, base = self._segment_weight_mats(layer)
         phys = eng.placement.physical_of(np.asarray(ids, dtype=np.int64))
-        seg_ids = np.unique(phys // seg)
-        padded = -(-max(int(seg_ids.size), 1) // self.SEG_ID_BUCKET) \
-            * self.SEG_ID_BUCKET
-        seg_ids = np.concatenate(
-            [seg_ids, np.full(padded - seg_ids.size, -1, dtype=np.int64)])
-        w_up, w_down, w_gate = self._segment_weight_mats(layer)
-        return ops.sparse_ffn_segments(
-            h, w_up, w_down, jnp.asarray(seg_ids, jnp.int32), w_gate,
+        seg_of = phys // seg
+        seg_u = np.unique(seg_of)
+        S = int(seg_u.size)
+        padded = -(-max(S, 1) // self.SEG_ID_BUCKET) * self.SEG_ID_BUCKET
+        id_buf = self._seg_ids_buf(padded)
+        id_buf[:S] = seg_u
+        id_buf[S:padded] = -1
+        tiles = self._seg_tiles_buf(padded, seg)
+        tiles[:padded] = 0.0
+        rows = np.searchsorted(seg_u, seg_of)
+        tiles[rows, phys % seg] = base[phys]
+        return ops.sparse_ffn_segments_fused(
+            h, w_up, w_down, jnp.asarray(id_buf[:padded]),
+            jnp.asarray(tiles[:padded]), w_gate,
             seg_size=seg, activation=self.cfg.activation)
+
+    def _seg_ids_buf(self, padded: int) -> np.ndarray:
+        buf = self._staging.get(("seg_ids",))
+        if buf is None or buf.shape[0] < padded:
+            size = max(padded, 2 * buf.shape[0] if buf is not None else padded)
+            buf = np.empty((size,), dtype=np.int32)
+            self._staging[("seg_ids",)] = buf
+        return buf
+
+    def _seg_tiles_buf(self, padded: int, seg: int) -> np.ndarray:
+        buf = self._staging.get(("seg_tiles", seg))
+        if buf is None or buf.shape[0] < padded:
+            size = max(padded, 2 * buf.shape[0] if buf is not None else padded)
+            buf = np.zeros((size, seg), dtype=np.float32)
+            self._staging[("seg_tiles", seg)] = buf
+        return buf
 
     @property
     def n_layers(self) -> int:
@@ -529,6 +641,9 @@ class OffloadedFFNRuntime:
                 if tokens else np.zeros(0, dtype=np.int64))
         per_layer = [e.summary() for e in self.engines]
         out = {
+            # resolved FFN path + why (the EngineConfig may have said "auto")
+            "ffn_kernel": self.ffn_kernel,
+            "ffn_kernel_decision": self.ffn_kernel_reason,
             "io_seconds_per_token": sum(s["io_seconds_per_token"]
                                         for s in per_layer),
             "mean_run_length": float(runs.mean()) if runs.size else 0.0,

@@ -222,10 +222,13 @@ class InferenceServer:
             self._la_params = la
             if prefetch and la is not None and \
                     cfg.activation not in ("relu", "relu2"):
-                # speculative lookahead OVER-predicts by design; the staged
-                # FFN evaluates the whole speculated union, which is only
-                # exact when act(pre <= 0) == 0. Oracle lookahead (la=None,
-                # zero speculation depth) stays exact for any activation.
+                # speculative lookahead OVER-predicts by design; both FFN
+                # paths (bundles and the fused segment kernel) evaluate the
+                # whole SERVED union — speculated neurons included — which is
+                # only exact when act(pre <= 0) == 0. Oracle lookahead
+                # (la=None, zero speculation depth) stays exact for any
+                # activation, on either kernel: the segment path masks
+                # covered-but-not-served neurons in-kernel.
                 raise ValueError(
                     f"prefetch with speculative lookahead is exact only for "
                     f"relu/relu2 activations, not {cfg.activation!r}; use "

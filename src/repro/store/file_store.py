@@ -19,8 +19,12 @@ DRAM-side access (`fetch` / `fetch_into` — cache hits and bytes the engine
 just read) is served from a lazy mmap of the bundle region: the page cache
 plays the role of DRAM residency, and the preceding extent `pread`s warm it,
 which is the honest analogue of "the engine computes with the very bytes it
-read". int8 packs dequantize rows on every payload surface (scales indexed in
-physical order), so the serving runtime always sees float32 bundles.
+read". int8 packs serve rows dtype-faithfully: every payload surface routes
+through one `payload_dtype`-aware accessor (`_as_payload` / `_gather_into`)
+that passes raw int8 through untouched when the consumer asks for the stored
+dtype (the fused segment kernel and dtype-faithful staging ring) and only
+dequantizes (scales indexed in physical order) when the consumer actually
+needs float32.
 """
 from __future__ import annotations
 
@@ -95,37 +99,73 @@ class FileNeuronStore(NeuronStore):
     # -- payload surface -----------------------------------------------------
     @property
     def payload_dtype(self) -> np.dtype:
+        # the dtype `fetch` serves when the caller doesn't say otherwise;
+        # kept float32 for quantized packs so legacy consumers that allocate
+        # from payload_dtype keep receiving dequantized rows.
         return np.dtype(np.float32) if self.quantized else self._stored_dtype
 
-    def physical_payload(self) -> np.ndarray:
-        rows = np.asarray(self._phys_data)
-        if self.quantized:
-            rows = dequantize_int8(rows, self._scales)
-        return rows
+    @property
+    def stored_dtype(self) -> np.dtype:
+        return self._stored_dtype
 
-    def _dequant_phys(self, raw: np.ndarray, phys: np.ndarray) -> np.ndarray:
-        """Dequantize raw rows gathered at physical positions `phys`."""
-        if not self.quantized:
+    def _as_payload(self, raw: np.ndarray, phys: Optional[np.ndarray],
+                    dtype: np.dtype) -> np.ndarray:
+        """Serve raw stored rows (gathered at physical positions `phys`;
+        None = full physical order) at the consumer's dtype. Raw dtype passes
+        through untouched; float32 out of an int8 pack dequantizes — the ONLY
+        place this store turns quantized rows into floats."""
+        dtype = np.dtype(dtype)
+        if dtype == self._stored_dtype:
             return np.asarray(raw)
-        return dequantize_int8(raw, self._scales[phys])
+        if self.quantized and dtype == np.float32:
+            scales = self._scales if phys is None else self._scales[phys]
+            return dequantize_int8(np.asarray(raw), scales)
+        raise ValueError(f"cannot serve {self._stored_dtype} payload as {dtype}")
+
+    def _gather_into(self, phys: np.ndarray, out: np.ndarray) -> None:
+        """`_as_payload` twin that fills a caller buffer (no allocation),
+        dispatching on out.dtype: stored-dtype buffers take the raw rows
+        (int8 stays int8 end-to-end), float32 buffers get the fused
+        gather-dequant."""
+        if out.dtype == self._stored_dtype:
+            np.take(self._phys_data, phys, axis=0, out=out)
+        elif self.quantized and out.dtype == np.float32:
+            np.multiply(self._phys_data[phys].astype(np.float32),
+                        self._scales[phys][:, None], out=out)
+        else:
+            raise ValueError(f"cannot serve {self._stored_dtype} payload "
+                             f"into a {out.dtype} buffer")
+
+    def physical_payload(self, dequantize: bool = True) -> np.ndarray:
+        dtype = (np.float32 if self.quantized and dequantize
+                 else self._stored_dtype)
+        return self._as_payload(self._phys_data, None, dtype)
+
+    def physical_scales(self) -> Optional[np.ndarray]:
+        return self._scales
 
     def fetch(self, logical_ids: np.ndarray) -> np.ndarray:
         logical_ids = np.asarray(logical_ids, dtype=np.int64)
         if logical_ids.size == 0:
             return np.zeros((0, self.bundle_width), dtype=self.payload_dtype)
         phys = self.placement.physical_of(logical_ids)
-        return self._dequant_phys(self._phys_data[phys], phys)
+        return self._as_payload(self._phys_data[phys], phys, self.payload_dtype)
 
     def fetch_into(self, logical_ids: np.ndarray, out: np.ndarray) -> np.ndarray:
         logical_ids = np.asarray(logical_ids, dtype=np.int64)
         k = logical_ids.size
         if k:
             phys = self.placement.physical_of(logical_ids)
-            if self.quantized:
-                np.multiply(self._phys_data[phys].astype(np.float32),
-                            self._scales[phys][:, None], out=out[:k])
-            else:
-                np.take(self._phys_data, phys, axis=0, out=out[:k])
+            self._gather_into(phys, out[:k])
+        return out
+
+    def fetch_scales_into(self, logical_ids: np.ndarray, out: np.ndarray) -> np.ndarray:
+        logical_ids = np.asarray(logical_ids, dtype=np.int64)
+        k = logical_ids.size
+        if k:
+            if self._scales is None:
+                raise RuntimeError("store is not quantized: no scales to fetch")
+            out[:k] = self._scales[self.placement.physical_of(logical_ids)]
         return out
 
     # -- real extent reads ---------------------------------------------------
@@ -176,7 +216,7 @@ class FileNeuronStore(NeuronStore):
         which = np.searchsorted(ext_starts, phys, side="right") - 1
         rows = base[which] + (phys - ext_starts[which])
         flat = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
-        return self._dequant_phys(flat[rows], phys)
+        return self._as_payload(flat[rows], phys, self.payload_dtype)
 
 
 def open_layer_stores(

@@ -1,0 +1,289 @@
+"""Fused flash-to-FFN hot path (ISSUE 6).
+
+The contract under test: the fused segment kernel (int8 tiles + per-neuron
+scale tiles, dequant + masking applied to the weight rows in-kernel) is
+equivalent to `dequantize_int8` + `sparse_ffn_from_bundles` on randomized
+permuted layouts for all four activations, including covered-but-not-
+activated masking; `ffn_kernel="auto"` promotes segments exactly on
+physical-placement-ordered layouts and serves tokens identical to the
+bundles path (serial AND prefetch, in-memory AND file-backed pack); and the
+dtype-faithful staging path never dequantizes int8 rows on the host.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig
+from repro.core.placement import PlacementResult, identity_placement
+from repro.core.sparse_ffn import sparse_ffn_from_bundles
+from repro.kernels import ops, ref
+from repro.models import build_model
+from repro.serving.engine import OffloadedFFNRuntime, Request, ServingEngine
+from repro.store import build_pack, dequantize_int8, quantize_int8
+from repro.store.packer import extract_dense_ffn_bundles
+
+SEG = 128
+
+
+def _perm_placement(rng, n):
+    perm = rng.permutation(n).astype(np.int64)
+    inv = np.empty(n, dtype=np.int64)
+    inv[perm] = np.arange(n)
+    return PlacementResult(placement=perm, inverse=inv, edges_used=0,
+                           search_seconds=0.0, mode="test-perm")
+
+
+def _fused_inputs(rng, n, d, n_mats, ids, *, quantize):
+    """Random bundles -> (kernel args, dequantized-f32 rows for the oracle).
+
+    The weight tiles handed to the kernel are the RAW physical rows (int8
+    when quantized); the scale tiles carry dequant-scale x union-membership.
+    """
+    bundles = (rng.standard_normal((n, n_mats * d)).astype(np.float32) * 0.1)
+    if quantize:
+        q, scales = quantize_int8(bundles)
+        raw, deq = q, dequantize_int8(q, scales)
+    else:
+        raw, deq = bundles, bundles
+        scales = np.ones(n, np.float32)
+    parts = raw.reshape(n, n_mats, d)
+    if n_mats == 3:
+        wu, wd, wg = parts[:, 1], parts[:, 2], parts[:, 0]
+    else:
+        wu, wd, wg = parts[:, 0], parts[:, 1], None
+    seg_u = np.unique(ids // SEG)
+    padded = -(-seg_u.size // 8) * 8
+    seg_ids = np.full(padded, -1, np.int32)
+    seg_ids[:seg_u.size] = seg_u
+    tiles = np.zeros((padded, SEG), np.float32)
+    tiles[np.searchsorted(seg_u, ids // SEG), ids % SEG] = scales[ids]
+    args = (jnp.asarray(wu), jnp.asarray(wd), jnp.asarray(seg_ids),
+            jnp.asarray(tiles), None if wg is None else jnp.asarray(wg))
+    return args, deq
+
+
+@pytest.mark.parametrize("activation,gated", [("relu", False), ("relu2", False),
+                                              ("gelu", False), ("silu", True)])
+@pytest.mark.parametrize("interpret", [True, None])
+@pytest.mark.parametrize("quantize", [False, True])
+def test_fused_kernel_matches_dequant_plus_bundles(rng, activation, gated,
+                                                   interpret, quantize):
+    """Fused int8 kernel == dequantize_int8 + sparse_ffn_from_bundles over
+    the exact activated set, on a sparse random set (so segments over-cover
+    and the in-kernel masking is exercised). interpret=True runs the Pallas
+    interpreter; interpret=None the fused-XLA serving twin."""
+    n, d, B = 512, 128, 3
+    n_mats = 3 if gated else 2
+    x = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32) * 0.5)
+    ids = np.sort(rng.choice(n, size=60, replace=False))
+    (wu, wd, seg_ids, tiles, wg), deq = _fused_inputs(
+        rng, n, d, n_mats, ids, quantize=quantize)
+    y = ops.sparse_ffn_segments_fused(x, wu, wd, seg_ids, tiles, wg,
+                                      seg_size=SEG, activation=activation,
+                                      interpret=interpret)
+    y_ref = sparse_ffn_from_bundles(x, jnp.asarray(deq[ids]), d, n_mats,
+                                    activation=activation)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    y_py = ref.sparse_ffn_segments_fused_ref(x, wu, wd, np.asarray(seg_ids),
+                                             tiles, wg, seg_size=SEG,
+                                             activation=activation)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_py),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fused_masking_is_load_bearing_for_gelu(rng):
+    """Without the 0-scale mask, covered-but-not-activated neurons would
+    contribute (gelu(pre) != 0 for pre < 0) — prove the mask is what makes
+    the non-ReLU segment path exact."""
+    n, d = 256, 128
+    x = jnp.asarray(rng.standard_normal((2, d)).astype(np.float32))
+    ids = np.array([3, 7, 130])          # 2 segments, heavily over-covered
+    (wu, wd, seg_ids, tiles, _), deq = _fused_inputs(
+        rng, n, d, 2, ids, quantize=False)
+    y = ops.sparse_ffn_segments_fused(x, wu, wd, seg_ids, tiles, None,
+                                      seg_size=SEG, activation="gelu")
+    y_ref = sparse_ffn_from_bundles(x, jnp.asarray(deq[ids]), d, 2,
+                                    activation="gelu")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    unmasked = jnp.where(jnp.asarray(seg_ids)[:, None] >= 0,
+                         jnp.ones_like(tiles), tiles)
+    y_bad = ops.sparse_ffn_segments_fused(x, wu, wd, seg_ids, unmasked, None,
+                                          seg_size=SEG, activation="gelu")
+    assert float(jnp.abs(y_bad - y_ref).max()) > 1e-3
+
+
+def test_fused_pad_ids_contribute_zero(rng):
+    n, d = 256, 128
+    x = jnp.asarray(rng.standard_normal((2, d)).astype(np.float32))
+    ids = np.arange(40)
+    (wu, wd, seg_ids, tiles, _), _ = _fused_inputs(
+        rng, n, d, 2, ids, quantize=True)
+    y1 = ops.sparse_ffn_segments_fused(x, wu, wd, seg_ids[:1], tiles[:1],
+                                       None, seg_size=SEG)
+    # same single live segment + 7 pad entries (garbage scale rows: the
+    # wrapper must zero them by seg_id < 0, not trust the caller)
+    garbage = np.array(tiles)
+    garbage[1:] = 9.0
+    y2 = ops.sparse_ffn_segments_fused(x, wu, wd, seg_ids, garbage, None,
+                                       seg_size=SEG)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# auto promotion + serving token identity
+# ---------------------------------------------------------------------------
+
+def _tiny_model(seed=0):
+    cfg = get_config("opt-350m", reduced=True, d_model=48, d_ff=192,
+                     n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def test_auto_resolution_rules(rng):
+    """auto -> segments iff every placement is non-identity AND the payload
+    is segment-mappable; explicit segments on an unmappable width raises."""
+    cfg, model, params = _tiny_model()
+    bundles = extract_dense_ffn_bundles(cfg, params)
+    n = cfg.d_ff
+    perm = [_perm_placement(rng, n) for _ in range(2)]
+    rt = OffloadedFFNRuntime(cfg, bundles, perm)
+    assert rt.ffn_kernel == "segments"
+    assert "placement-ordered" in rt.ffn_kernel_reason
+    # one identity layer demotes the whole runtime
+    rt = OffloadedFFNRuntime(cfg, bundles, [perm[0], identity_placement(n)])
+    assert rt.ffn_kernel == "bundles"
+    assert "identity" in rt.ffn_kernel_reason
+    # accounting-only payload (width != n_mats*d_model) demotes too
+    thin = [b[:, :8].copy() for b in bundles]
+    rt = OffloadedFFNRuntime(cfg, thin, perm, bundle_bytes=4096)
+    assert rt.ffn_kernel == "bundles"
+    assert "segment-mappable" in rt.ffn_kernel_reason
+    with pytest.raises(ValueError, match="bundle_width"):
+        OffloadedFFNRuntime(cfg, thin, perm, bundle_bytes=4096,
+                            engine_cfg=EngineConfig(ffn_kernel="segments"))
+    summary_keys = OffloadedFFNRuntime(cfg, bundles, perm).io_summary()
+    assert summary_keys["ffn_kernel"] == "segments"
+    assert "ffn_kernel_decision" in summary_keys
+
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_auto_serving_token_identical_to_bundles_in_memory(rng, prefetch):
+    """ISSUE 6 acceptance: ffn_kernel='auto' (promoted to segments on the
+    permuted layout) serves tokens bit-identical to the bundles path under
+    the ReLU oracle — serial and prefetch."""
+    cfg, model, params = _tiny_model()
+    bundles = extract_dense_ffn_bundles(cfg, params)
+    perm = [_perm_placement(rng, cfg.d_ff) for _ in range(2)]
+
+    reqs = [Request(uid=i, prompt=rng.integers(0, 128, 6 + i).astype(np.int32),
+                    max_new_tokens=4) for i in range(2)]
+
+    def serve(ecfg):
+        rt = OffloadedFFNRuntime(cfg, bundles, perm, engine_cfg=ecfg)
+        res = ServingEngine(model, params, max_len=32, mode="offload",
+                            offload=rt, prefetch=prefetch).serve(reqs)
+        return rt, [r.tokens for r in res], [r.io_seconds for r in res]
+
+    rt_auto, toks_auto, io_auto = serve(None)
+    rt_bund, toks_bund, io_bund = serve(EngineConfig(ffn_kernel="bundles"))
+    assert rt_auto.ffn_kernel == "segments"
+    assert rt_bund.ffn_kernel == "bundles"
+    assert toks_auto == toks_bund
+    assert io_auto == pytest.approx(io_bund, abs=1e-12)
+
+
+@pytest.mark.parametrize("quantize", ["none", "int8"])
+def test_auto_serving_token_identical_to_bundles_from_pack(tmp_path, rng,
+                                                           quantize):
+    """Same acceptance on the file-backed pack path, float32 AND int8: the
+    fused kernel's in-VMEM dequant (raw int8 tiles x staged scales) must
+    reproduce the bundles path's device-side dequant bit-for-bit at the
+    token level."""
+    cfg, model, params = _tiny_model()
+    path = tmp_path / "m.npack"
+    build_pack(model, params, path, calib_tokens=32, calib_batch=2,
+               calib_seqlen=8, quantize=quantize)
+    reqs = [Request(uid=0, prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new_tokens=4)]
+
+    def serve(ecfg):
+        rt = OffloadedFFNRuntime.from_pack(cfg, path, engine_cfg=ecfg)
+        res = ServingEngine(model, params, max_len=32, mode="offload",
+                            offload=rt).serve(reqs)
+        return rt, res[0].tokens, res[0].io_seconds
+
+    rt_auto, toks_auto, io_auto = serve(None)
+    rt_bund, toks_bund, io_bund = serve(EngineConfig(ffn_kernel="bundles"))
+    assert rt_auto.ffn_kernel == "segments"   # pack placements are searched
+    assert toks_auto == toks_bund
+    assert io_auto == pytest.approx(io_bund, abs=1e-12)
+
+
+def test_int8_pack_serving_never_dequantizes_on_host(tmp_path, rng,
+                                                     monkeypatch):
+    """Dtype-faithful staging: serving an int8 pack (either kernel) must not
+    call the host dequantizer — int8 rows ride the ring and dequantize on
+    device. The staged ring slots must actually BE int8."""
+    import repro.store.file_store as fs
+
+    cfg, model, params = _tiny_model()
+    path = tmp_path / "q.npack"
+    build_pack(model, params, path, calib_tokens=32, calib_batch=2,
+               calib_seqlen=8, quantize="int8")
+    calls = []
+    monkeypatch.setattr(fs, "dequantize_int8",
+                        lambda *a, **k: calls.append(1) or
+                        dequantize_int8(*a, **k))
+    reqs = [Request(uid=0, prompt=rng.integers(0, 128, 8).astype(np.int32),
+                    max_new_tokens=3)]
+    for ecfg in (EngineConfig(ffn_kernel="bundles"), None):
+        rt = OffloadedFFNRuntime.from_pack(cfg, path, engine_cfg=ecfg)
+        calls.clear()
+        ServingEngine(model, params, max_len=32, mode="offload",
+                      offload=rt).serve(reqs)
+        assert not calls, f"host dequant on the {rt.ffn_kernel} path"
+        if rt.ffn_kernel == "bundles":
+            ring = [b for k, b in rt._staging.items()
+                    if isinstance(k[0], int) and b.ndim == 2]
+            assert ring and all(b.dtype == np.int8 for b in ring)
+
+
+def test_file_store_raw_fetch_into_and_scales(tmp_path, rng):
+    """fetch_into dispatches on the OUT buffer dtype: int8 buffers receive
+    raw stored rows, float32 buffers the dequantized ones (back-compat);
+    fetch_scales_into gathers the logical-order scales."""
+    from repro.store import FileNeuronStore, write_pack
+
+    n, w = 64, 12
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    pl = _perm_placement(rng, n)
+    path = tmp_path / "q.npack"
+    write_pack(path, [data], [pl], quantize="int8")
+    st = FileNeuronStore(path, 0)
+    assert st.stored_dtype == np.int8 and st.payload_dtype == np.float32
+    ids = rng.choice(n, size=10, replace=False)
+    phys = pl.physical_of(ids.astype(np.int64))
+    q, scales = quantize_int8(data[pl.placement])
+
+    raw = np.zeros((16, w), np.int8)
+    st.fetch_into(ids, raw)
+    np.testing.assert_array_equal(raw[:10], q[phys])
+    f32 = np.zeros((16, w), np.float32)
+    st.fetch_into(ids, f32)
+    np.testing.assert_array_equal(f32[:10], dequantize_int8(q[phys],
+                                                            scales[phys]))
+    sc = np.zeros(16, np.float32)
+    st.fetch_scales_into(ids, sc)
+    np.testing.assert_array_equal(sc[:10], scales[phys])
+    # physical surfaces
+    np.testing.assert_array_equal(st.physical_payload(dequantize=False), q)
+    np.testing.assert_array_equal(st.physical_scales(), scales)
+    with pytest.raises(ValueError, match="cannot serve"):
+        st.fetch_into(ids, np.zeros((16, w), np.float64))

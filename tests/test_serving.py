@@ -212,7 +212,11 @@ def test_segment_kernel_serving_path_matches_bundles_on_permuted_layout(rng):
     rt_seg = OffloadedFFNRuntime(
         cfg, [bundles], [pl],
         engine_cfg=EngineConfig(ffn_kernel="segments", kernel_seg_size=128))
-    rt_ref = OffloadedFFNRuntime(cfg, [bundles], [pl])
+    rt_ref = OffloadedFFNRuntime(cfg, [bundles], [pl],
+                                 engine_cfg=EngineConfig(ffn_kernel="bundles"))
+    # "auto" promotes segments on this permuted (non-identity) layout
+    rt_auto = OffloadedFFNRuntime(cfg, [bundles], [pl])
+    assert rt_auto.ffn_kernel == "segments"
     h = rng.standard_normal((3, d)).astype(np.float32)
     masks = np.asarray(h @ np.asarray(w.w_up).T > 0)
     y_seg, res_seg = rt_seg.ffn_apply_batch(0, jnp.asarray(h), masks)
@@ -235,21 +239,36 @@ def test_segment_kernel_serving_path_matches_bundles_on_permuted_layout(rng):
     np.testing.assert_allclose(np.asarray(y_pipe), dense, rtol=1e-4, atol=1e-4)
 
 
-def test_segment_kernel_rejects_non_relu_activations(rng):
-    """Block over-coverage only contributes zero when act(pre<=0)==0, so the
-    segments kernel must refuse silu/gelu archs instead of going silently
-    wrong."""
+def test_segment_kernel_exact_for_gated_silu(rng):
+    """The fused segment kernel masks covered-but-not-activated neurons
+    in-kernel (per-neuron scale tiles), so the former relu/relu2-only guard
+    is gone: a gated silu arch on the segments path must match the bundles
+    path AND the dense reference over the same activated set."""
     d, n = 32, 256
     cfg = get_config("granite-3-2b", reduced=True, d_model=d, activation="silu")
     w = FFNWeights(
         w_up=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
         w_down=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32),
         w_gate=jnp.asarray(rng.standard_normal((n, d)) * 0.2, jnp.float32))
-    import pytest
-    with pytest.raises(ValueError, match="relu"):
-        OffloadedFFNRuntime(cfg, [np.asarray(make_bundles(w))],
-                            [identity_placement(n)],
-                            engine_cfg=EngineConfig(ffn_kernel="segments"))
+    bundles = np.asarray(make_bundles(w))
+    rt_seg = OffloadedFFNRuntime(cfg, [bundles], [identity_placement(n)],
+                                 engine_cfg=EngineConfig(ffn_kernel="segments"))
+    rt_ref = OffloadedFFNRuntime(cfg, [bundles], [identity_placement(n)],
+                                 engine_cfg=EngineConfig(ffn_kernel="bundles"))
+    h = rng.standard_normal((3, d)).astype(np.float32)
+    # silu has no exact sparse support; serve a sparse activated subset and
+    # compare against the masked dense computation over exactly that subset
+    masks = rng.random((3, n)) < 0.2
+    y_seg, _ = rt_seg.ffn_apply_batch(0, jnp.asarray(h), masks)
+    y_ref, _ = rt_ref.ffn_apply_batch(0, jnp.asarray(h), masks)
+    np.testing.assert_allclose(np.asarray(y_seg), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    union = np.any(masks, axis=0)
+    pre = h @ np.asarray(w.w_up).T
+    act = pre / (1 + np.exp(-pre)) * (h @ np.asarray(w.w_gate).T)
+    dense_sub = (act * union[None, :]) @ np.asarray(w.w_down)
+    np.testing.assert_allclose(np.asarray(y_seg), dense_sub,
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_io_summary_aggregates_from_sums(rng):
