@@ -15,8 +15,9 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter on suite name")
     args = ap.parse_args()
 
-    from benchmarks import (kernel_bench, moe_expert_bench, pack_io,
-                            paper_figures, roofline, serving_pipeline)
+    from benchmarks import (fault_bench, kernel_bench, moe_expert_bench,
+                            pack_io, paper_figures, roofline,
+                            serving_pipeline)
 
     suites = [
         ("fig4_bandwidth", paper_figures.fig4_bandwidth),
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig17_precision", paper_figures.fig17_precision),
         ("serving_pipeline", serving_pipeline.serving_pipeline),
         ("pack_io", pack_io.pack_io),
+        ("fault_bench", fault_bench.fault_bench),
         ("kernels", kernel_bench.kernel_bench),
         ("moe_expert", moe_expert_bench.moe_expert_bench),
         ("roofline", roofline.rows_for_run),

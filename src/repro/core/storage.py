@@ -72,6 +72,16 @@ class IOStats:
     measured_ops: int = 0
     measured_bytes: int = 0
     measured_seconds: float = 0.0
+    # Fault-tolerance accounting (repro.store.faults): `retries` counts
+    # re-issued extent reads (transient-error retry or checksum-triggered
+    # re-read), `corrupt_extents` counts CRC mismatches detected by the
+    # opt-in verification mode, and `degraded_steps` marks engine steps the
+    # prefetch pipeline served through the synchronous fallback after a
+    # worker failure. All three stay zero on the clean path — the CI chaos
+    # gate asserts exactly that.
+    retries: int = 0
+    corrupt_extents: int = 0
+    degraded_steps: int = 0
     # pre-collapse run lengths of the requested neurons in flash order — a
     # by-product of read planning (the positions are already sorted there),
     # recorded so callers don't re-derive runs from scratch. Per-read only:
@@ -95,6 +105,9 @@ class IOStats:
         self.measured_ops += other.measured_ops
         self.measured_bytes += other.measured_bytes
         self.measured_seconds += other.measured_seconds
+        self.retries += other.retries
+        self.corrupt_extents += other.corrupt_extents
+        self.degraded_steps += other.degraded_steps
         self.run_lengths = None
 
     @property
@@ -273,6 +286,12 @@ class NeuronStore:
         skipped)."""
         del extents, stats
         return self._phys_data[phys] if fetch_payload else None
+
+    def close(self) -> None:
+        """Release any backing resources. The in-memory store holds none —
+        this no-op anchors the lifecycle contract so runtimes can close
+        every store uniformly (`FileNeuronStore` overrides it to release
+        its fd and memmap)."""
 
 
 class ManagedReader:

@@ -40,6 +40,11 @@ def main(argv=None) -> None:
                     help="identity layout (LLMFlash-style baseline pack)")
     ap.add_argument("--placement-mode", choices=("auto", "exact", "topk"),
                     default="auto")
+    ap.add_argument("--pack-version", type=int, choices=(1, 2), default=2,
+                    help="NeuronPack format version: 2 (default) adds the "
+                         "header CRC + per-bundle CRC32 tables that "
+                         "--verify-checksums serving checks; 1 writes the "
+                         "legacy checksum-free layout")
     ap.add_argument("--shard-dir", default=None,
                     help="keep trace shards here (default: temp dir, deleted)")
     ap.add_argument("--d-model", type=int, default=None)
@@ -67,7 +72,7 @@ def main(argv=None) -> None:
         calib_seqlen=args.calib_seqlen, seed=args.seed,
         use_placement=not args.no_placement,
         placement_mode=args.placement_mode, quantize=args.quantize,
-        shard_dir=args.shard_dir,
+        shard_dir=args.shard_dir, pack_version=args.pack_version,
         meta=dict(arch=args.arch, seed=args.seed, vocab_size=cfg.vocab_size))
     logger.info(
         "packed %d layers x %d neurons x %d floats -> %s (%.1f MB, %s, "

@@ -60,6 +60,10 @@ def main() -> None:
                          "--seed/geometry): REAL positional file reads per "
                          "collapsed extent. Mutually exclusive with the "
                          "synthetic in-memory flash (--no-placement)")
+    ap.add_argument("--verify-checksums", action="store_true",
+                    help="with --pack: verify every extent read against the "
+                         "pack's per-bundle CRC32 table (format v2); a "
+                         "detected corrupt read is re-read, not served")
     ap.add_argument("--kv-quant", action="store_true")
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
@@ -92,7 +96,8 @@ def main() -> None:
             from repro.serving.engine import OffloadedFFNRuntime
             try:     # submit-time geometry validation against the model cfg
                 offload = OffloadedFFNRuntime.from_pack(
-                    cfg, args.pack, engine_cfg=EngineConfig())
+                    cfg, args.pack, engine_cfg=EngineConfig(),
+                    verify_checksums=args.verify_checksums)
             except ValueError as e:
                 raise SystemExit(str(e))
             logger.info("offload runtime loaded from pack %s: %d layer "
@@ -138,15 +143,27 @@ def main() -> None:
                 server.step()
             elif i < len(reqs):                 # idle until the next arrival
                 time.sleep(min(arrivals[i] - now, 0.01))
+    except KeyboardInterrupt:
+        # graceful interrupt: retire every queued/in-flight request with
+        # finish_reason="error" (partial tokens preserved), shut the
+        # prefetch worker down cleanly, and fall through to the normal
+        # result/stat flush instead of a traceback.
+        n = server.abort("interrupted (KeyboardInterrupt)")
+        logger.warning("interrupted: retired %d queued/in-flight requests; "
+                       "flushing partial results", n)
     finally:
         server.close()
     wall = time.perf_counter() - t0
     results = [h.result for h in handles]
     n_tok = sum(len(r.tokens) for r in results)
+    n_err = sum(r.finish_reason == "error" for r in results)
     logger.info("served %d requests, %d tokens in %.2fs (%.1f tok/s), "
                 "slot occupancy %.0f%% over %d decode steps",
-                len(results), n_tok, wall, n_tok / wall,
+                len(results), n_tok, wall, n_tok / max(wall, 1e-9),
                 server.stats.occupancy * 100, server.stats.decode_steps)
+    if n_err:
+        logger.warning("  %d request(s) finished with "
+                       "finish_reason='error'", n_err)
     for r in results[:3]:
         logger.info("  req %d: prefill %.0fms decode %.0fms io %.0fms "
                     "finish=%s -> %s...",
@@ -158,6 +175,13 @@ def main() -> None:
         logger.info("offload I/O: %.2fms/token run_len=%.2f bw=%.0fMB/s hit=%.2f",
                     s["io_seconds_per_token"] * 1e3, s["mean_run_length"],
                     s["effective_bandwidth"] / 1e6, s["cache_hit_rate"])
+        if s["retries"] or s["corrupt_extents"] or s["degraded_steps"] \
+                or s["worker_restarts"]:
+            logger.warning("fault tolerance engaged: %d retried reads, %d "
+                           "corrupt extents caught, %d degraded steps, %d "
+                           "worker restarts", s["retries"],
+                           s["corrupt_extents"], s["degraded_steps"],
+                           s["worker_restarts"])
         if "measured_file_seconds_per_token" in s:
             logger.info("pack file I/O MEASURED: %.3fms/token over %d real "
                         "extent reads (%.1f MB; page-cache-warm after the "
@@ -181,6 +205,8 @@ def main() -> None:
                         p["measured_hidden_seconds_per_token"] * 1e3,
                         p["measured_exposed_seconds_per_token"] * 1e3,
                         p["measured_overlap_efficiency"] * 100)
+    if offload is not None:
+        offload.close()     # releases FileNeuronStore fds for --pack runs
 
 
 if __name__ == "__main__":

@@ -87,7 +87,10 @@ class Result:
     # the modeled double-buffered schedule (stage compute from the measured
     # token wall apportioned by FLOPs, stage io from the UFS model).
     overlapped_seconds: float = 0.0
-    finish_reason: str = "length"      # "length" | "stop"
+    finish_reason: str = "length"      # "length" | "stop" | "error"
+    # set iff finish_reason == "error": the exception that retired this
+    # request (per-request isolation — co-batched requests keep decoding)
+    error: Optional[BaseException] = None
 
 
 def request_key(base_key, uid: int):
@@ -144,9 +147,13 @@ class PrefetchWorker:
     runtime's double-buffered staging ring, then posts the result. Jobs and
     results ride bounded queues (depth 2 = one job in flight + one queued),
     so a stalled consumer can never accumulate unbounded staged state.
-    Exceptions are caught on the worker and re-raised on the serving thread
-    at `wait()`; the worker itself stays alive so `shutdown()` always joins
-    cleanly, even mid-decode.
+    `Exception`s are caught per job on the worker and re-raised on the
+    serving thread at `wait()` — the worker survives a failed job, so one
+    bad read never costs the pipeline its thread. Non-`Exception` errors
+    (`FatalFault`, MemoryError-class havoc) kill the thread; the runtime's
+    supervision in `complete_layer` detects the death, restarts the worker
+    within its budget, and serves the affected layers through the
+    synchronous fallback.
     """
 
     _SENTINEL = object()
@@ -163,10 +170,13 @@ class PrefetchWorker:
         self._jobs.put((layer, masks))
 
     def wait(self, layer: int) -> PrefetchedLayer:
-        """Block until `layer`'s prefetch lands; re-raises worker exceptions."""
+        """Block until `layer`'s prefetch lands; re-raises worker exceptions.
+        Raises RuntimeError promptly (sub-100ms poll) if the worker thread
+        died — the supervision hook in `complete_layer` turns that into a
+        restart + synchronous fallback instead of a crashed batch."""
         while True:
             try:
-                kind, lay, payload = self._results.get(timeout=1.0)
+                kind, lay, payload = self._results.get(timeout=0.1)
                 break
             except queue.Empty:
                 if not self._thread.is_alive():
@@ -189,12 +199,33 @@ class PrefetchWorker:
                 staged = self._runtime._stage_layer(layer, masks)
                 staged.io_host_seconds = time.perf_counter() - t0
                 self._results.put(("ok", layer, staged))
-            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+            except Exception as e:  # noqa: BLE001 — re-raised at wait();
+                # BaseException (FatalFault & co.) deliberately falls
+                # through and kills the thread: that is the worker-death
+                # path supervision exists for.
                 self._results.put(("exc", layer, e))
 
     def shutdown(self) -> None:
-        self._jobs.put(self._SENTINEL)
-        self._thread.join(timeout=30.0)
+        # A dead worker may leave the bounded job queue full; put with a
+        # short timeout and re-check aliveness so shutdown never deadlocks
+        # behind a queue nobody is draining. While waiting for the join,
+        # keep draining stale results: a worker whose staged results were
+        # abandoned (supervision fallback) may be blocked on the bounded
+        # result queue and needs a consumer to reach the sentinel.
+        deadline = time.monotonic() + 30.0
+        sent = False
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            if not sent:
+                try:
+                    self._jobs.put_nowait(self._SENTINEL)
+                    sent = True
+                except queue.Full:
+                    pass
+            try:
+                self._results.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
 
     @property
     def alive(self) -> bool:
@@ -252,6 +283,7 @@ class OffloadedFFNRuntime:
         bundle_bytes: Optional[int] = None,
         *,
         stores: Optional[List[NeuronStore]] = None,
+        max_worker_restarts: int = 2,
     ) -> None:
         """Either raw `bundles_per_layer` + `placements` (in-memory stores are
         built per layer) or prebuilt `stores` — e.g. `FileNeuronStore`s over a
@@ -291,6 +323,19 @@ class OffloadedFFNRuntime:
         self._segment_weights: Dict[int, tuple] = {}
         self._lookahead_np: Optional[List[tuple]] = None
         self.topup_total = 0       # neurons served by synchronous top-up reads
+        # prefetch supervision: on worker death, restart up to
+        # `max_worker_restarts` times per prefetch session, then disable the
+        # worker and serve every remaining layer through the synchronous
+        # fallback. `worker_restarts`/`degraded_steps` are the reporting
+        # counters (io_summary); `_inflight` tracks which layers have a
+        # submitted-but-not-completed prefetch so completion knows whether a
+        # staged result exists to wait for.
+        self.max_worker_restarts = max_worker_restarts
+        self.worker_restarts = 0
+        self.degraded_steps = 0
+        self._worker_disabled = False
+        self._restarts_used = 0
+        self._inflight: set = set()
 
     @classmethod
     def from_pack(
@@ -302,24 +347,43 @@ class OffloadedFFNRuntime:
         predictors: Optional[List[PredictorParams]] = None,
         lookahead: Optional[List[PredictorParams]] = None,
         lookahead_threshold: float = 0.35,
+        verify_checksums: bool = False,
+        retry=None,
+        fault_plans=None,
+        max_worker_restarts: int = 2,
     ) -> "OffloadedFFNRuntime":
         """Serve straight from an on-disk NeuronPack artifact: one
         `FileNeuronStore` per layer, placements read from the pack, every
         collapsed extent a REAL positional file read. Raises ValueError when
         the pack's geometry does not match the model config (layer count,
-        neuron count, bundle width)."""
+        neuron count, bundle width).
+
+        `verify_checksums=True` has every store check each extent read
+        against the pack's per-bundle CRC32 table (v2 packs only; detected
+        corruption triggers a re-read). `retry` overrides the stores'
+        transient-failure `RetryPolicy`; `fault_plans` (one
+        `repro.store.faults.FaultPlan` per layer, None entries allowed)
+        arms deterministic fault injection below the retry layer — the
+        chaos-test hook."""
         from repro.store.file_store import FileNeuronStore
         from repro.store.format import NeuronPack
 
         pack = NeuronPack.open(pack)
         validate_pack_for_model(pack, cfg)
         ecfg = engine_cfg or EngineConfig()
-        stores = [FileNeuronStore(pack, l, device=device,
-                                  reads_per_bundle=ecfg.reads_per_bundle)
+        if fault_plans is not None and len(fault_plans) != pack.n_layers:
+            raise ValueError(f"fault_plans covers {len(fault_plans)} layers, "
+                             f"pack has {pack.n_layers}")
+        stores = [FileNeuronStore(
+                      pack, l, device=device,
+                      reads_per_bundle=ecfg.reads_per_bundle,
+                      retry=retry, verify_checksums=verify_checksums,
+                      fault_plan=fault_plans[l] if fault_plans else None)
                   for l in range(pack.n_layers)]
         return cls(cfg, stores=stores, predictors=predictors,
                    engine_cfg=engine_cfg, lookahead=lookahead,
-                   lookahead_threshold=lookahead_threshold)
+                   lookahead_threshold=lookahead_threshold,
+                   max_worker_restarts=max_worker_restarts)
 
     # -- single merged activated set (legacy accounting interface) ----------
     def ffn_apply(self, layer: int, h: np.ndarray, oracle_mask: Optional[np.ndarray] = None):
@@ -367,24 +431,44 @@ class OffloadedFFNRuntime:
     # -- asynchronous layer-ahead prefetch -----------------------------------
     def start_prefetch(self) -> None:
         """Spin up a fresh I/O worker (one per served group: a clean worker
-        means no stale staged state can leak across serve calls)."""
+        means no stale staged state can leak across serve calls). A no-op
+        while the worker is supervision-disabled (restart budget exhausted
+        mid-run): the serving loop re-checks `prefetch_active` every step
+        and must NOT be allowed to reset the budget until the run ends
+        (`stop_prefetch` re-arms it)."""
+        if self._worker_disabled:
+            return
         if self._worker is not None:
             self.stop_prefetch()
+        self._inflight.clear()
         self._worker = PrefetchWorker(self)
 
     def stop_prefetch(self) -> None:
+        """Shut the worker down and re-arm supervision for the next run."""
         if self._worker is not None:
             self._worker.shutdown()
             self._worker = None
+        self._inflight.clear()
+        self._worker_disabled = False
+        self._restarts_used = 0
 
     @property
     def prefetch_active(self) -> bool:
         return self._worker is not None and self._worker.alive
 
     def begin_layer(self, layer: int, masks: np.ndarray) -> None:
-        """Submit a (possibly speculative) prefetch for `layer` to the worker."""
-        assert self._worker is not None, "call start_prefetch() first"
+        """Submit a (possibly speculative) prefetch for `layer` to the
+        worker. Degrades instead of crashing: with no live worker (never
+        started, died and found dead here, or supervision-disabled) the
+        submission is skipped and `complete_layer` serves the layer through
+        the synchronous fallback."""
+        if self._worker is not None and not self._worker.alive:
+            self._handle_worker_death(
+                RuntimeError("prefetch worker found dead at submit"))
+        if self._worker is None:
+            return
         self._worker.submit(layer, masks)
+        self._inflight.add(layer)
 
     def predict_lookahead(self, layer: int, h_np: np.ndarray) -> np.ndarray:
         """Speculative mask for `layer + 1` from layer `layer`'s pre-FFN
@@ -420,6 +504,48 @@ class OffloadedFFNRuntime:
                 sbuf[k:padded] = 0
         return PrefetchedLayer(layer=layer, pending=pending, k_spec=k)
 
+    def _handle_worker_death(self, exc: BaseException) -> None:
+        """Supervision: the worker thread died (non-Exception fault, OOM,
+        ...). All in-flight prefetches are lost with the thread's queues;
+        restart within the per-run budget, else disable the worker for the
+        rest of the run (every remaining layer serves synchronously)."""
+        from repro.utils import logger
+        old, self._worker = self._worker, None
+        self._inflight.clear()
+        if old is not None:
+            old.shutdown()
+        if self._restarts_used < self.max_worker_restarts:
+            self._restarts_used += 1
+            self.worker_restarts += 1
+            logger.warning(
+                "prefetch worker died (%s); restarting (%d/%d)",
+                exc, self._restarts_used, self.max_worker_restarts)
+            self._worker = PrefetchWorker(self)
+        else:
+            self._worker_disabled = True
+            logger.warning(
+                "prefetch worker died (%s); restart budget (%d) exhausted — "
+                "decode continues on the synchronous fallback path",
+                exc, self.max_worker_restarts)
+
+    def _complete_degraded(
+        self, layer: int, h: jnp.ndarray, true_masks: np.ndarray,
+    ) -> tuple[jnp.ndarray, BatchStepResult, StageMeasurement]:
+        """Synchronous fallback for a layer whose prefetch was lost (worker
+        death or per-job failure): one full engine step against the TRUE
+        masks plus FFN from a dedicated staging slot — the double-buffered
+        ring slots may still hold a live prefetch for a neighbouring layer,
+        which must not be clobbered. Output is exact: the payload comes
+        from the same store reads the serial path would issue."""
+        t0 = time.perf_counter()
+        masks = np.atleast_2d(np.asarray(true_masks))
+        res = self.engines[layer].step_masks(masks, fetch_payload=False)
+        y = self._ffn_compute(layer, h, res.ids, staging_slot="degraded")
+        res.merged.io.degraded_steps += 1
+        self.degraded_steps += 1
+        meas = StageMeasurement(topup_seconds=time.perf_counter() - t0)
+        return y, res, meas
+
     def complete_layer(
         self, layer: int, h: jnp.ndarray, true_masks: np.ndarray,
     ) -> tuple[jnp.ndarray, BatchStepResult, StageMeasurement]:
@@ -427,9 +553,30 @@ class OffloadedFFNRuntime:
         the true masks (synchronous top-up read for lookahead misses — the
         mis-predicted payload is fetched and merged before compute, never
         skipped), and evaluate the FFN from the staged ring buffer.
+
+        Fault-tolerant: a layer with no staged prefetch (worker dead /
+        disabled / submission skipped), a per-job worker exception, or a
+        worker death while waiting all land in `_complete_degraded` — the
+        step is served synchronously and decode continues, token-identical
+        whenever the underlying payload reads stay correct.
         """
+        if self._worker is None or layer not in self._inflight:
+            return self._complete_degraded(layer, h, true_masks)
         t0 = time.perf_counter()
-        pf = self._worker.wait(layer)
+        try:
+            pf = self._worker.wait(layer)
+        except Exception as e:
+            from repro.utils import logger
+            self._inflight.discard(layer)
+            if self._worker is not None and not self._worker.alive:
+                self._handle_worker_death(e)
+            else:
+                # per-job failure: the worker survived, only this layer's
+                # staged read is lost; later in-flight layers stay valid.
+                logger.warning("prefetch for layer %d failed (%s); serving "
+                               "synchronously", layer, e)
+            return self._complete_degraded(layer, h, true_masks)
+        self._inflight.discard(layer)
         blocked = time.perf_counter() - t0
         eng = self.engines[layer]
         t1 = time.perf_counter()
@@ -509,25 +656,28 @@ class OffloadedFFNRuntime:
         """Serial-path staging buffer = slot 0 of the ring."""
         return self._ring_slot(width, dtype, padded, 0)
 
-    def _ffn_compute(self, layer: int, h: jnp.ndarray,
-                     ids: np.ndarray) -> jnp.ndarray:
-        """Dispatch the resolved FFN path for an activated-union id list."""
+    def _ffn_compute(self, layer: int, h: jnp.ndarray, ids: np.ndarray,
+                     staging_slot=0) -> jnp.ndarray:
+        """Dispatch the resolved FFN path for an activated-union id list.
+        `staging_slot` picks the host staging buffer: the degraded fallback
+        uses its own slot so it can never clobber a ring slot holding a
+        live neighbouring-layer prefetch."""
         if self.ffn_kernel == "segments":
             return self._ffn_segments(layer, h, ids)
-        return self._ffn_from_ids(layer, h, ids)
+        return self._ffn_from_ids(layer, h, ids, staging_slot)
 
     def _ffn_from_ids(self, layer: int, h: jnp.ndarray,
-                      ids: np.ndarray) -> jnp.ndarray:
+                      ids: np.ndarray, staging_slot=0) -> jnp.ndarray:
         store = self.engines[layer].store
         k = int(ids.size)
         padded = -(-max(k, 1) // self.PAD_BUCKET) * self.PAD_BUCKET
-        buf = self._staging_buffer(store.bundle_width,
-                                   store.stored_dtype, padded)
+        buf = self._ring_slot(store.bundle_width,
+                              store.stored_dtype, padded, staging_slot)
         store.fetch_into(ids, buf)
         buf[k:padded] = 0
         scales = None
         if store.quantized:
-            sbuf = self._scale_slot(padded, 0)
+            sbuf = self._scale_slot(padded, staging_slot)
             store.fetch_scales_into(ids, sbuf)
             sbuf[k:padded] = 0
             scales = jnp.asarray(sbuf[:padded])
@@ -650,6 +800,14 @@ class OffloadedFFNRuntime:
             "effective_bandwidth": useful / io_s if io_s else 0.0,
             "cache_hit_rate": hits / accesses if accesses else 0.0,
             "ops_per_token": sum(s["ops_per_token"] for s in per_layer),
+            # fault-tolerance counters: ALWAYS present (and exactly zero on
+            # the clean path — the CI chaos job gates on that). retries /
+            # corrupt_extents flow up from the stores' IOStats; degraded
+            # steps / worker restarts come from prefetch supervision.
+            "retries": sum(t.io.retries for t in tokens),
+            "corrupt_extents": sum(t.io.corrupt_extents for t in tokens),
+            "degraded_steps": sum(t.io.degraded_steps for t in tokens),
+            "worker_restarts": self.worker_restarts,
         }
         # dual accounting: wall-clock of REAL file reads, when the stores
         # perform any (FileNeuronStore over a NeuronPack) — alongside, never
@@ -668,6 +826,23 @@ class OffloadedFFNRuntime:
         for e in self.engines:
             e.reset_stats()
         self.topup_total = 0
+        self.worker_restarts = 0
+        self.degraded_steps = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Shut down the prefetch worker and close every layer store
+        (releases `FileNeuronStore` fds + memmaps; the in-memory store's
+        close is a no-op). Idempotent."""
+        self.stop_prefetch()
+        for e in self.engines:
+            e.store.close()
+
+    def __enter__(self) -> "OffloadedFFNRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def dense_ffn_layer_count(cfg: ModelConfig) -> int:
@@ -768,12 +943,28 @@ class ServingEngine:
         self.swa = swa
         self.mode = mode
         self.offload = offload
+        self._owns_offload = pack_path is not None   # we built it: we close it
         self.oracle = oracle
         self.prefetch = prefetch
         self.lookahead = lookahead
         self.scheduler = scheduler or IOScheduler(overlap=True)
         self._decode = jax.jit(
             lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+
+    def close(self) -> None:
+        """Release the offload runtime's resources; closes the layer stores
+        only when this engine built the runtime itself (pack_path=)."""
+        if self.offload is not None:
+            if self._owns_offload:
+                self.offload.close()
+            else:
+                self.offload.stop_prefetch()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def serve(self, requests: List[Request], seed: int = 0) -> List[Result]:
         """Submit every request to a fresh InferenceServer (one decode slot

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.pipeline import IOScheduler
 from repro.core.predictor import PredictorParams, predict_mask
+from repro.utils import logger
 from repro.models import transformer
 from repro.models.layers import apply_norm, embed_tokens, unembed
 from repro.models.model import Model
@@ -80,8 +81,10 @@ class RequestHandle:
     request: Request
     state: RequestState = RequestState.QUEUED
     tokens: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None      # "length" | "stop" once FINISHED
+    # "length" | "stop" | "error" once FINISHED
+    finish_reason: Optional[str] = None
     result: Optional[Result] = None
+    error: Optional[BaseException] = None    # set iff finish_reason=="error"
     slot: Optional[int] = None
     on_token: Optional[Callable[[int, int], None]] = None   # (uid, token)
     prefill_seconds: float = 0.0
@@ -183,6 +186,7 @@ class InferenceServer:
         self.swa = swa
         self.mode = mode
         self.offload = offload
+        self._owns_offload = pack_path is not None   # we built it: we close it
         self.oracle = oracle
         self.prefetch = prefetch
         self.lookahead = lookahead
@@ -297,12 +301,28 @@ class InferenceServer:
     def step(self) -> int:
         """Advance the server one iteration: admit queued requests into free
         slots (per-request prefill), then run one batched decode iteration
-        over the active slots. Returns the number of tokens emitted."""
+        over the active slots. Returns the number of tokens emitted.
+
+        Error isolation, batch scope: an exception out of the shared decode
+        computation (a flash read that exhausted its retries, a failing
+        store) cannot be attributed to one request, so every active request
+        is retired with `finish_reason="error"` and the exception attached
+        — but the SERVER survives: queued and future submissions admit and
+        decode normally. Per-request failures (sampling, a raising
+        `on_token` callback, a failing prefill) are caught deeper down and
+        retire only the offending request."""
         emitted = 0
         while self._queue and None in self._slot_handle:
             emitted += self._admit(self._queue.popleft())
         if any(h is not None for h in self._slot_handle):
-            emitted += self._decode_iteration()
+            try:
+                emitted += self._decode_iteration()
+            except Exception as e:  # noqa: BLE001 — isolate, don't crash
+                logger.warning("decode iteration failed (%r); retiring the "
+                               "active batch with finish_reason='error'", e)
+                for h in list(self._slot_handle):
+                    if h is not None:
+                        self._fail_request(h, e)
         return emitted
 
     def drain(self) -> List[Result]:
@@ -324,11 +344,34 @@ class InferenceServer:
                 return
             self.step()
 
+    def abort(self, reason: Union[str, BaseException] = "aborted") -> int:
+        """Retire every queued and in-flight request with
+        `finish_reason="error"` (partial tokens preserved on each Result) —
+        the graceful-interrupt path `launch/serve.py` uses on
+        KeyboardInterrupt. Returns the number of requests retired; the
+        server stays usable for new submissions."""
+        exc = (reason if isinstance(reason, BaseException)
+               else RuntimeError(str(reason)))
+        n = 0
+        while self._queue:
+            self._fail_request(self._queue.popleft(), exc)
+            n += 1
+        for h in list(self._slot_handle):
+            if h is not None:
+                self._fail_request(h, exc)
+                n += 1
+        return n
+
     def close(self) -> None:
-        """Release background resources (the prefetch worker). The server
-        stays usable for inspection; further steps would restart the worker."""
-        if self.mode == "offload" and self.prefetch and self.offload is not None:
-            self.offload.stop_prefetch()
+        """Release background resources: the prefetch worker always; the
+        offload runtime's stores too when this server built the runtime
+        itself (pack_path=). The server stays usable for inspection;
+        further steps would restart the worker."""
+        if self.mode == "offload" and self.offload is not None:
+            if self._owns_offload:
+                self.offload.close()
+            else:
+                self.offload.stop_prefetch()
 
     def __enter__(self) -> "InferenceServer":
         return self
@@ -338,26 +381,35 @@ class InferenceServer:
 
     # -- admission / retirement ----------------------------------------------
     def _admit(self, handle: RequestHandle) -> int:
+        """Prefill one queued request into a free slot. Failure-isolated: an
+        exception anywhere in admission (prefill, slot write, the first
+        token's `on_token` callback) retires THIS request with
+        `finish_reason="error"` and leaves the rest of the server intact."""
         slot = self._slot_handle.index(None)
         r = handle.request
         handle.state = RequestState.PREFILL
         handle.slot = slot
-        T = len(r.prompt)
-        prompt = jnp.asarray(np.asarray(r.prompt, dtype=np.int32)[None])
-        t0 = time.perf_counter()
-        small = self.model.init_cache(1, self.max_len, swa=self.swa)
-        logits, small = self.model.prefill(self.params, {"tokens": prompt}, small)
-        row = np.asarray(logits[0, -1], dtype=np.float32)   # forces the sync
-        handle.prefill_seconds = time.perf_counter() - t0
-        self.stats.prefill_seconds += handle.prefill_seconds
-        self.stats.admitted += 1
-        self._write_slot(slot, small)
-        self._slot_handle[slot] = handle
-        self._slot_pos[slot] = T
-        handle.state = RequestState.DECODE
-        tok = self._sample_row(handle, row)
-        self._cur[slot] = tok
-        self._emit(handle, tok)
+        try:
+            T = len(r.prompt)
+            prompt = jnp.asarray(np.asarray(r.prompt, dtype=np.int32)[None])
+            t0 = time.perf_counter()
+            small = self.model.init_cache(1, self.max_len, swa=self.swa)
+            logits, small = self.model.prefill(self.params, {"tokens": prompt},
+                                               small)
+            row = np.asarray(logits[0, -1], dtype=np.float32)  # forces the sync
+            handle.prefill_seconds = time.perf_counter() - t0
+            self.stats.prefill_seconds += handle.prefill_seconds
+            self.stats.admitted += 1
+            self._write_slot(slot, small)
+            self._slot_handle[slot] = handle
+            self._slot_pos[slot] = T
+            handle.state = RequestState.DECODE
+            tok = self._sample_row(handle, row)
+            self._cur[slot] = tok
+            self._emit(handle, tok)
+        except Exception as e:  # noqa: BLE001 — per-request isolation
+            self._fail_request(handle, e)
+            return 0
         return 1
 
     def _write_slot(self, slot: int, small_cache: Any) -> None:
@@ -388,8 +440,10 @@ class InferenceServer:
         elif len(handle.tokens) >= handle.request.max_new_tokens:
             self._retire(handle, "length")
 
-    def _retire(self, handle: RequestHandle, reason: str) -> None:
+    def _retire(self, handle: RequestHandle, reason: str,
+                error: Optional[BaseException] = None) -> None:
         handle.finish_reason = reason
+        handle.error = error
         handle.state = RequestState.FINISHED
         handle.result = Result(
             uid=handle.uid, tokens=list(handle.tokens),
@@ -397,11 +451,23 @@ class InferenceServer:
             decode_seconds=handle.decode_seconds,
             io_seconds=handle.io_seconds,
             overlapped_seconds=handle.overlapped_seconds,
-            finish_reason=reason)
-        self._slot_handle[handle.slot] = None       # freed for admission; the
-        handle.slot = None                          # row leaves every future mask
-        del self._handles[handle.uid]               # uid reusable once finished
+            finish_reason=reason, error=error)
+        if handle.slot is not None:                 # error-retired requests
+            self._slot_handle[handle.slot] = None   # may never have held a
+            handle.slot = None                      # slot; freed rows leave
+        self._handles.pop(handle.uid, None)         # every future mask union
         self._finished.append(handle)
+
+    def _fail_request(self, handle: RequestHandle,
+                      exc: BaseException) -> None:
+        """Retire one request with `finish_reason="error"`: partial tokens
+        stay on the Result, the exception is attached, the slot (if any) is
+        freed, and everything else in the batch keeps decoding."""
+        if handle.done:
+            return
+        logger.warning("request %d failed (%r); retiring with "
+                       "finish_reason='error'", handle.uid, exc)
+        self._retire(handle, "error", error=exc)
 
     # -- sampling (per-request streams) ---------------------------------------
     def _sample_row(self, handle: RequestHandle, row: np.ndarray) -> int:
@@ -438,11 +504,17 @@ class InferenceServer:
             handle.decode_seconds += token_wall
             handle.overlapped_seconds += over
             handle.io_seconds += float(req_io[slot]) + share
-            tok = self._sample_row(handle, logits_rows[slot])
-            self._slot_pos[slot] += 1
-            self._cur[slot] = tok
-            self._emit(handle, tok)                 # may free the slot
-            emitted += 1
+            # per-request isolation: sampling or a raising on_token callback
+            # retires only THIS request; the loop continues for the rest of
+            # the batch (the shared compute above already succeeded).
+            try:
+                tok = self._sample_row(handle, logits_rows[slot])
+                self._slot_pos[slot] += 1
+                self._cur[slot] = tok
+                self._emit(handle, tok)             # may free the slot
+                emitted += 1
+            except Exception as e:  # noqa: BLE001
+                self._fail_request(handle, e)
         return emitted
 
     def _decode_resident(self):

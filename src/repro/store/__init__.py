@@ -8,16 +8,30 @@ serves the existing `NeuronStore` contract from that file with one real
 positional read per collapsed extent, keeping the calibrated device model's
 accounting bit-identical to the in-memory store while adding measured
 wall-clock fields.
+
+Fault tolerance (`repro.store.faults`): format v2 packs carry per-bundle
+CRC32 tables, `FileNeuronStore` retries transient read failures with
+bounded backoff and (opt-in) verifies every extent against the CRCs, and
+`FaultPlan`/`FaultInjectingStore` provide the deterministic seed-driven
+fault schedules the chaos suite and `benchmarks/fault_bench.py` replay.
 """
+from repro.store.faults import (CorruptExtentError, FatalFault, FaultEvent,
+                                FaultInjectingStore, FaultPlan, RetryPolicy,
+                                TransientIOError, seeded_layer_plans)
 from repro.store.file_store import FileNeuronStore, open_layer_stores
-from repro.store.format import (MAGIC, VERSION, NeuronPack, dequantize_int8,
+from repro.store.format import (MAGIC, READABLE_VERSIONS, VERSION, NeuronPack,
+                                PackFormatError, dequantize_int8,
                                 quantize_int8, write_pack)
 from repro.store.packer import (PackBuildReport, build_pack,
                                 extract_dense_ffn_bundles, trace_to_shards)
 
 __all__ = [
-    "MAGIC", "VERSION", "NeuronPack", "FileNeuronStore", "open_layer_stores",
+    "MAGIC", "VERSION", "READABLE_VERSIONS", "NeuronPack", "PackFormatError",
+    "FileNeuronStore", "open_layer_stores",
     "write_pack", "quantize_int8", "dequantize_int8",
     "PackBuildReport", "build_pack", "extract_dense_ffn_bundles",
     "trace_to_shards",
+    "FaultPlan", "FaultEvent", "FaultInjectingStore", "RetryPolicy",
+    "TransientIOError", "CorruptExtentError", "FatalFault",
+    "seeded_layer_plans",
 ]

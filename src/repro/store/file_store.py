@@ -28,17 +28,27 @@ needs float32.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import time
+import zlib
 from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.collapse import Extent
 from repro.core.storage import IOStats, NeuronStore, UFSDevice
+from repro.store.faults import (CorruptExtentError, FatalFault, FaultPlan,
+                                RetryPolicy, TransientIOError, is_retryable)
 from repro.store.format import NeuronPack, dequantize_int8
 
 _HAS_PREAD = hasattr(os, "pread")
+
+
+class _ChecksumMismatch(Exception):
+    """Internal: an extent's payload failed per-bundle CRC verification.
+    Converted to a retry (transient corruption: a re-read serves clean
+    bytes) or, once the budget is exhausted, to `CorruptExtentError`."""
 
 
 class FileNeuronStore(NeuronStore):
@@ -52,7 +62,20 @@ class FileNeuronStore(NeuronStore):
         reads_per_bundle: int = 1,
         bundle_bytes: Optional[int] = None,
         use_pread: bool = True,
+        *,
+        retry: Optional[RetryPolicy] = None,
+        verify_checksums: bool = False,
+        fault_plan: Optional[FaultPlan] = None,
     ) -> None:
+        """`retry` bounds how many times a transient extent-read failure
+        (retryable OSError, or a CRC mismatch under `verify_checksums`) is
+        re-read with exponential backoff before propagating.
+        `verify_checksums=True` checks every extent's bundles against the
+        pack's per-bundle CRC32 table after each read (v2 packs only) —
+        a detected corrupt read costs one `IOStats.corrupt_extents` and a
+        re-read, never silent corruption. `fault_plan` injects a
+        deterministic fault schedule BELOW the retry layer (see
+        `repro.store.faults`): the recoverable-chaos test hook."""
         # no super().__init__: the payload is the FILE, not a passed array.
         # Modeled accounting defaults to the pack's stored row bytes, so an
         # int8 pack is billed int8 bytes by the device model too.
@@ -77,12 +100,34 @@ class FileNeuronStore(NeuronStore):
         self._phys_data = pack.bundles_memmap(layer)   # raw-dtype page view
         self._fd = (os.open(pack.path, os.O_RDONLY)
                     if use_pread and _HAS_PREAD else None)
+        self.retry = retry or RetryPolicy()
+        self.verify_checksums = verify_checksums
+        self.fault_plan = fault_plan
+        self._read_counter = itertools.count()   # logical extent reads served
+        self._row_crcs = None
+        if verify_checksums:
+            crcs = pack.row_crcs(layer)
+            if crcs is None:
+                raise ValueError(
+                    f"{pack.path}: verify_checksums=True needs a v2 pack "
+                    f"with per-bundle CRC tables (this pack is version "
+                    f"{pack.version}); rebuild it with "
+                    f"write_pack(..., version=2)")
+            self._row_crcs = crcs
 
     # -- lifecycle -----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return getattr(self, "_phys_data", None) is None
+
     def close(self) -> None:
+        """Release the fd and the bundle-region memmap reference. Safe to
+        call more than once; payload arrays already handed out keep their
+        own reference to the mapping and stay valid."""
         if getattr(self, "_fd", None) is not None:
             os.close(self._fd)
             self._fd = None
+        self._phys_data = None
 
     def __del__(self) -> None:  # fd hygiene; mmap closes with the array
         try:
@@ -169,14 +214,45 @@ class FileNeuronStore(NeuronStore):
         return out
 
     # -- real extent reads ---------------------------------------------------
-    def _read_extent(self, start: int, length: int) -> np.ndarray:
-        """One positional read of `length` physically-contiguous bundles."""
+    def _read_extent_attempt(self, start: int, length: int,
+                             read_index: int, attempt: int) -> bytes:
+        """One attempt at one positional read of `length` contiguous
+        bundles, as raw bytes. The fault plan (when armed) injects its
+        scheduled misbehaviour HERE — below the retry loop, at the point a
+        real device would fail."""
+        if self.closed:
+            raise ValueError(f"store for layer {self.layer_index} of "
+                             f"{self.pack.path} is closed")
+        events = (self.fault_plan.active(read_index, attempt)
+                  if self.fault_plan is not None else ())
+        inject_short = inject_corrupt = False
+        for ev in events:
+            if ev.kind == "latency":
+                time.sleep(ev.delay_s)
+            elif ev.kind == "transient":
+                raise TransientIOError(
+                    f"injected transient read error (read {read_index}, "
+                    f"attempt {attempt}) at extent {start}+{length} of "
+                    f"{self.pack.path}")
+            elif ev.kind == "fatal":
+                raise FatalFault(f"injected fatal fault at read "
+                                 f"{read_index} of {self.pack.path}")
+            elif ev.kind == "short_read":
+                inject_short = True
+            elif ev.kind == "corrupt":
+                inject_corrupt = True
         if self._fd is not None:
             want = length * self._row_bytes
             off = self._bundles_at + start * self._row_bytes
             chunks = []
+            first = True
             while want:
                 chunk = os.pread(self._fd, want, off)
+                if first and inject_short and len(chunk) > 1:
+                    # truncate the first chunk so the continuation loop has
+                    # to issue follow-up preads for the remainder
+                    chunk = chunk[:(len(chunk) + 1) // 2]
+                first = False
                 if not chunk:
                     raise IOError(f"short read at offset {off} of "
                                   f"{self.pack.path} (extent {start}"
@@ -185,10 +261,67 @@ class FileNeuronStore(NeuronStore):
                 off += len(chunk)
                 want -= len(chunk)
             buf = chunks[0] if len(chunks) == 1 else b"".join(chunks)
-            return np.frombuffer(buf, dtype=self._stored_dtype).reshape(
-                length, self.bundle_width)
-        # mmap fallback: still a positional slice copy of the same bytes
-        return np.array(self._phys_data[start:start + length])
+        else:
+            # mmap fallback: still a positional slice copy of the same bytes
+            buf = self._phys_data[start:start + length].tobytes()
+        if inject_corrupt:
+            damaged = bytearray(buf)
+            self.fault_plan.corrupt_payload(damaged, read_index)
+            buf = bytes(damaged)
+        return buf
+
+    def _verify_extent(self, buf: bytes, start: int, length: int,
+                       read_index: int) -> None:
+        """Check every bundle of the extent against the pack's per-row
+        CRC32 table (physical row p at table index p)."""
+        rb = self._row_bytes
+        crcs = self._row_crcs
+        view = memoryview(buf)
+        for i in range(length):
+            if zlib.crc32(view[i * rb:(i + 1) * rb]) != int(crcs[start + i]):
+                raise _ChecksumMismatch(
+                    f"CRC mismatch at physical bundle {start + i} (extent "
+                    f"{start}+{length}, read {read_index}) of "
+                    f"{self.pack.path}")
+
+    def _read_extent(self, start: int, length: int,
+                     stats: Optional[IOStats] = None) -> np.ndarray:
+        """One logical positional read of `length` physically-contiguous
+        bundles: bounded-backoff retry for transient failures, optional
+        per-bundle CRC verification with re-read on detected corruption.
+        Retries and detections are recorded on `stats`; the logical read
+        index advances once per call, never per attempt, so fault schedules
+        address reads regardless of how many retries earlier faults cost.
+        """
+        read_index = next(self._read_counter)
+        policy = self.retry
+        attempt = 0
+        while True:
+            try:
+                buf = self._read_extent_attempt(start, length, read_index,
+                                                attempt)
+                if self._row_crcs is not None:
+                    self._verify_extent(buf, start, length, read_index)
+                return np.frombuffer(buf, dtype=self._stored_dtype).reshape(
+                    length, self.bundle_width)
+            except (_ChecksumMismatch, OSError) as e:
+                corrupt = isinstance(e, _ChecksumMismatch)
+                if corrupt and stats is not None:
+                    stats.corrupt_extents += 1
+                if not corrupt and not is_retryable(e):
+                    raise
+                if attempt >= policy.max_retries:
+                    if corrupt:
+                        raise CorruptExtentError(
+                            f"{e} — still corrupt after "
+                            f"{policy.max_retries} re-reads")
+                    raise
+                if stats is not None:
+                    stats.retries += 1
+                delay = policy.backoff(attempt)
+                if delay > 0:
+                    time.sleep(delay)
+                attempt += 1
 
     def _serve_extents(self, extents: List[Extent], phys: np.ndarray,
                        fetch_payload: bool,
@@ -203,7 +336,8 @@ class FileNeuronStore(NeuronStore):
         exactly these extent reads.
         """
         t0 = time.perf_counter()
-        blocks = [self._read_extent(start, length) for start, length in extents]
+        blocks = [self._read_extent(start, length, stats)
+                  for start, length in extents]
         stats.measured_seconds = time.perf_counter() - t0
         stats.measured_ops = len(extents)
         stats.measured_bytes = sum(b.nbytes for b in blocks)
@@ -223,10 +357,14 @@ def open_layer_stores(
     pack: Union[str, os.PathLike, NeuronPack],
     device: Optional[UFSDevice] = None,
     reads_per_bundle: int = 1,
+    *,
+    retry: Optional[RetryPolicy] = None,
+    verify_checksums: bool = False,
 ) -> Tuple[NeuronPack, List[FileNeuronStore]]:
     """All layers of a pack as FileNeuronStores sharing one parsed header."""
     pack = NeuronPack.open(pack)
     stores = [FileNeuronStore(pack, l, device=device,
-                              reads_per_bundle=reads_per_bundle)
+                              reads_per_bundle=reads_per_bundle,
+                              retry=retry, verify_checksums=verify_checksums)
               for l in range(pack.n_layers)]
     return pack, stores

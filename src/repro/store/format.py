@@ -10,14 +10,27 @@ plan maps 1:1 to positional file reads (`repro.store.FileNeuronStore`).
 
 Layout (little-endian, all regions 64-byte aligned)::
 
-    [0:8)     magic  b"NPACK001"
-    [8:16)    uint64 header-JSON byte length H
-    [16:16+H) header JSON (utf-8)
-    --- data_start = align64(16 + H) ---
+    [0:8)        magic  b"NPACK001"
+    [8:16)       uint64 header-JSON byte length H
+    [16:16+H)    header JSON (utf-8)
+    [16+H:16+H+4) uint32 CRC32 of the header JSON          (version >= 2)
+    --- data_start = align64(16 + H [+ 4]) ---
     per layer, in order:
       placement table  int64[n]       physical slot -> logical neuron id
       scales           float32[n]     per-neuron dequant scale (int8 packs)
       bundles          dtype[n, w]    payloads in PHYSICAL placement order
+      bundle_crcs      uint32[n]      per-bundle CRC32       (version >= 2)
+
+Format v2 (the default) adds integrity metadata: a CRC32 of the header
+JSON (a torn header write is detected at open, not as a garbled offset
+table), a per-layer whole-bundle-region CRC32 recorded in the header, and
+a per-bundle CRC32 table — one checksum per physical row, what
+`FileNeuronStore(verify_checksums=True)` checks after every extent read
+so a corrupt flash read is detected and re-read instead of silently
+corrupting decode. v1 packs (no checksums) remain fully readable; v2
+packs are readable by this module only (the version gate below).
+Malformed files of any kind raise `PackFormatError` naming the path and
+what was expected vs found.
 
 The header records per-layer offsets RELATIVE to data_start (so the header's
 own length never feeds back into the offsets), the bundle geometry
@@ -35,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zlib
 from typing import List, Optional, Sequence, Union
 
 import numpy as np
@@ -42,8 +56,15 @@ import numpy as np
 from repro.core.placement import PlacementResult
 
 MAGIC = b"NPACK001"
-VERSION = 1
+VERSION = 2                    # written by default
+READABLE_VERSIONS = (1, 2)     # v1 packs (no checksums) stay readable
 _ALIGN = 64
+
+
+class PackFormatError(ValueError):
+    """The file is not a readable NeuronPack (truncated, wrong magic,
+    unsupported version, garbled or checksum-failing header). The message
+    always names the path and what was expected vs actually found."""
 
 _DTYPES = {"float32": np.float32, "float16": np.float16, "int8": np.int8}
 
@@ -70,6 +91,15 @@ def dequantize_int8(q: np.ndarray, scales: np.ndarray) -> np.ndarray:
     return q.astype(np.float32) * np.asarray(scales, np.float32)[:, None]
 
 
+def _row_crc32s(rows: np.ndarray) -> np.ndarray:
+    """CRC32 of every row of a C-contiguous [n, w] array, as uint32[n]."""
+    rows = np.ascontiguousarray(rows)
+    rb = rows.shape[1] * rows.dtype.itemsize
+    view = memoryview(rows).cast("B")
+    return np.array([zlib.crc32(view[i * rb:(i + 1) * rb])
+                     for i in range(rows.shape[0])], dtype="<u4")
+
+
 @dataclasses.dataclass(frozen=True)
 class PackLayer:
     """One layer's region table (offsets relative to the pack's data_start)."""
@@ -81,6 +111,8 @@ class PackLayer:
     placement_mode: str
     edges_used: int
     search_seconds: float
+    crcs_offset: Optional[int] = None  # per-bundle CRC table (v2 packs)
+    bundles_crc32: Optional[int] = None  # whole-region CRC32 (v2 packs)
 
 
 class NeuronPack:
@@ -94,18 +126,63 @@ class NeuronPack:
 
     def __init__(self, path: Union[str, os.PathLike]) -> None:
         self.path = os.fspath(path)
+        try:
+            size = os.path.getsize(self.path)
+        except OSError as e:
+            raise PackFormatError(f"{self.path}: cannot stat pack file ({e})")
         with open(self.path, "rb") as f:
-            magic = f.read(8)
+            preamble = f.read(16)
+            if len(preamble) < 16:
+                raise PackFormatError(
+                    f"{self.path}: file is {size} bytes — too short for a "
+                    f"NeuronPack (need at least the 16-byte magic + "
+                    f"header-length preamble)")
+            magic = preamble[:8]
             if magic != MAGIC:
-                raise ValueError(
-                    f"{self.path}: not a NeuronPack (magic {magic!r})")
-            (hlen,) = np.frombuffer(f.read(8), dtype="<u8")
-            header = json.loads(f.read(int(hlen)).decode("utf-8"))
-        if header.get("version") != VERSION:
-            raise ValueError(f"{self.path}: unsupported NeuronPack version "
-                             f"{header.get('version')} (reader is {VERSION})")
+                raise PackFormatError(
+                    f"{self.path}: not a NeuronPack (magic {magic!r}, "
+                    f"expected {MAGIC!r})")
+            (hlen,) = np.frombuffer(preamble[8:16], dtype="<u8")
+            hlen = int(hlen)
+            if 16 + hlen > size:
+                raise PackFormatError(
+                    f"{self.path}: header claims {hlen} bytes but only "
+                    f"{size - 16} follow the preamble — truncated pack")
+            blob = f.read(hlen)
+            try:
+                header = json.loads(blob.decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise PackFormatError(
+                    f"{self.path}: header JSON is unreadable ({e}) — "
+                    f"corrupt file or not a NeuronPack")
+            if not isinstance(header, dict):
+                raise PackFormatError(
+                    f"{self.path}: header is {type(header).__name__}, "
+                    f"expected a JSON object")
+            version = header.get("version")
+            if version not in READABLE_VERSIONS:
+                raise PackFormatError(
+                    f"{self.path}: unsupported NeuronPack version {version!r}"
+                    f" (reader supports {READABLE_VERSIONS})")
+            crc_bytes = 0
+            if version >= 2:
+                crc_raw = f.read(4)
+                if len(crc_raw) < 4:
+                    raise PackFormatError(
+                        f"{self.path}: truncated before the v2 header "
+                        f"checksum (expected 4 CRC bytes after the "
+                        f"{hlen}-byte header)")
+                (stored,) = np.frombuffer(crc_raw, dtype="<u4")
+                actual = zlib.crc32(blob)
+                if int(stored) != actual:
+                    raise PackFormatError(
+                        f"{self.path}: header CRC mismatch (stored "
+                        f"0x{int(stored):08x}, computed 0x{actual:08x}) — "
+                        f"corrupt header")
+                crc_bytes = 4
         self.header = header
-        self.data_start = _align(16 + int(hlen))
+        self.version = int(version)
+        self.data_start = _align(16 + hlen + crc_bytes)
         self.n_layers: int = header["n_layers"]
         self.n_neurons: int = header["n_neurons"]
         self.bundle_width: int = header["bundle_width"]
@@ -120,9 +197,19 @@ class NeuronPack:
                       bundles_nbytes=lay["bundles_nbytes"],
                       placement_mode=lay.get("placement_mode", "pack"),
                       edges_used=lay.get("edges_used", 0),
-                      search_seconds=lay.get("search_seconds", 0.0))
+                      search_seconds=lay.get("search_seconds", 0.0),
+                      crcs_offset=lay.get("bundle_crcs"),
+                      bundles_crc32=lay.get("bundles_crc32"))
             for i, lay in enumerate(header["layers"])
         ]
+        last = self._layers[-1] if self._layers else None
+        if last is not None and (self.data_start + last.bundles_offset
+                                 + last.bundles_nbytes) > size:
+            raise PackFormatError(
+                f"{self.path}: file is {size} bytes but the header's region "
+                f"table needs at least "
+                f"{self.data_start + last.bundles_offset + last.bundles_nbytes}"
+                f" — truncated pack data")
 
     @classmethod
     def open(cls, path: Union[str, os.PathLike, "NeuronPack"]) -> "NeuronPack":
@@ -166,6 +253,25 @@ class NeuronPack:
                          offset=self.bundles_file_offset(l),
                          shape=(self.n_neurons, self.bundle_width))
 
+    def row_crcs(self, l: int) -> Optional[np.ndarray]:
+        """Per-bundle CRC32 table for layer `l` (uint32[n], physical order),
+        or None for a v1 pack — the verification input for
+        `FileNeuronStore(verify_checksums=True)`."""
+        lay = self._layers[l]
+        if lay.crcs_offset is None:
+            return None
+        return np.fromfile(self.path, dtype="<u4", count=self.n_neurons,
+                           offset=self.data_start + lay.crcs_offset)
+
+    def verify_bundles(self, l: int) -> bool:
+        """Whole-region integrity check of layer `l`'s bundles against the
+        header-recorded CRC32 (v1 packs have none and trivially pass)."""
+        expected = self._layers[l].bundles_crc32
+        if expected is None:
+            return True
+        data = np.ascontiguousarray(self.bundles_memmap(l))
+        return zlib.crc32(memoryview(data).cast("B")) == int(expected)
+
     def logical_bundles(self, l: int, dequantize: bool = True) -> np.ndarray:
         """Layer `l`'s full payload back in LOGICAL neuron-id order — the
         exact array an in-memory `NeuronStore` would be built from (the
@@ -184,16 +290,22 @@ def write_pack(
     *,
     quantize: str = "none",                       # "none" | "int8"
     meta: Optional[dict] = None,
+    version: int = VERSION,
 ) -> dict:
     """Serialize an offline placement into a NeuronPack file.
 
     `bundles_per_layer` is given in logical neuron-id order (as produced by
     `make_bundles`); the writer applies each layer's placement so the file
     holds bundles in PHYSICAL order. Returns the header dict augmented with
-    `path` and `file_bytes`.
+    `path` and `file_bytes`. `version=2` (the default) writes the checksum
+    metadata (header CRC + per-bundle CRC tables); `version=1` writes the
+    legacy checksum-free layout byte-identically to older writers.
     """
     if quantize not in ("none", "int8"):
         raise ValueError(f"unknown quantize mode {quantize!r}")
+    if version not in READABLE_VERSIONS:
+        raise ValueError(f"cannot write NeuronPack version {version!r} "
+                         f"(writable: {READABLE_VERSIONS})")
     if len(bundles_per_layer) != len(placements):
         raise ValueError(f"{len(bundles_per_layer)} bundle arrays vs "
                          f"{len(placements)} placements")
@@ -214,20 +326,21 @@ def write_pack(
     if dtype_name not in _DTYPES:
         raise ValueError(f"unsupported bundle dtype {dtype_name}")
 
-    # physical-order payloads (+ scales) per layer
-    regions: List[tuple] = []          # (placement i64, scales f32|None, rows)
+    # physical-order payloads (+ scales, + v2 checksum tables) per layer
+    regions: List[tuple] = []   # (placement i64, scales f32|None, rows, crcs)
     for b, pl in zip(bundles_per_layer, placements):
         phys = np.ascontiguousarray(np.asarray(b)[pl.placement])
         scales = None
         if quantized:
             phys, scales = quantize_int8(phys)
-        regions.append((pl.placement.astype("<i8"), scales,
-                        np.ascontiguousarray(phys, dtype=out_dtype)))
+        rows = np.ascontiguousarray(phys, dtype=out_dtype)
+        crcs = _row_crc32s(rows) if version >= 2 else None
+        regions.append((pl.placement.astype("<i8"), scales, rows, crcs))
 
     # layout pass: offsets relative to data_start, every region aligned
     layers = []
     cursor = 0
-    for (placement, scales, rows), pl in zip(regions, placements):
+    for (placement, scales, rows, crcs), pl in zip(regions, placements):
         entry = {"placement": cursor, "placement_mode": pl.mode,
                  "edges_used": int(pl.edges_used),
                  "search_seconds": float(pl.search_seconds)}
@@ -238,10 +351,15 @@ def write_pack(
         entry["bundles"] = cursor
         entry["bundles_nbytes"] = int(rows.nbytes)
         cursor = _align(cursor + rows.nbytes)
+        if crcs is not None:
+            entry["bundle_crcs"] = cursor
+            cursor = _align(cursor + crcs.nbytes)
+            entry["bundles_crc32"] = int(
+                zlib.crc32(memoryview(rows).cast("B")))
         layers.append(entry)
 
     header = {
-        "version": VERSION,
+        "version": int(version),
         "n_layers": len(regions),
         "n_neurons": int(n),
         "bundle_width": int(w),
@@ -251,17 +369,20 @@ def write_pack(
         "meta": dict(meta or {}),
     }
     blob = json.dumps(header).encode("utf-8")
-    data_start = _align(16 + len(blob))
+    crc_bytes = 4 if version >= 2 else 0
+    data_start = _align(16 + len(blob) + crc_bytes)
 
     with open(path, "wb") as f:
         f.write(MAGIC)
         f.write(np.array(len(blob), dtype="<u8").tobytes())
         f.write(blob)
-        f.write(b"\0" * (data_start - 16 - len(blob)))
+        if crc_bytes:
+            f.write(np.array(zlib.crc32(blob), dtype="<u4").tobytes())
+        f.write(b"\0" * (data_start - 16 - len(blob) - crc_bytes))
         cursor = 0
-        for entry, (placement, scales, rows) in zip(layers, regions):
+        for entry, (placement, scales, rows, crcs) in zip(layers, regions):
             for key, arr in (("placement", placement), ("scales", scales),
-                             ("bundles", rows)):
+                             ("bundles", rows), ("bundle_crcs", crcs)):
                 if arr is None:
                     continue
                 off = entry[key]

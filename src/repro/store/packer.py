@@ -101,6 +101,7 @@ def build_pack(
     shard_dir=None,
     sparsity_topk: Optional[int] = None,
     meta: Optional[dict] = None,
+    pack_version: Optional[int] = None,
 ) -> PackBuildReport:
     """The full offline stage for one model: calibration trace -> linked
     placement per dense layer -> NeuronPack on disk.
@@ -153,8 +154,9 @@ def build_pack(
         placement="linked" if use_placement else "identity",
     )
     pack_meta.update(meta or {})
+    version_kw = {} if pack_version is None else {"version": pack_version}
     manifest = write_pack(out_path, bundles, placements,
-                          quantize=quantize, meta=pack_meta)
+                          quantize=quantize, meta=pack_meta, **version_kw)
     return PackBuildReport(
         path=manifest["path"], n_layers=len(bundles), n_neurons=cfg.d_ff,
         bundle_width=bundles[0].shape[1], quantized=manifest["quantized"],

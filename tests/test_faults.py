@@ -1,0 +1,715 @@
+"""Fault-tolerant flash serving (ISSUE 7): deterministic fault injection,
+I/O retry + pack checksums, prefetch-worker supervision, and per-request
+error isolation.
+
+The contract under test (acceptance): under a seeded RECOVERABLE fault
+schedule (transient read errors + latency spikes + at least one CRC-caught
+corrupt extent), offload decode from a v2 NeuronPack is token-identical to
+the fault-free run and `io_summary` reports `retries` / `corrupt_extents`
+exactly matching the injected plan; an UNRECOVERABLE per-request fault
+retires only that request with `finish_reason="error"` (exception attached
+to its Result) while co-batched requests finish with unchanged tokens.
+Satellites: the short-read continuation loop and the mmap fallback read
+path, `PackFormatError` on malformed files, store/runtime close lifecycle,
+and zero fault-counter overhead on the clean path.
+"""
+import errno
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.placement import identity_placement, search_placement
+from repro.core.storage import NeuronStore
+from repro.models import build_model
+from repro.serving.engine import (OffloadedFFNRuntime, Request, ServingEngine,
+                                  build_offload_runtime)
+from repro.serving.server import InferenceServer
+from repro.store import (CorruptExtentError, FatalFault, FaultEvent,
+                         FaultInjectingStore, FaultPlan, FileNeuronStore,
+                         NeuronPack, PackFormatError, RetryPolicy,
+                         TransientIOError, build_pack, seeded_layer_plans,
+                         write_pack)
+from repro.store.format import MAGIC
+
+FAST_RETRY = RetryPolicy(backoff_s=0.0)     # retry instantly in tests
+
+
+# ---------------------------------------------------------------------------
+# store-level fixtures
+# ---------------------------------------------------------------------------
+
+def _write_tiny_pack(path, n=96, w=16, seed=0, version=2, quantize="none"):
+    """One-layer pack with a random (non-identity) placement."""
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    d = rng.random((n, n))
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, np.inf)
+    pl = search_placement(d, mode="exact")
+    write_pack(path, [data], [pl], version=version, quantize=quantize)
+    return data
+
+
+def _read_all(store, n, **kw):
+    """One store.read over a scattered id subset; returns (data, stats)."""
+    ids = np.arange(0, n, 3)
+    return store.read(ids, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_deterministic():
+    kw = dict(transient_rate=0.3, latency_rate=0.2, short_read_rate=0.1,
+              corrupt_rate=0.2, fatal_reads=(7,))
+    a = FaultPlan.seeded(42, 50, **kw)
+    b = FaultPlan.seeded(42, 50, **kw)
+    assert a.n_events == b.n_events > 0
+    for i in range(50):
+        assert [(e.kind, e.times) for e in a.events_at(i)] == \
+            [(e.kind, e.times) for e in b.events_at(i)]
+    assert any(e.kind == "fatal" for e in a.events_at(7))
+    # a different seed draws a different schedule
+    c = FaultPlan.seeded(43, 50, **kw)
+    assert any([e.kind for e in a.events_at(i)] != [e.kind for e in c.events_at(i)]
+               for i in range(50))
+    # injected counts only what active() hands out
+    assert all(v == 0 for v in a.injected.values())
+    a.active(7, 0)
+    assert a.injected["fatal"] == 1
+
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0, "gremlins")
+
+
+def test_corrupt_payload_replayable():
+    plan = FaultPlan(seed=9)
+    a, b = bytearray(b"\0" * 64), bytearray(b"\0" * 64)
+    plan.corrupt_payload(a, 3)
+    plan.corrupt_payload(b, 3)
+    assert a == b and a != b"\0" * 64            # damage is exact-replayable
+    c = bytearray(b"\0" * 64)
+    plan.corrupt_payload(c, 4)                   # but keyed on read_index
+    assert c != a
+
+
+# ---------------------------------------------------------------------------
+# retry loop
+# ---------------------------------------------------------------------------
+
+def test_transient_retry_recovers_with_exact_counter(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    plan = FaultPlan([FaultEvent(0, "transient", times=2)])
+    store = FileNeuronStore(path, retry=FAST_RETRY, fault_plan=plan)
+    data, stats = _read_all(store, 96)
+    np.testing.assert_array_equal(data, clean)
+    assert stats.retries == 2 == plan.injected["transient"]
+    assert stats.corrupt_extents == 0
+    # subsequent reads are clean and cost nothing extra
+    data2, stats2 = _read_all(store, 96)
+    np.testing.assert_array_equal(data2, clean)
+    assert stats2.retries == 0
+
+
+def test_retry_budget_exhausted_propagates(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    plan = FaultPlan([FaultEvent(0, "transient", times=99)])
+    store = FileNeuronStore(path, retry=RetryPolicy(max_retries=2, backoff_s=0),
+                            fault_plan=plan)
+    with pytest.raises(TransientIOError):
+        _read_all(store, 96)
+    assert plan.injected["transient"] == 3       # 1 try + 2 re-reads
+
+
+def test_non_retryable_oserror_propagates_immediately(tmp_path, monkeypatch):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    store = FileNeuronStore(path, retry=FAST_RETRY)
+    calls = {"n": 0}
+
+    def bad_pread(fd, n, off):
+        calls["n"] += 1
+        raise OSError(errno.ENOENT, "gone")
+
+    monkeypatch.setattr(os, "pread", bad_pread)
+    with pytest.raises(OSError) as ei:
+        _read_all(store, 96)
+    assert ei.value.errno == errno.ENOENT
+    assert calls["n"] == 1                       # no retry for a missing file
+
+
+def test_retry_backoff_schedule():
+    p = RetryPolicy(max_retries=4, backoff_s=1e-3, backoff_mult=2.0,
+                    max_backoff_s=3e-3)
+    assert [p.backoff(i) for i in range(4)] == [1e-3, 2e-3, 3e-3, 3e-3]
+    assert RetryPolicy(backoff_s=0).backoff(5) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# short reads + mmap fallback (satellite d)
+# ---------------------------------------------------------------------------
+
+def test_short_read_continuation_loop_injected(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    plan = FaultPlan([FaultEvent(0, "short_read"), FaultEvent(1, "short_read")])
+    store = FileNeuronStore(path, retry=FAST_RETRY, fault_plan=plan,
+                            verify_checksums=True)
+    data, stats = _read_all(store, 96)
+    np.testing.assert_array_equal(data, clean)   # continuation re-reads the rest
+    assert stats.retries == 0                    # a short read is not a failure
+    assert plan.injected["short_read"] == 2
+
+
+def test_short_read_chunked_pread_loop(tmp_path, monkeypatch):
+    """OS-level short reads (pread returning < requested) are absorbed by the
+    continuation loop without any fault plan."""
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    real_pread = os.pread
+    monkeypatch.setattr(os, "pread",
+                        lambda fd, n, off: real_pread(fd, min(n, 32), off))
+    data, stats = _read_all(FileNeuronStore(path, verify_checksums=True), 96)
+    np.testing.assert_array_equal(data, clean)
+    assert stats.retries == 0 and stats.corrupt_extents == 0
+
+
+def test_mmap_fallback_serves_faults_and_verification(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path, use_pread=False), 96)
+    plan = FaultPlan([FaultEvent(0, "transient"), FaultEvent(1, "corrupt")])
+    store = FileNeuronStore(path, use_pread=False, retry=FAST_RETRY,
+                            verify_checksums=True, fault_plan=plan)
+    assert store._fd is None                     # really on the mmap path
+    data, s1 = _read_all(store, 96)
+    _, s2 = _read_all(store, 96)
+    np.testing.assert_array_equal(data, clean)
+    assert s1.retries + s2.retries == 2          # transient + corrupt re-read
+    assert s1.corrupt_extents + s2.corrupt_extents == 1
+    assert plan.injected["corrupt"] == 1
+
+
+# ---------------------------------------------------------------------------
+# latency + corruption
+# ---------------------------------------------------------------------------
+
+def test_latency_spike_is_correctness_neutral(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    plan = FaultPlan([FaultEvent(0, "latency", delay_s=0.02)])
+    store = FileNeuronStore(path, fault_plan=plan)
+    t0 = time.perf_counter()
+    data, stats = _read_all(store, 96)
+    assert time.perf_counter() - t0 >= 0.02
+    np.testing.assert_array_equal(data, clean)
+    assert stats.retries == 0 and plan.injected["latency"] == 1
+
+
+def test_corruption_detected_and_recovered(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    plan = FaultPlan([FaultEvent(0, "corrupt")], seed=5)
+    store = FileNeuronStore(path, retry=FAST_RETRY, verify_checksums=True,
+                            fault_plan=plan)
+    data, stats = _read_all(store, 96)
+    np.testing.assert_array_equal(data, clean)   # the re-read served clean bytes
+    assert stats.corrupt_extents == 1 == plan.injected["corrupt"]
+    assert stats.retries == 1
+
+
+def test_corruption_silent_without_verification(tmp_path):
+    """The motivating negative: without checksums the damaged payload is
+    served as if nothing happened."""
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    plan = FaultPlan([FaultEvent(0, "corrupt")], seed=5)
+    data, stats = _read_all(FileNeuronStore(path, fault_plan=plan), 96)
+    assert stats.corrupt_extents == 0 and stats.retries == 0
+    assert not np.array_equal(data, clean)       # silent corruption
+
+
+def test_persistent_corruption_raises_corrupt_extent_error(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    plan = FaultPlan([FaultEvent(0, "corrupt", times=99)])
+    store = FileNeuronStore(path, retry=RetryPolicy(max_retries=2, backoff_s=0),
+                            verify_checksums=True, fault_plan=plan)
+    with pytest.raises(CorruptExtentError, match="still corrupt after 2"):
+        _read_all(store, 96)
+
+
+def test_verify_bundles_detects_real_on_disk_damage(tmp_path):
+    """Flip one byte of the bundle region ON DISK: the whole-region CRC fails
+    and a verifying store refuses to serve the extent (the damage is
+    persistent — every re-read sees it)."""
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    pack = NeuronPack.open(path)
+    assert pack.verify_bundles(0)
+    off = pack.bundles_file_offset(0)
+    with open(path, "r+b") as f:
+        f.seek(off + 5)
+        byte = f.read(1)
+        f.seek(off + 5)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    assert not NeuronPack(path).verify_bundles(0)
+    store = FileNeuronStore(path, retry=FAST_RETRY, verify_checksums=True)
+    with pytest.raises(CorruptExtentError):
+        store.read(np.arange(96))
+
+
+# ---------------------------------------------------------------------------
+# format v2 / v1 compatibility + PackFormatError (satellite b)
+# ---------------------------------------------------------------------------
+
+def test_v1_pack_still_readable_and_payload_identical(tmp_path):
+    p1, p2 = tmp_path / "v1.npack", tmp_path / "v2.npack"
+    _write_tiny_pack(p1, version=1, seed=3)
+    _write_tiny_pack(p2, version=2, seed=3)
+    a, b = NeuronPack.open(p1), NeuronPack.open(p2)
+    assert (a.version, b.version) == (1, 2)
+    assert a.row_crcs(0) is None and b.row_crcs(0) is not None
+    assert a.verify_bundles(0)                   # trivially passes
+    np.testing.assert_array_equal(a.logical_bundles(0), b.logical_bundles(0))
+    d1, s1 = _read_all(FileNeuronStore(p1), 96)
+    d2, s2 = _read_all(FileNeuronStore(p2), 96)
+    np.testing.assert_array_equal(d1, d2)
+    assert s1.n_ops == s2.n_ops and s1.bytes_read == s2.bytes_read
+
+
+def test_verify_checksums_requires_v2_pack(tmp_path):
+    path = tmp_path / "v1.npack"
+    _write_tiny_pack(path, version=1)
+    with pytest.raises(ValueError, match="needs a v2 pack"):
+        FileNeuronStore(path, verify_checksums=True)
+
+
+def test_quantized_v2_pack_round_trips_with_verification(tmp_path):
+    path = tmp_path / "q.npack"
+    _write_tiny_pack(path, quantize="int8")
+    pack = NeuronPack.open(path)
+    assert pack.quantized and pack.verify_bundles(0)
+    plan = FaultPlan([FaultEvent(0, "corrupt")])
+    store = FileNeuronStore(path, retry=FAST_RETRY, verify_checksums=True,
+                            fault_plan=plan)
+    clean, _ = _read_all(FileNeuronStore(path), 96)
+    data, stats = _read_all(store, 96)
+    np.testing.assert_array_equal(data, clean)
+    assert stats.corrupt_extents == 1
+
+
+def test_pack_format_errors_name_path_and_expectation(tmp_path):
+    # empty file
+    empty = tmp_path / "empty.npack"
+    empty.write_bytes(b"")
+    with pytest.raises(PackFormatError, match="too short"):
+        NeuronPack.open(empty)
+    # wrong magic
+    garbage = tmp_path / "garbage.npack"
+    garbage.write_bytes(b"GARBAGE!" + b"\0" * 64)
+    with pytest.raises(PackFormatError, match="magic b'GARBAGE!'"):
+        NeuronPack.open(garbage)
+    # header claims more bytes than the file holds
+    truncated = tmp_path / "trunc.npack"
+    truncated.write_bytes(MAGIC + np.array(10 ** 6, dtype="<u8").tobytes())
+    with pytest.raises(PackFormatError, match="truncated pack"):
+        NeuronPack.open(truncated)
+    # unreadable header JSON
+    badjson = tmp_path / "badjson.npack"
+    blob = b"\xff\xfe not json"
+    badjson.write_bytes(MAGIC + np.array(len(blob), dtype="<u8").tobytes() + blob)
+    with pytest.raises(PackFormatError, match="header JSON is unreadable"):
+        NeuronPack.open(badjson)
+    # future version
+    futur = tmp_path / "future.npack"
+    blob = b'{"version": 99}'
+    futur.write_bytes(MAGIC + np.array(len(blob), dtype="<u8").tobytes() + blob)
+    with pytest.raises(PackFormatError, match="unsupported NeuronPack version 99"):
+        NeuronPack.open(futur)
+    # valid v2 file with a corrupted header CRC
+    ok = tmp_path / "ok.npack"
+    _write_tiny_pack(ok)
+    raw = bytearray(ok.read_bytes())
+    hlen = int(np.frombuffer(bytes(raw[8:16]), dtype="<u8")[0])
+    raw[16 + hlen] ^= 0xFF                       # the stored CRC's first byte
+    ok.write_bytes(bytes(raw))
+    with pytest.raises(PackFormatError, match="header CRC mismatch"):
+        NeuronPack.open(ok)
+    # valid header, data region chopped off
+    chopped = tmp_path / "chopped.npack"
+    _write_tiny_pack(chopped)
+    full = chopped.read_bytes()
+    chopped.write_bytes(full[:len(full) // 2])
+    with pytest.raises(PackFormatError, match="truncated pack data"):
+        NeuronPack.open(chopped)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_store_close_idempotent_and_context_manager(tmp_path):
+    path = tmp_path / "a.npack"
+    _write_tiny_pack(path)
+    store = FileNeuronStore(path)
+    assert not store.closed
+    store.close()
+    assert store.closed
+    store.close()                                # idempotent
+    with pytest.raises(ValueError, match="closed"):
+        store._read_extent(0, 4)
+    with FileNeuronStore(path) as s2:
+        d, _ = _read_all(s2, 96)
+        assert d.shape[1] == 16
+    assert s2.closed
+
+
+def test_runtime_close_releases_every_layer_store(chaos_env):
+    cfg, path = chaos_env["cfg"], chaos_env["path"]
+    rt = OffloadedFFNRuntime.from_pack(cfg, path)
+    stores = [e.store for e in rt.engines]
+    assert all(not s.closed for s in stores)
+    rt.close()
+    assert all(s.closed for s in stores)
+    assert rt._worker is None
+    # context-manager form
+    with OffloadedFFNRuntime.from_pack(cfg, path) as rt2:
+        assert not rt2.engines[0].store.closed
+    assert rt2.engines[0].store.closed
+
+
+# ---------------------------------------------------------------------------
+# FaultInjectingStore: the unrecoverable path over ANY store
+# ---------------------------------------------------------------------------
+
+def test_fault_injecting_store_surfaces_raw_faults(rng):
+    data = rng.standard_normal((64, 8)).astype(np.float32)
+    plan = FaultPlan([FaultEvent(0, "transient"), FaultEvent(1, "fatal"),
+                      FaultEvent(2, "corrupt")], seed=2)
+    store = FaultInjectingStore(NeuronStore(data, identity_placement(64)), plan)
+    ids = np.arange(0, 64, 2)
+    with pytest.raises(TransientIOError):        # read 0: no retry layer below
+        store.read(ids)
+    with pytest.raises(FatalFault):              # read 1: BaseException
+        store.read(ids)
+    clean = NeuronStore(data, identity_placement(64)).read(ids)[0]
+    damaged, _ = store.read(ids)                 # read 2: corrupted payload
+    assert not np.array_equal(damaged, clean)
+    assert plan.injected == {"transient": 1, "latency": 0, "short_read": 0,
+                             "corrupt": 1, "fatal": 1}
+    # the DRAM-side surface delegates untouched
+    np.testing.assert_array_equal(store.fetch(ids), data[ids])
+
+
+# ===========================================================================
+# serving-level chaos (tentpole acceptance)
+# ===========================================================================
+
+def _pack_env(tmp_path):
+    cfg = get_config("opt-350m", reduced=True, d_model=48, d_ff=192,
+                     n_layers=2, vocab_size=128, activation="relu")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "m.npack")
+    build_pack(model, params, path, calib_tokens=128, calib_batch=4,
+               calib_seqlen=32)
+    return cfg, model, params, path
+
+
+@pytest.fixture(scope="module")
+def chaos_env(tmp_path_factory):
+    """Tiny model + v2 pack + the fault-free baseline tokens, built once."""
+    tmp = tmp_path_factory.mktemp("chaos")
+    cfg, model, params, path = _pack_env(tmp)
+    reqs = _chaos_requests()
+    with OffloadedFFNRuntime.from_pack(cfg, path, verify_checksums=True) as rt:
+        eng = ServingEngine(model, params, mode="offload", offload=rt)
+        clean = eng.serve(reqs)
+        s = rt.io_summary()
+        # satellite f gate: the clean path pays ZERO fault-counter overhead
+        assert (s["retries"], s["corrupt_extents"], s["degraded_steps"],
+                s["worker_restarts"]) == (0, 0, 0, 0)
+    return dict(cfg=cfg, model=model, params=params, path=path,
+                clean_tokens=[r.tokens for r in clean])
+
+
+def _chaos_requests():
+    rng = np.random.default_rng(3)
+    return [Request(uid=i, prompt=rng.integers(0, 128, 12).astype(np.int32),
+                    max_new_tokens=8) for i in range(3)]
+
+
+def _serve_runtime(env, rt, prefetch=False):
+    eng = ServingEngine(env["model"], env["params"], mode="offload",
+                        offload=rt, prefetch=prefetch,
+                        lookahead="oracle" if prefetch else None)
+    try:
+        return eng.serve(_chaos_requests())
+    finally:
+        eng.close()
+
+
+def test_recoverable_chaos_token_identical_with_exact_counters(chaos_env):
+    """ACCEPTANCE: explicit recoverable schedule per layer (transient +
+    latency spike + short read + a CRC-caught corrupt extent) — decode is
+    token-identical to fault-free and the counters equal the plan exactly."""
+    plans = [FaultPlan([FaultEvent(0, "transient"),
+                        FaultEvent(1, "latency", delay_s=1e-3),
+                        FaultEvent(2, "corrupt"),
+                        FaultEvent(3, "short_read")], seed=11 + l)
+             for l in range(2)]
+    with OffloadedFFNRuntime.from_pack(
+            chaos_env["cfg"], chaos_env["path"], verify_checksums=True,
+            fault_plans=plans, retry=FAST_RETRY) as rt:
+        results = _serve_runtime(chaos_env, rt)
+        s = rt.io_summary()
+    assert [r.tokens for r in results] == chaos_env["clean_tokens"]
+    for p in plans:                              # every event actually bit
+        assert p.injected["transient"] == p.injected["latency"] == \
+            p.injected["corrupt"] == p.injected["short_read"] == 1
+    assert s["retries"] == sum(p.injected["transient"] + p.injected["corrupt"]
+                               for p in plans)
+    assert s["corrupt_extents"] == sum(p.injected["corrupt"] for p in plans)
+    assert s["degraded_steps"] == 0 and s["worker_restarts"] == 0
+
+
+def test_seeded_chaos_schedule_replays_exactly(chaos_env):
+    """Rate-drawn schedules: the same seed reproduces the same injected
+    counts, the same counters, and the same (clean) tokens, twice."""
+    def run():
+        plans = seeded_layer_plans(7, 2, 80, transient_rate=0.1,
+                                   latency_rate=0.05, delay_s=5e-4,
+                                   short_read_rate=0.05, corrupt_rate=0.05)
+        with OffloadedFFNRuntime.from_pack(
+                chaos_env["cfg"], chaos_env["path"], verify_checksums=True,
+                fault_plans=plans, retry=FAST_RETRY) as rt:
+            results = _serve_runtime(chaos_env, rt)
+            s = rt.io_summary()
+        return [r.tokens for r in results], s, [dict(p.injected) for p in plans]
+
+    tok_a, s_a, inj_a = run()
+    tok_b, s_b, inj_b = run()
+    assert tok_a == tok_b == chaos_env["clean_tokens"]
+    assert inj_a == inj_b
+    assert sum(d["transient"] + d["corrupt"] for d in inj_a) > 0
+    for s, inj in ((s_a, inj_a), (s_b, inj_b)):
+        assert s["retries"] == sum(d["transient"] + d["corrupt"] for d in inj)
+        assert s["corrupt_extents"] == sum(d["corrupt"] for d in inj)
+
+
+# ---------------------------------------------------------------------------
+# prefetch-worker supervision
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_death_restarts_and_decode_stays_token_identical(chaos_env):
+    """A FatalFault on a worker-issued read kills the thread; supervision
+    restarts it and serves the lost layer synchronously — same tokens."""
+    plans = [FaultPlan([FaultEvent(4, "fatal")], seed=5), FaultPlan(seed=6)]
+    with OffloadedFFNRuntime.from_pack(chaos_env["cfg"], chaos_env["path"],
+                                       fault_plans=plans) as rt:
+        results = _serve_runtime(chaos_env, rt, prefetch=True)
+        s = rt.io_summary()
+    assert plans[0].injected["fatal"] == 1
+    assert s["worker_restarts"] == 1
+    assert s["degraded_steps"] >= 1
+    assert [r.tokens for r in results] == chaos_env["clean_tokens"]
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_restart_budget_exhausted_falls_back_to_sync(chaos_env):
+    """When every restarted worker dies too, the runtime disables prefetch
+    after `max_worker_restarts` and finishes the run on the synchronous
+    path — still token-identical."""
+    with OffloadedFFNRuntime.from_pack(chaos_env["cfg"], chaos_env["path"],
+                                       max_worker_restarts=1) as rt:
+        orig = rt.engines[1].begin_step_masks
+
+        def dies_on_worker(masks, fetch_payload=True):
+            # only worker-issued reads hit the poisoned path; the serving
+            # thread's synchronous fallback reads stay healthy
+            if threading.current_thread().name.startswith("ripple-prefetch"):
+                raise FatalFault("worker poisoned")
+            return orig(masks, fetch_payload)
+
+        rt.engines[1].begin_step_masks = dies_on_worker
+        results = _serve_runtime(chaos_env, rt, prefetch=True)
+        s = rt.io_summary()
+        assert rt.worker_restarts == 1           # budget spent, then disabled
+    assert s["worker_restarts"] == 1
+    assert s["degraded_steps"] > 0
+    assert [r.tokens for r in results] == chaos_env["clean_tokens"]
+
+
+def test_per_job_failure_degrades_only_that_layer(chaos_env):
+    """An ordinary Exception inside a prefetch job (not a thread death) is
+    absorbed: the layer is served synchronously, the worker survives."""
+    with OffloadedFFNRuntime.from_pack(chaos_env["cfg"],
+                                       chaos_env["path"]) as rt:
+        orig = rt.engines[1].begin_step_masks
+        calls = {"n": 0}
+
+        def flaky(masks, fetch_payload=True):
+            if threading.current_thread().name.startswith("ripple-prefetch"):
+                calls["n"] += 1
+                if calls["n"] == 2:
+                    raise RuntimeError("one bad stage")
+            return orig(masks, fetch_payload)
+
+        rt.engines[1].begin_step_masks = flaky
+        results = _serve_runtime(chaos_env, rt, prefetch=True)
+        s = rt.io_summary()
+        assert s["worker_restarts"] == 0         # the worker never died
+        assert s["degraded_steps"] >= 1
+    assert [r.tokens for r in results] == chaos_env["clean_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# per-request error isolation (tentpole, server scope)
+# ---------------------------------------------------------------------------
+
+def _server_env():
+    cfg = get_config("opt-350m", reduced=True, d_model=48, d_ff=192,
+                     n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 128, 10).astype(np.int32),
+                    max_new_tokens=6) for i in range(3)]
+    return model, params, reqs
+
+
+def test_failing_request_is_isolated_from_its_batch():
+    """ACCEPTANCE: an unrecoverable per-request fault (a raising on_token
+    sink) retires ONLY that request with finish_reason="error" and the
+    exception attached; co-batched requests finish with unchanged tokens."""
+    model, params, reqs = _server_env()
+    with InferenceServer(model, params, max_slots=3, max_len=32, seed=0) as srv:
+        handles = [srv.submit(r) for r in reqs]
+        while srv.has_work:
+            srv.step()
+        clean = {h.uid: h.result.tokens for h in handles}
+
+    def bad_sink(uid, tok):
+        if uid == 1:
+            raise RuntimeError("sink exploded")
+
+    with InferenceServer(model, params, max_slots=3, max_len=32, seed=0) as srv:
+        handles = [srv.submit(r, on_token=bad_sink if r.uid == 1 else None)
+                   for r in reqs]
+        while srv.has_work:
+            srv.step()
+        res = {h.uid: h.result for h in handles}
+    assert res[1].finish_reason == "error"
+    assert isinstance(res[1].error, RuntimeError)
+    assert "sink exploded" in str(res[1].error)
+    for uid in (0, 2):                           # the rest of the batch: as-if
+        assert res[uid].finish_reason != "error"
+        assert res[uid].tokens == clean[uid]
+
+
+def test_prefill_failure_isolated_to_one_request():
+    model, params, reqs = _server_env()
+
+    class FlakyModel:
+        """Delegating proxy whose 2nd prefill (uid=1's admission) fails."""
+
+        def __init__(self, inner):
+            self._inner = inner
+            self._prefills = 0
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def prefill(self, *a, **kw):
+            self._prefills += 1
+            if self._prefills == 2:
+                raise RuntimeError("prefill OOM")
+            return self._inner.prefill(*a, **kw)
+
+    with InferenceServer(model, params, max_slots=3, max_len=32, seed=0) as srv:
+        handles = [srv.submit(r) for r in reqs]
+        while srv.has_work:
+            srv.step()
+        clean = {h.uid: h.result.tokens for h in handles}
+
+    srv = InferenceServer(model, params, max_slots=3, max_len=32, seed=0)
+    srv.model = FlakyModel(model)
+    with srv:
+        handles = [srv.submit(r) for r in reqs]
+        while srv.has_work:
+            srv.step()
+        res = {h.uid: h.result for h in handles}
+    assert res[1].finish_reason == "error" and res[1].tokens == []
+    assert "prefill OOM" in str(res[1].error)
+    for uid in (0, 2):
+        assert res[uid].tokens == clean[uid]
+
+
+def test_batch_scope_store_fault_retires_batch_but_server_survives():
+    """A store fault with NO retry layer below it poisons the shared decode
+    computation: the whole active batch is error-retired (it cannot be
+    attributed to one request) — but the server keeps serving new work."""
+    model, params, reqs = _server_env()
+    rt = build_offload_runtime(model, params, rng=np.random.default_rng(2))
+    plan = FaultPlan([FaultEvent(0, "transient")])
+    eng = rt.engines[0]
+    wrapped = FaultInjectingStore(eng.store, plan)
+    eng.store = wrapped
+    eng.reader.store = wrapped
+    with InferenceServer(model, params, max_slots=2, max_len=32,
+                         mode="offload", offload=rt, seed=0) as srv:
+        handles = [srv.submit(r) for r in reqs[:2]]
+        while srv.has_work:
+            srv.step()
+        assert plan.injected["transient"] == 1
+        for h in handles:
+            assert h.result.finish_reason == "error"
+            assert isinstance(h.result.error, TransientIOError)
+            assert len(h.result.tokens) >= 1     # the prefill token survived
+        # the fault was one-shot: the server admits and completes new work
+        late = srv.submit(reqs[2])
+        while srv.has_work:
+            srv.step()
+        assert late.result.finish_reason == "length"
+        assert len(late.result.tokens) == 6
+
+
+def test_abort_retires_queued_and_active_requests():
+    model, params, reqs = _server_env()
+    with InferenceServer(model, params, max_slots=2, max_len=32, seed=0) as srv:
+        handles = [srv.submit(r) for r in reqs]  # 2 slots, 1 queued
+        srv.step()
+        n = srv.abort("interrupted (KeyboardInterrupt)")
+        assert n == 3
+        assert not srv.has_work
+        for h in handles:
+            assert h.result.finish_reason == "error"
+            assert "interrupted" in str(h.result.error)
+        # partial tokens are preserved on in-flight requests
+        assert any(len(h.result.tokens) > 0 for h in handles)
+        # still usable afterwards
+        again = srv.submit(Request(uid=99, prompt=np.arange(8, dtype=np.int32),
+                                   max_new_tokens=3))
+        while srv.has_work:
+            srv.step()
+        assert again.result.finish_reason == "length"
