@@ -15,9 +15,9 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter on suite name")
     args = ap.parse_args()
 
-    from benchmarks import (fault_bench, kernel_bench, moe_expert_bench,
-                            pack_io, paper_figures, roofline,
-                            serving_pipeline)
+    from benchmarks import (fault_bench, kernel_bench, load_harness,
+                            moe_expert_bench, pack_io, paper_figures,
+                            roofline, serving_pipeline)
 
     suites = [
         ("fig4_bandwidth", paper_figures.fig4_bandwidth),
@@ -35,6 +35,7 @@ def main() -> None:
         ("serving_pipeline", serving_pipeline.serving_pipeline),
         ("pack_io", pack_io.pack_io),
         ("fault_bench", fault_bench.fault_bench),
+        ("load_harness", load_harness.load_harness),
         ("kernels", kernel_bench.kernel_bench),
         ("moe_expert", moe_expert_bench.moe_expert_bench),
         ("roofline", roofline.rows_for_run),

@@ -270,6 +270,15 @@ class LinkingAlignedCache:
         return np.fromiter((self.cache.access(int(i)) for i in ids),
                            dtype=bool, count=len(ids))
 
+    def peek_mask(self, ids: np.ndarray) -> np.ndarray:
+        """Side-effect-free residency probe: same mask as `lookup_mask` would
+        return, but no hit/miss counters, frequencies, or queue state move.
+        The admission predictor (serving/server.py) uses this to cost a step
+        without perturbing the cache it is predicting."""
+        ids = np.asarray(ids, dtype=np.int64)
+        return np.fromiter((int(i) in self.cache for i in ids),
+                           dtype=bool, count=len(ids))
+
     def lookup(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         ids = np.asarray(ids, dtype=np.int64)
         hit_mask = self.lookup_mask(ids)
@@ -782,6 +791,14 @@ class ArrayLinkingAlignedCache:
 
     def lookup_mask(self, ids: np.ndarray) -> np.ndarray:
         return self.cache.access_batch(ids)
+
+    def peek_mask(self, ids: np.ndarray) -> np.ndarray:
+        """Side-effect-free residency probe (see `LinkingAlignedCache.peek_mask`):
+        one fancy-index over the bitmap, no stats/frequency mutation."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.zeros(0, dtype=bool)
+        return self.cache.where[ids] > 0
 
     def lookup(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         ids = np.asarray(ids, dtype=np.int64)

@@ -246,6 +246,23 @@ class OffloadEngine:
                 time.sleep(io.seconds)
         return miss_mask, io
 
+    def predict_read_seconds(self, union: np.ndarray) -> float:
+        """Modeled flash seconds serving `union` would cost RIGHT NOW, without
+        serving it: peek the cache for residency (no stat/frequency bumps),
+        then price the would-be miss read at the reader's current collapse
+        threshold on the calibrated UFSDevice. Pure — cache, adaptive
+        threshold, and history are untouched — so the server's SLO-aware
+        admission gate can cost a candidate step per free slot per layer
+        without perturbing the state it predicts."""
+        union = np.asarray(union, dtype=np.int64)
+        if union.size == 0:
+            return 0.0
+        resident = self.cache.peek_mask(union)
+        misses = union[~resident]
+        if misses.size == 0:
+            return 0.0
+        return self.reader.predict_seconds(misses)
+
     def _admit_and_record(self, n_activated: int, n_misses: int,
                           misses: np.ndarray, io: IOStats,
                           run_lengths: np.ndarray) -> TokenStats:

@@ -67,6 +67,9 @@ class TokenTiming:
     serial_seconds: float
     overlapped_seconds: float
     n_stages: int
+    # total modeled flash I/O across the token's stages; serial_seconds minus
+    # this is the token's compute share (the admission predictor's input)
+    io_seconds: float = 0.0
     # Measured counterpart (zero unless the caller ran the real prefetch
     # pipeline and passed wall/stage measurements): what actually happened on
     # this host, as opposed to the analytic schedule above.
@@ -164,7 +167,9 @@ class IOScheduler:
         serial = serial_latency(self._stages)
         over = overlapped_latency(self._stages) if self.overlap else serial
         timing = TokenTiming(serial_seconds=serial, overlapped_seconds=over,
-                             n_stages=len(self._stages))
+                             n_stages=len(self._stages),
+                             io_seconds=sum(s.io_seconds
+                                            for s in self._stages))
         if wall_seconds is not None:
             timing.measured_wall_seconds = float(wall_seconds)
             timing.measured_io_busy_seconds = sum(
@@ -175,6 +180,18 @@ class IOScheduler:
         self._stages = []
         self._measured = []
         return timing
+
+    def predicted_compute_seconds_per_token(self, window: int = 8) -> float:
+        """I/O-prediction hook for SLO-aware admission (serving/server.py):
+        the compute share of recent tokens — mean (serial − modeled io) over
+        the last `window` recorded tokens. The server adds this to the UFS
+        model's predicted extent-read seconds for a candidate batch to
+        estimate the next step's inter-token latency before admitting into a
+        freed slot. Returns 0.0 with no history (cold server: admit freely)."""
+        hist = self.history[-window:] if window > 0 else self.history
+        if not hist:
+            return 0.0
+        return sum(t.serial_seconds - t.io_seconds for t in hist) / len(hist)
 
     # -- reporting ----------------------------------------------------------
     def summary(self) -> dict:

@@ -323,3 +323,20 @@ class ManagedReader:
             self.detector.record(stats.bytes_read, stats.seconds)
         self.total.add(stats)
         return data, stats
+
+    def predict_seconds(self, logical_ids: np.ndarray) -> float:
+        """Modeled seconds a `read(logical_ids)` would cost RIGHT NOW, without
+        issuing it: plan extents at the current adaptive threshold, apply the
+        store's op/byte accounting, and price it on the calibrated UFSDevice.
+        Pure — no threshold update, no detector sample, no `total` accrual —
+        so SLO-aware admission (serving/server.py) can cost candidate steps
+        as often as it likes without steering the adaptation it predicts."""
+        logical_ids = np.asarray(logical_ids, dtype=np.int64)
+        if logical_ids.size == 0:
+            return 0.0
+        thr = self.threshold.threshold if (self.adaptive and self.detector.collapse_enabled) else 0
+        extents = self.store.plan_extents(logical_ids, collapse_threshold=thr)
+        n_read = sum(length for _, length in extents)
+        n_ops = len(extents) * self.store.reads_per_bundle
+        bytes_read = n_read * self.store.bundle_bytes * self.store.reads_per_bundle
+        return self.store.device.read_time(n_ops, bytes_read)

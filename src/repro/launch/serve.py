@@ -4,13 +4,17 @@ sparse FFN from flash bundles, with double-buffered I/O-compute overlap).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --requests 8 --prompt-len 32 --new-tokens 16 \
-      [--mode offload] [--slots 4] [--arrival-rate 2.0] [--stream] \
+      [--mode offload] [--slots 4] [--arrival-rate 2.0] [--burst 4] \
+      [--queue-limit 16] [--ttft-slo 2.0] [--itl-slo 0.25] [--stream] \
       [--no-overlap] [--no-placement] [--kv-quant]
 
 `--slots N` fixes the decode-slot pool (default: one slot per request — the
 one-shot batch). `--arrival-rate R` draws Poisson request arrivals at R req/s
-and admits them mid-flight as slots free up; `--stream` prints tokens as they
-are emitted.
+(grouped `--burst` at a time for bursty traffic) and admits them mid-flight
+as slots free up; `--stream` prints tokens as they are emitted. The overload
+knobs `--queue-limit / --ttft-slo / --itl-slo` arm bounded-queue backpressure
+and deadline retirement (finish_reason "rejected" / "timeout") — see the
+README "Load testing & SLOs" section.
 """
 import argparse
 import time
@@ -44,6 +48,27 @@ def main() -> None:
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson request arrivals per second; 0 = all "
                          "requests available at t=0")
+    ap.add_argument("--burst", type=int, default=1,
+                    help="arrival burst size: requests arrive in groups of "
+                         "this many sharing one Poisson arrival instant "
+                         "(inter-burst gap ~ Exp(burst/rate), so the mean "
+                         "rate is unchanged); 1 = plain Poisson")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="bound the admission queue: a full queue sheds "
+                         "lower-priority queued work or rejects the "
+                         "newcomer (finish_reason='rejected'); 0 = unbounded")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="time-to-first-token deadline in seconds (monotonic "
+                         "clock, submit -> first token); a queued request "
+                         "that blows it is retired with "
+                         "finish_reason='timeout'; 0 = none")
+    ap.add_argument("--itl-slo", type=float, default=0.0,
+                    help="inter-token latency deadline in seconds; an active "
+                         "request whose gap between consecutive tokens "
+                         "exceeds it is retired with finish_reason='timeout' "
+                         "(partial tokens kept); also the budget for the "
+                         "flash-I/O-aware admission gate in offload mode; "
+                         "0 = none")
     ap.add_argument("--stream", action="store_true",
                     help="print each request's tokens as they are emitted")
     ap.add_argument("--no-overlap", action="store_true",
@@ -117,8 +142,14 @@ def main() -> None:
                     max_new_tokens=args.new_tokens,
                     temperature=args.temperature)
             for i in range(args.requests)]
-    arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate, len(reqs)))
-                if args.arrival_rate > 0 else np.zeros(len(reqs)))
+    if args.arrival_rate > 0:
+        burst = max(args.burst, 1)
+        n_bursts = -(-len(reqs) // burst)        # ceil
+        burst_times = np.cumsum(
+            rng.exponential(burst / args.arrival_rate, n_bursts))
+        arrivals = np.repeat(burst_times, burst)[:len(reqs)]
+    else:
+        arrivals = np.zeros(len(reqs))
 
     on_token = None
     if args.stream:
@@ -129,7 +160,10 @@ def main() -> None:
         model, params, max_slots=args.slots or len(reqs),
         max_len=args.prompt_len + args.new_tokens + 8,
         mode=mode, offload=offload, scheduler=scheduler,
-        prefetch=args.prefetch, seed=args.seed)
+        prefetch=args.prefetch, seed=args.seed,
+        queue_limit=args.queue_limit or None,
+        ttft_slo_s=args.ttft_slo or None,
+        itl_slo_s=args.itl_slo or None)
     handles = []
     t0 = time.perf_counter()
     try:
@@ -164,6 +198,12 @@ def main() -> None:
     if n_err:
         logger.warning("  %d request(s) finished with "
                        "finish_reason='error'", n_err)
+    s = server.stats
+    if s.rejected or s.shed or s.timeouts:
+        logger.warning("overload: %d rejected, %d shed, %d deadline "
+                       "timeouts (peak queue depth %d, %d I/O-gate "
+                       "deferrals)", s.rejected, s.shed, s.timeouts,
+                       s.peak_queue_depth, s.io_deferrals)
     for r in results[:3]:
         logger.info("  req %d: prefill %.0fms decode %.0fms io %.0fms "
                     "finish=%s -> %s...",

@@ -70,6 +70,15 @@ class Request:
     # generation stops the step any of these tokens is sampled (the stop token
     # IS included in the output); honored in resident and offload decode alike
     stop_tokens: tuple = ()
+    # -- SLO surface (InferenceServer; ignored by the one-shot serve() path) --
+    # admission priority class: higher admits first, and a full queue sheds
+    # strictly-lower-priority queued work before rejecting a newcomer
+    priority: int = 0
+    # deadlines on the server's monotonic clock, None = server default/none:
+    # TTFT (submit -> first token) and max inter-token gap; a blown deadline
+    # retires the request with finish_reason="timeout", partial tokens kept
+    ttft_slo_s: Optional[float] = None
+    itl_slo_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -87,7 +96,15 @@ class Result:
     # the modeled double-buffered schedule (stage compute from the measured
     # token wall apportioned by FLOPs, stage io from the UFS model).
     overlapped_seconds: float = 0.0
-    finish_reason: str = "length"      # "length" | "stop" | "error"
+    # "length"  — max_new_tokens generated (the normal completion)
+    # "stop"    — a stop token was sampled (included in the output)
+    # "error"   — an exception retired this request (per-request isolation)
+    # "timeout" — an SLO deadline (TTFT or inter-token) expired; partial
+    #             tokens are preserved (InferenceServer only)
+    # "rejected"— backpressure: the admission queue was full at submit time,
+    #             or this queued request was shed for a higher-priority
+    #             arrival; no tokens were generated (InferenceServer only)
+    finish_reason: str = "length"
     # set iff finish_reason == "error": the exception that retired this
     # request (per-request isolation — co-batched requests keep decoding)
     error: Optional[BaseException] = None
@@ -822,6 +839,20 @@ class OffloadedFFNRuntime:
                                               for t in tokens)
         return out
 
+    def predict_step_io_seconds(self, unions) -> float:
+        """Modeled flash seconds one decode step serving `unions` (a per-layer
+        sequence of activated-neuron id arrays, one per layer engine) would
+        cost right now. Pure: delegates to each engine's
+        `predict_read_seconds` (cache peeked, not probed; adaptive thresholds
+        read, not updated). The InferenceServer's flash-I/O-aware admission
+        gate sums this with its compute estimate to decide whether admitting
+        another request would blow active inter-token deadlines."""
+        if len(unions) != len(self.engines):
+            raise ValueError(f"expected {len(self.engines)} per-layer unions, "
+                             f"got {len(unions)}")
+        return sum(e.predict_read_seconds(u)
+                   for e, u in zip(self.engines, unions))
+
     def reset_stats(self) -> None:
         for e in self.engines:
             e.reset_stats()
@@ -950,6 +981,10 @@ class ServingEngine:
         self.scheduler = scheduler or IOScheduler(overlap=True)
         self._decode = jax.jit(
             lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+        # shared across the per-serve() InferenceServers so admission prefill
+        # compiles once per prompt length, not once per serve() call
+        self._prefill = (None if model.cfg.is_encdec else jax.jit(
+            lambda p, toks, c: model.prefill(p, {"tokens": toks}, c)))
 
     def close(self) -> None:
         """Release the offload runtime's resources; closes the layer stores
@@ -977,7 +1012,8 @@ class ServingEngine:
             max_len=self.max_len, swa=self.swa, mode=self.mode,
             offload=self.offload, scheduler=self.scheduler, oracle=self.oracle,
             prefetch=self.prefetch, lookahead=self.lookahead, seed=seed,
-            decode_fn=self._decode if self.mode == "resident" else None)
+            decode_fn=self._decode if self.mode == "resident" else None,
+            prefill_fn=self._prefill)
         try:
             handles = [server.submit(r) for r in requests]
             server.drain()

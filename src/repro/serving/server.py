@@ -35,12 +35,42 @@ depend on which batch, group, or slot it landed in — serving a request alone
 and serving it inside any continuous batch produce identical output (greedy
 AND temperature sampling), which is what the admission-order identity tests
 assert.
+
+Overload robustness (the serving layer's failure mode at scale is overload,
+not bad reads — see ROADMAP open item 2):
+
+  * bounded admission queue with explicit backpressure — `queue_limit` caps
+    the number of QUEUED requests; a full queue sheds the worst
+    strictly-lower-priority queued request in favor of the newcomer, or
+    retires the newcomer itself with `finish_reason="rejected"`;
+  * priority + earliest-deadline-first admission order: free slots go to the
+    highest priority class first, earliest TTFT deadline within a class,
+    submission order as the tie-break;
+  * per-request SLOs on a monotonic clock (`Request.ttft_slo_s` /
+    `Request.itl_slo_s`, with server-wide defaults): a queued request whose
+    TTFT deadline passes, or an active request whose inter-token gap blows
+    its deadline, is retired with `finish_reason="timeout"` — partial tokens
+    preserved, slot freed immediately, per-uid io_seconds attribution still
+    conserved (the orphan re-billing below never drops attributed reads);
+  * flash-I/O-aware admission (offload mode): before admitting into a freed
+    slot, the server predicts the NEXT step's cost — per-layer mask unions of
+    the active batch (plus a frequency estimate for the candidate) priced on
+    the calibrated `UFSDevice` via `OffloadEngine.predict_read_seconds`, plus
+    the scheduler's recent compute-per-token — and leaves the candidate
+    QUEUED when that prediction would blow an active request's inter-token
+    deadline (`ServerStats.io_deferrals` counts these);
+  * a stall watchdog: `stall_limit` consecutive `step()` calls with work
+    pending but no progress (nothing admitted, emitted, or retired) raise
+    `ServerStalledError` instead of spinning forever in `drain()`;
+  * bounded memory: `finished_high_water` auto-releases the oldest delivered
+    results past the mark (`ServerStats.results_released` counts them;
+    caller-held handles stay valid).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import enum
+import math
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Union
 
@@ -81,7 +111,7 @@ class RequestHandle:
     request: Request
     state: RequestState = RequestState.QUEUED
     tokens: List[int] = dataclasses.field(default_factory=list)
-    # "length" | "stop" | "error" once FINISHED
+    # "length" | "stop" | "error" | "timeout" | "rejected" once FINISHED
     finish_reason: Optional[str] = None
     result: Optional[Result] = None
     error: Optional[BaseException] = None    # set iff finish_reason=="error"
@@ -91,6 +121,18 @@ class RequestHandle:
     decode_seconds: float = 0.0
     io_seconds: float = 0.0
     overlapped_seconds: float = 0.0
+    # lifecycle stamps on the server's MONOTONIC clock (`time.monotonic` by
+    # default) — deadline math and the load harness's TTFT/ITL numbers
+    # survive wall-clock adjustments. `token_times` stamps every emitted
+    # token (bounded by max_new_tokens), so inter-token gaps are exact.
+    queued_at: float = 0.0
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # resolved SLOs: request-level value if set, else the server default
+    ttft_slo: Optional[float] = None
+    itl_slo: Optional[float] = None
     _key: Any = None                         # fold_in(base_key, uid)
     _order: int = 0                          # submission order
 
@@ -101,6 +143,18 @@ class RequestHandle:
     @property
     def done(self) -> bool:
         return self.state is RequestState.FINISHED
+
+    @property
+    def ttft_deadline(self) -> Optional[float]:
+        """Monotonic instant this request's first token is due, or None."""
+        return None if self.ttft_slo is None else self.queued_at + self.ttft_slo
+
+
+def _deadline_or_inf(handle: RequestHandle) -> float:
+    """TTFT deadline for EDF ordering; no deadline sorts last (infinite
+    slack)."""
+    d = handle.ttft_deadline
+    return math.inf if d is None else d
 
 
 @dataclasses.dataclass
@@ -113,12 +167,28 @@ class ServerStats:
     tokens_emitted: int = 0
     admitted: int = 0
     slot_steps_active: int = 0        # Σ over decode steps of active slots
+    # -- overload-robustness counters ----------------------------------------
+    retired: int = 0                  # every retirement, any finish_reason
+    rejected: int = 0                 # newcomers bounced off a full queue
+    shed: int = 0                     # queued requests evicted for higher prio
+    timeouts: int = 0                 # TTFT or inter-token deadline blown
+    io_deferrals: int = 0             # admissions deferred by the I/O gate
+    results_released: int = 0         # finished handles auto-released past
+    #                                   the finished_high_water mark
+    peak_queue_depth: int = 0         # max QUEUED depth ever observed
 
     @property
     def occupancy(self) -> float:
         """Mean fraction of slots doing useful work per decode step."""
         denom = self.decode_steps * max(self.n_slots, 1)
         return self.slot_steps_active / denom if denom else 0.0
+
+
+class ServerStalledError(RuntimeError):
+    """`step()` made no progress — nothing admitted, emitted, or retired —
+    for `stall_limit` consecutive iterations while work was pending. Raised
+    instead of letting `drain()` spin forever; the message carries a queue /
+    slot snapshot so the hang is diagnosable from the exception alone."""
 
 
 class InferenceServer:
@@ -147,16 +217,38 @@ class InferenceServer:
                  scheduler: Optional[IOScheduler] = None,
                  oracle: bool = True, prefetch: bool = False,
                  lookahead: Union[str, List[PredictorParams], None] = None,
-                 seed: int = 0, decode_fn=None,
-                 pack_path: Optional[str] = None):
-        """`decode_fn` lets a long-lived caller (ServingEngine) share one
-        jitted resident decode across servers; by default the server jits its
-        own. `lookahead` follows ServingEngine: predictor params, None (use
+                 seed: int = 0, decode_fn=None, prefill_fn=None,
+                 pack_path: Optional[str] = None,
+                 queue_limit: Optional[int] = None,
+                 ttft_slo_s: Optional[float] = None,
+                 itl_slo_s: Optional[float] = None,
+                 io_admission: bool = True, io_headroom: float = 1.0,
+                 stall_limit: int = 256,
+                 finished_high_water: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        """`decode_fn` / `prefill_fn` let a long-lived caller (ServingEngine)
+        share one jitted resident decode / admission prefill across servers;
+        by default the server jits its own (prefill compiles once per prompt
+        length — eager prefill cost hundreds of ms per admission at small
+        geometries, which stalled co-batched requests' inter-token gaps).
+        `lookahead` follows ServingEngine: predictor params, None (use
         the runtime's trained lookahead), or "oracle" (zero speculation
         depth — the exactness fallback). `pack_path` loads the offload
         runtime from an on-disk NeuronPack artifact
         (`OffloadedFFNRuntime.from_pack`, geometry-validated against the
-        model config) instead of a caller-built runtime."""
+        model config) instead of a caller-built runtime.
+
+        Overload knobs: `queue_limit` bounds the admission queue (None =
+        unbounded, the legacy behavior); `ttft_slo_s` / `itl_slo_s` are
+        server-wide deadline defaults a request's own SLO fields override;
+        `io_admission` arms the flash-I/O-aware admission gate (offload mode,
+        inert unless some in-flight request has an inter-token SLO) with
+        `io_headroom` scaling the budget (predicted step seconds must stay
+        under headroom x the tightest active ITL deadline); `stall_limit`
+        no-progress iterations raise `ServerStalledError`;
+        `finished_high_water` bounds retained finished handles (oldest
+        auto-released past the mark); `clock` injects a monotonic clock for
+        deterministic deadline tests (default `time.monotonic`)."""
         if mode not in ("resident", "offload"):
             raise ValueError(f"unknown serving mode {mode!r}")
         cfg = model.cfg
@@ -178,6 +270,10 @@ class InferenceServer:
             raise ValueError(f"unknown lookahead mode {lookahead!r}")
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1 (or None = unbounded)")
+        if stall_limit < 1:
+            raise ValueError("stall_limit must be >= 1")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -192,11 +288,29 @@ class InferenceServer:
         self.lookahead = lookahead
         self.scheduler = scheduler or IOScheduler(overlap=True)
         self.stats = ServerStats(n_slots=max_slots)
+        self.queue_limit = queue_limit
+        self.default_ttft_slo = ttft_slo_s
+        self.default_itl_slo = itl_slo_s
+        self.io_admission = io_admission
+        self.io_headroom = io_headroom
+        self.stall_limit = stall_limit
+        self.finished_high_water = finished_high_water
+        self._clock = clock or time.monotonic
+        self._stall_steps = 0
         self._base_key = jax.random.PRNGKey(seed)
-        self._queue: "collections.deque[RequestHandle]" = collections.deque()
+        # jitted admission prefill (both modes; one compile per prompt length)
+        self._prefill_fn = prefill_fn or jax.jit(
+            lambda p, toks, c: model.prefill(p, {"tokens": toks}, c))
+        self._queue: List[RequestHandle] = []
         self._handles: Dict[int, RequestHandle] = {}   # queued + in-flight
         self._finished: List[RequestHandle] = []
         self._n_submitted = 0
+        # I/O-aware admission state (offload): last step's per-layer true
+        # masks + an EMA of per-column activation frequency, the candidate
+        # estimate for a not-yet-admitted request
+        self._last_masks: List[Optional[np.ndarray]] = (
+            [None] * offload.n_layers if mode == "offload" else [])
+        self._col_freq: List[Optional[np.ndarray]] = list(self._last_masks)
         # slot pool: per-slot handle / next-decode position / last token
         self._slot_handle: List[Optional[RequestHandle]] = [None] * max_slots
         self._slot_pos = np.zeros(max_slots, dtype=np.int32)
@@ -248,6 +362,14 @@ class InferenceServer:
         `max_new_tokens` must fit in `max_len` KV-cache positions (prompt
         tokens occupy [0, T); generated token i is decoded at position T+i-1,
         so the last decode writes position T + max_new_tokens - 2 < max_len).
+
+        Backpressure: with `queue_limit` set and the queue full, either the
+        worst STRICTLY-lower-priority queued request is shed in favor of this
+        one (`stats.shed`), or — no such victim — this request is retired
+        immediately with `finish_reason="rejected"` (`stats.rejected`). The
+        returned handle is FINISHED in that case (`handle.done`, empty
+        tokens, `result` populated); callers that must not drop work should
+        check `handle.finish_reason` and re-submit later.
         """
         T = len(request.prompt)
         if T < 1:
@@ -262,12 +384,51 @@ class InferenceServer:
         if request.uid in self._handles:
             raise ValueError(f"duplicate request uid {request.uid}")
         handle = RequestHandle(request=request, on_token=on_token,
+                               queued_at=self._clock(),
+                               ttft_slo=(request.ttft_slo_s
+                                         if request.ttft_slo_s is not None
+                                         else self.default_ttft_slo),
+                               itl_slo=(request.itl_slo_s
+                                        if request.itl_slo_s is not None
+                                        else self.default_itl_slo),
                                _key=request_key(self._base_key, request.uid),
                                _order=self._n_submitted)
         self._n_submitted += 1
         self._handles[request.uid] = handle
+        if (self.queue_limit is not None
+                and len(self._queue) >= self.queue_limit):
+            victim = self._shed_victim(request.priority)
+            if victim is None:
+                logger.warning("queue full (%d): rejecting request %d "
+                               "(priority %d)", len(self._queue),
+                               request.uid, request.priority)
+                self.stats.rejected += 1
+                self._retire(handle, "rejected")
+                return handle
+            logger.warning("queue full (%d): shedding queued request %d "
+                           "(priority %d) for request %d (priority %d)",
+                           len(self._queue), victim.uid,
+                           victim.request.priority, request.uid,
+                           request.priority)
+            self._queue.remove(victim)
+            self.stats.shed += 1
+            self._retire(victim, "rejected")
         self._queue.append(handle)
+        self.stats.peak_queue_depth = max(self.stats.peak_queue_depth,
+                                          len(self._queue))
         return handle
+
+    def _shed_victim(self, priority: int) -> Optional[RequestHandle]:
+        """The queued request to shed for a priority-`priority` arrival: the
+        lowest STRICTLY-lower priority class; within it, the latest TTFT
+        deadline (most slack; no deadline = infinite slack), newest
+        submission as the tie-break. None when nothing queued is strictly
+        lower priority — the arrival is rejected instead."""
+        cands = [h for h in self._queue if h.request.priority < priority]
+        if not cands:
+            return None
+        return min(cands, key=lambda h: (h.request.priority,
+                                         -_deadline_or_inf(h), -h._order))
 
     # -- introspection -------------------------------------------------------
     @property
@@ -310,10 +471,26 @@ class InferenceServer:
         — but the SERVER survives: queued and future submissions admit and
         decode normally. Per-request failures (sampling, a raising
         `on_token` callback, a failing prefill) are caught deeper down and
-        retire only the offending request."""
+        retire only the offending request.
+
+        SLO enforcement happens here, on the monotonic clock: blown
+        inter-token deadlines retire active requests (slot freed before
+        admission, so the slot is immediately reusable), blown TTFT
+        deadlines retire queued requests before they waste a prefill, and
+        admission itself runs in priority + earliest-deadline-first order,
+        gated (offload mode) by the predicted flash cost of the grown batch.
+        A `stall_limit` run of no-progress iterations with work pending
+        raises `ServerStalledError`."""
+        retired0, admitted0 = self.stats.retired, self.stats.admitted
         emitted = 0
+        now = self._clock()
+        self._expire_active(now)
+        self._expire_queued(now)
         while self._queue and None in self._slot_handle:
-            emitted += self._admit(self._queue.popleft())
+            cand = self._next_admission()
+            if cand is None:               # I/O-aware gate said "not yet"
+                break
+            emitted += self._admit(cand)
         if any(h is not None for h in self._slot_handle):
             try:
                 emitted += self._decode_iteration()
@@ -323,7 +500,114 @@ class InferenceServer:
                 for h in list(self._slot_handle):
                     if h is not None:
                         self._fail_request(h, e)
+        progress = (emitted + (self.stats.retired - retired0)
+                    + (self.stats.admitted - admitted0))
+        if progress == 0 and self.has_work:
+            self._stall_steps += 1
+            if self._stall_steps >= self.stall_limit:
+                states = [h.state.value if h is not None else "free"
+                          for h in self._slot_handle]
+                raise ServerStalledError(
+                    f"server made no progress for {self._stall_steps} "
+                    f"consecutive step() iterations: {len(self._queue)} "
+                    f"queued, {self.n_active} active, slots={states}, "
+                    f"io_deferrals={self.stats.io_deferrals}; a queued "
+                    f"request that can never admit (or an admission gate "
+                    f"that never opens) would spin drain() forever")
+        else:
+            self._stall_steps = 0
         return emitted
+
+    # -- SLO enforcement ------------------------------------------------------
+    def _expire_queued(self, now: float) -> None:
+        """Retire queued requests whose TTFT deadline already passed — they
+        could not possibly meet it, so don't waste a prefill on them."""
+        expired = [h for h in self._queue
+                   if h.ttft_deadline is not None and now > h.ttft_deadline]
+        for h in expired:
+            self._queue.remove(h)
+            self.stats.timeouts += 1
+            logger.warning("request %d blew its TTFT deadline by %.3fs while "
+                           "queued; retiring with finish_reason='timeout'",
+                           h.uid, now - h.ttft_deadline)
+            self._retire(h, "timeout")
+
+    def _expire_active(self, now: float) -> None:
+        """Retire active requests whose inter-token deadline has already
+        passed since their last emitted token (the between-steps complement
+        of the in-step gap check in `_emit`). Partial tokens are preserved;
+        the slot frees immediately for the admission pass that follows."""
+        for h in list(self._slot_handle):
+            if h is None or h.itl_slo is None or not h.token_times:
+                continue
+            gap = now - h.token_times[-1]
+            if gap > h.itl_slo:
+                self.stats.timeouts += 1
+                logger.warning("request %d blew its inter-token deadline "
+                               "(%.3fs > %.3fs SLO) with %d tokens; retiring "
+                               "with finish_reason='timeout'", h.uid, gap,
+                               h.itl_slo, len(h.tokens))
+                self._retire(h, "timeout")
+
+    def _next_admission(self) -> Optional[RequestHandle]:
+        """Pop the queued request to admit next — highest priority class
+        first, earliest TTFT deadline within a class, submission order as the
+        tie-break — unless the flash-I/O admission gate predicts the grown
+        batch would blow an in-flight inter-token deadline, in which case the
+        request stays QUEUED and None is returned (counted in
+        `stats.io_deferrals`)."""
+        if not self._queue:
+            return None
+        best = min(self._queue,
+                   key=lambda h: (-h.request.priority, _deadline_or_inf(h),
+                                  h._order))
+        if self._io_defers(best):
+            self.stats.io_deferrals += 1
+            return None
+        self._queue.remove(best)
+        return best
+
+    def _io_defers(self, candidate: RequestHandle) -> bool:
+        """Flash-I/O-aware admission gate: True when the UFS model predicts
+        the next decode step WITH `candidate` admitted would exceed the
+        tightest inter-token SLO among the active batch (+ the candidate),
+        scaled by `io_headroom`. Never defers an empty batch (the candidate
+        cannot blow anyone's deadline, and deferring would deadlock)."""
+        if not self.io_admission or self.mode != "offload":
+            return False
+        if not any(h is not None for h in self._slot_handle):
+            return False
+        slos = [h.itl_slo for h in self._slot_handle
+                if h is not None and h.itl_slo is not None]
+        if candidate.itl_slo is not None:
+            slos.append(candidate.itl_slo)
+        if not slos:
+            return False
+        predicted = self._predict_step_seconds()
+        if predicted is None:
+            return False
+        return predicted > self.io_headroom * min(slos)
+
+    def _predict_step_seconds(self) -> Optional[float]:
+        """Predicted seconds of the next decode step for the grown batch:
+        per-layer extent reads priced on the calibrated `UFSDevice`
+        (`OffloadEngine.predict_read_seconds` — cache peeked, thresholds
+        read, nothing mutated) over the union of the active rows' last true
+        masks plus a frequency-EMA estimate for the incoming request, plus
+        the scheduler's recent compute share per token. None until a first
+        decode step has recorded masks (cold server: admit freely)."""
+        active = self._active_mask()
+        unions: List[np.ndarray] = []
+        for layer, masks in enumerate(self._last_masks):
+            if masks is None:
+                return None
+            union = (masks & active[:, None]).any(axis=0)
+            freq = self._col_freq[layer]
+            if freq is not None:      # candidate estimate: typical-row mask
+                union = union | (freq >= 0.5)
+            unions.append(np.flatnonzero(union))
+        io_s = self.offload.predict_step_io_seconds(unions)
+        return io_s + self.scheduler.predicted_compute_seconds_per_token()
 
     def drain(self) -> List[Result]:
         """Step until every submitted request is finished."""
@@ -354,7 +638,7 @@ class InferenceServer:
                else RuntimeError(str(reason)))
         n = 0
         while self._queue:
-            self._fail_request(self._queue.popleft(), exc)
+            self._fail_request(self._queue.pop(0), exc)
             n += 1
         for h in list(self._slot_handle):
             if h is not None:
@@ -389,13 +673,13 @@ class InferenceServer:
         r = handle.request
         handle.state = RequestState.PREFILL
         handle.slot = slot
+        handle.admitted_at = self._clock()
         try:
             T = len(r.prompt)
             prompt = jnp.asarray(np.asarray(r.prompt, dtype=np.int32)[None])
             t0 = time.perf_counter()
             small = self.model.init_cache(1, self.max_len, swa=self.swa)
-            logits, small = self.model.prefill(self.params, {"tokens": prompt},
-                                               small)
+            logits, small = self._prefill_fn(self.params, prompt, small)
             row = np.asarray(logits[0, -1], dtype=np.float32)  # forces the sync
             handle.prefill_seconds = time.perf_counter() - t0
             self.stats.prefill_seconds += handle.prefill_seconds
@@ -431,7 +715,11 @@ class InferenceServer:
                 for big_g, small_g in zip(self._cache_groups, small_groups)]
 
     def _emit(self, handle: RequestHandle, tok: int) -> None:
+        now = self._clock()
         handle.tokens.append(tok)
+        handle.token_times.append(now)
+        if handle.first_token_at is None:
+            handle.first_token_at = now
         self.stats.tokens_emitted += 1
         if handle.on_token is not None:
             handle.on_token(handle.uid, tok)
@@ -439,6 +727,18 @@ class InferenceServer:
             self._retire(handle, "stop")
         elif len(handle.tokens) >= handle.request.max_new_tokens:
             self._retire(handle, "length")
+        elif (handle.itl_slo is not None and len(handle.token_times) >= 2
+              and now - handle.token_times[-2] > handle.itl_slo):
+            # the gap to the PREVIOUS token blew the inter-token deadline
+            # (completion reasons above take precedence); the late token is
+            # preserved — partial output, slot freed immediately
+            self.stats.timeouts += 1
+            logger.warning("request %d blew its inter-token deadline "
+                           "(%.3fs > %.3fs SLO) at token %d; retiring with "
+                           "finish_reason='timeout'", handle.uid,
+                           now - handle.token_times[-2], handle.itl_slo,
+                           len(handle.tokens))
+            self._retire(handle, "timeout")
 
     def _retire(self, handle: RequestHandle, reason: str,
                 error: Optional[BaseException] = None) -> None:
@@ -452,11 +752,21 @@ class InferenceServer:
             io_seconds=handle.io_seconds,
             overlapped_seconds=handle.overlapped_seconds,
             finish_reason=reason, error=error)
+        handle.finished_at = self._clock()
         if handle.slot is not None:                 # error-retired requests
             self._slot_handle[handle.slot] = None   # may never have held a
             handle.slot = None                      # slot; freed rows leave
         self._handles.pop(handle.uid, None)         # every future mask union
         self._finished.append(handle)
+        self.stats.retired += 1
+        hw = self.finished_high_water
+        if hw is not None and len(self._finished) > hw:
+            # bounded memory: auto-release the oldest delivered results past
+            # the high-water mark (caller-held handles stay valid; only the
+            # server's own references are dropped)
+            drop = len(self._finished) - hw
+            del self._finished[:drop]
+            self.stats.results_released += drop
 
     def _fail_request(self, handle: RequestHandle,
                       exc: BaseException) -> None:
@@ -538,7 +848,17 @@ class InferenceServer:
             assert self.offload.predictors is not None, \
                 "oracle=False needs runtime predictors"
             masks = np.asarray(predict_mask(self.offload.predictors[dense_idx], h2))
-        return masks & active[:, None]
+        masks = masks & active[:, None]
+        # feed the admission predictor: this layer's last true masks, plus an
+        # EMA of per-column activation frequency over the active rows (the
+        # candidate-row estimate for a not-yet-admitted request)
+        self._last_masks[dense_idx] = masks
+        if self.io_admission and active.any():
+            col = masks[active].mean(axis=0)
+            prev = self._col_freq[dense_idx]
+            self._col_freq[dense_idx] = (col if prev is None
+                                         else 0.8 * prev + 0.2 * col)
+        return masks
 
     def _decode_offload(self, active: np.ndarray):
         cfg = self.cfg

@@ -629,32 +629,25 @@ def test_failing_request_is_isolated_from_its_batch():
 
 def test_prefill_failure_isolated_to_one_request():
     model, params, reqs = _server_env()
-
-    class FlakyModel:
-        """Delegating proxy whose 2nd prefill (uid=1's admission) fails."""
-
-        def __init__(self, inner):
-            self._inner = inner
-            self._prefills = 0
-
-        def __getattr__(self, name):
-            return getattr(self._inner, name)
-
-        def prefill(self, *a, **kw):
-            self._prefills += 1
-            if self._prefills == 2:
-                raise RuntimeError("prefill OOM")
-            return self._inner.prefill(*a, **kw)
-
     with InferenceServer(model, params, max_slots=3, max_len=32, seed=0) as srv:
         handles = [srv.submit(r) for r in reqs]
         while srv.has_work:
             srv.step()
         clean = {h.uid: h.result.tokens for h in handles}
 
-    srv = InferenceServer(model, params, max_slots=3, max_len=32, seed=0)
-    srv.model = FlakyModel(model)
-    with srv:
+    # inject through the admission-prefill seam (the `prefill_fn` kwarg —
+    # admission runs a jitted prefill, so swapping `srv.model` post-hoc
+    # would not reach it): the 2nd prefill (uid=1's admission) fails
+    calls = {"n": 0}
+
+    def flaky_prefill(p, toks, c):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("prefill OOM")
+        return model.prefill(p, {"tokens": toks}, c)
+
+    with InferenceServer(model, params, max_slots=3, max_len=32, seed=0,
+                         prefill_fn=flaky_prefill) as srv:
         handles = [srv.submit(r) for r in reqs]
         while srv.has_work:
             srv.step()
