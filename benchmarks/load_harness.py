@@ -28,16 +28,27 @@ Tail latency is gated MACHINE-NORMALIZED: p99 inter-token latency in units
 of the same run's calibrated mean decode step (`p99_itl_steps`), compared
 against the committed BENCH_slo.json within `--itl-tolerance`.
 
+A fourth arm (`paged_pressure`) drives the paged-KV server against a pool
+far smaller than the admitted requests' worst case (overcommit admission):
+page-availability deferrals and policy preemption must both engage, every
+completed request must stay token-identical to an unloaded contiguous run
+(preempted partials exact prefixes), and the page allocator must conserve
+every page across all retirement paths (free list full after drain +
+registry clear, allocated == freed).
+
 Writes ``BENCH_slo.json``::
 
   {"meta": {...geometry, counts, slo derivation...},
    "modes": {"resident": {"calibration": {...}, "arms": {"under": {...},
              "at": {...}, "over": {...}, "burst": {...}}},
              "offload": {...}},
+   "paged_pressure": {...counters, identity + conservation audits...},
    "gates": {"under_capacity_clean", "overload_bounded_queue",
              "overload_sheds", "overload_timeouts", "counters_conserved",
              "io_attribution_conserved", "tokens_identical",
-             "p99_itl_within_tolerance"}}
+             "p99_itl_within_tolerance", "paged_pressure_engages",
+             "paged_counters_conserved", "paged_tokens_prefix_identical",
+             "paged_pages_conserved"}}
 
 Gates (``--check``, run in CI): every entry of `gates` must be true —
 (a) zero sheds/rejects/timeouts/errors at the under-capacity rate,
@@ -292,6 +303,91 @@ def _arm(w: dict, mode: str, runtime, fns, cal: dict, ref: dict,
     return out
 
 
+PAGED_PAGE_SIZE = 4
+PAGED_NUM_PAGES = 12        # 48 KV positions: MAX_SLOTS x prompt pages fill
+                            # the pool at admission, so every decode-time
+                            # growth runs the arena dry (overcommit pressure)
+
+
+def _paged_pressure(w: dict, fns) -> dict:
+    """KV-memory-bounded arm: the paged server under genuine page pressure.
+
+    The pool is sized so MAX_SLOTS admitted prompts fill it exactly
+    (overcommit admits on prompt pages, not the committed worst case), which
+    forces the decode-time growth path dry on every request: admissions
+    defer on page availability, and when no page can be found the server
+    preempts by policy. The audits mirror the SLO arms: every submission
+    retires exactly once, completed requests are token-identical to an
+    unloaded contiguous run (grouping-invariant sampling + the paged
+    kernel's bitwise identity make it the ground truth), preempted partial
+    outputs are exact prefixes, and after drain + registry clear the
+    allocator conserves every page (free list full, allocated == freed)."""
+    from repro.serving.server import InferenceServer as _IS
+
+    n = 24 if w["meta"]["quick"] else 60
+    reqs = w["pool"][:n]
+    server = _make_server(w, "resident", None, fns)
+    try:
+        handles = [server.submit(r) for r in reqs]
+        server.drain()
+        ref = {h.uid: list(h.tokens) for h in handles}
+    finally:
+        server.close()
+
+    server = _IS(w["model"], w["params"], max_slots=MAX_SLOTS,
+                 max_len=PROMPT_LEN + NEW_TOKENS + 4, prefill_fn=fns[1],
+                 seed=0, page_size=PAGED_PAGE_SIZE,
+                 num_pages=PAGED_NUM_PAGES, page_overcommit=True)
+    t0 = time.monotonic()
+    try:
+        handles = [server.submit(r) for r in reqs]
+        server.drain()
+        wall = time.monotonic() - t0
+        psum = server.page_summary()
+        pool = server._pool
+        pool.clear_prefix_cache()
+        audit_clean = True
+        try:
+            pool.check()
+        except AssertionError:
+            audit_clean = False
+        pages_conserved = (audit_clean and pool.n_free == PAGED_NUM_PAGES
+                           and pool.stats.pages_allocated
+                           == pool.stats.pages_freed)
+    finally:
+        server.close()
+
+    reasons: dict = {}
+    identical = True
+    for h in handles:
+        reasons[h.finish_reason] = reasons.get(h.finish_reason, 0) + 1
+        expect = ref[h.uid]
+        if h.finish_reason in ("length", "stop"):
+            identical &= h.tokens == expect
+        else:                      # preempted/timeout partials: exact prefix
+            identical &= h.tokens == expect[:len(h.tokens)]
+    st = server.stats
+    conserved = (len(handles) == n and all(h.done for h in handles)
+                 and sum(reasons.values()) == n
+                 and reasons.get("preempted", 0) == st.preemptions)
+    return dict(
+        n=n, wall_s=round(wall, 2),
+        page_size=PAGED_PAGE_SIZE, num_pages=PAGED_NUM_PAGES,
+        kv_positions=PAGED_PAGE_SIZE * PAGED_NUM_PAGES,
+        reasons=reasons,
+        preemptions=psum["preemptions"],
+        page_deferrals=psum["page_deferrals"],
+        cow_copies=psum["cow_copies"],
+        peak_page_occupancy=psum["peak_page_occupancy"],
+        pages_allocated=psum["pages_allocated"],
+        pages_freed_total=pool.stats.pages_freed,
+        tokens_per_s=round(st.tokens_emitted / max(wall, 1e-9), 1),
+        counters_conserved=bool(conserved),
+        tokens_prefix_identical=bool(identical),
+        pages_conserved=bool(pages_conserved),
+    )
+
+
 def run(quick: bool, itl_tolerance: float = 3.0,
         committed: dict | None = None) -> dict:
     w = _workload(quick)
@@ -316,6 +412,7 @@ def run(quick: bool, itl_tolerance: float = 3.0,
                 "calibration": {k: v for k, v in cal.items()
                                 if not k.startswith("_")},
                 "arms": arms}
+        report["paged_pressure"] = _paged_pressure(w, fns)
     finally:
         runtime.close()
 
@@ -355,6 +452,14 @@ def run(quick: bool, itl_tolerance: float = 3.0,
             for arm in report["modes"]["offload"]["arms"].values()),
         "tokens_identical": every(lambda m, a, arm: arm["tokens_identical"]),
         "p99_itl_within_tolerance": bool(tail_ok),
+        "paged_pressure_engages": (
+            report["paged_pressure"]["preemptions"] > 0
+            and report["paged_pressure"]["page_deferrals"] > 0),
+        "paged_counters_conserved":
+            report["paged_pressure"]["counters_conserved"],
+        "paged_tokens_prefix_identical":
+            report["paged_pressure"]["tokens_prefix_identical"],
+        "paged_pages_conserved": report["paged_pressure"]["pages_conserved"],
     }
     return report
 
@@ -376,6 +481,13 @@ def load_harness():
                 f"{a['length'] + a['stop']} ok, {a['rejected']} rejected "
                 f"({a['shed']} shed), {a['timeout']} timeout, peak queue "
                 f"{a['peak_queue_depth']}, identical={a['tokens_identical']}"))
+    pp = r["paged_pressure"]
+    rows.append((
+        "load_harness/paged_pressure_tokens_per_s", pp["tokens_per_s"],
+        f"{pp['num_pages']}x{pp['page_size']}-token pool (overcommit): "
+        f"{pp['preemptions']} preempted, {pp['page_deferrals']} page "
+        f"deferrals, identical={pp['tokens_prefix_identical']}, "
+        f"pages conserved={pp['pages_conserved']}"))
     return rows
 
 

@@ -24,7 +24,10 @@ writes ``BENCH_prefetch.json``:
 
 A second arm benchmarks the slot-based continuous-batching server against the
 historic length-grouped lockstep path on a mixed-prompt-length Poisson-arrival
-workload and writes ``BENCH_serving.json``.
+workload and writes ``BENCH_serving.json``. A third (`paged_kv`) compares the
+paged KV cache against contiguous preallocated slots at the SAME KV memory
+budget — concurrent-request headroom, shared-prefix CoW token identity, and
+page-pressure preemption with full reclamation (see `bench_paged_kv`).
 
 ``--check`` is the CI gate: non-zero exit unless pipelined decode tokens/s
 >= serial within tolerance AND the oracle arm is token-identical to serial
@@ -32,7 +35,11 @@ AND the auto-resolved FFN kernel (the fused segment path on searched
 layouts) is token-identical to the forced-bundles arm AND the fresh
 engine-loop overlap efficiency >= --efficiency-tolerance x the committed
 BENCH_prefetch.json value (read before the fresh run overwrites it) AND
-continuous-batching tokens/s >= --serving-tolerance x length-grouped.
+continuous-batching tokens/s >= --serving-tolerance x length-grouped AND
+the paged-KV arm holds: concurrency >= --paged-concurrency-floor x the
+contiguous baseline at equal budget with byte-identical tokens, zero
+clean-path CoW/preemption counters, CoW-diverged fork identity, and
+pressure-arm preemption with exact partial prefixes + page conservation.
 """
 from __future__ import annotations
 
@@ -533,6 +540,187 @@ def bench_continuous_batching(quick: bool = False, seed: int = 0) -> dict:
     }
 
 
+def bench_paged_kv(quick: bool = False, seed: int = 0) -> dict:
+    """Paged KV cache vs preallocated contiguous slots at the SAME KV memory
+    budget (the `paged_kv` section of BENCH_serving.json).
+
+    Three sub-arms, all on one reduced attention-only decoder stack:
+
+      * concurrency — the headline claim: a contiguous server must
+        preallocate `max_len` KV positions per slot, so a 192-position
+        budget buys `192 // max_len` slots; the paged server spends the
+        same 192 positions as on-demand pages and admits every request
+        whose COMMITTED worst case (prompt + max_new, page-rounded) still
+        fits, so short requests pack the arena. Peak concurrent requests
+        are counted per decode step on both servers; tokens must be
+        byte-identical per uid (grouping-invariant sampling makes the
+        contiguous run the ground truth), and the clean-path counters
+        (CoW copies, preemptions) must be exactly zero — no hidden cost
+        when nothing is shared and nothing is evicted.
+      * shared_prefix — CoW correctness under live-prompt forking: a
+        request whose prompt extends a LIVE request's full prompt shares
+        its pages (including the partial last page) and diverges via
+        copy-on-write; both must finish token-identical to a contiguous
+        run of the same requests.
+      * pressure — an overcommitted pool too small for every admitted
+        request's worst case: preemption must engage, preempted partial
+        outputs must be exact prefixes of the unconstrained run, and after
+        drain + registry clear the free list must hold every page
+        (allocated == freed: no leaks on any retirement path).
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import Request
+    from repro.serving.server import InferenceServer
+
+    page_size, num_pages = 8, 24          # 192 KV positions per sublayer
+    max_len = 96                          # contiguous per-slot preallocation
+    base_slots = (num_pages * page_size) // max_len        # same budget: 2
+    prompt_len, new_tokens = 10, 6        # 16 positions -> 2 pages committed
+    n_req = 12                            # 12 x 2 pages == the whole arena
+    cfg = get_config("opt-350m", reduced=True, d_model=64, d_ff=256,
+                     n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, 128, prompt_len).astype(np.int32),
+                    max_new_tokens=new_tokens) for i in range(n_req)]
+
+    def drive(server, requests, staged=()):
+        """Submit-all + step to drain, tracking peak concurrent actives.
+        `staged` entries (after_step, request) submit mid-flight."""
+        handles = [server.submit(r) for r in requests]
+        pending = list(staged)
+        peak = steps = 0
+        while server.has_work or pending:
+            if not server.has_work and pending:
+                _, r = pending.pop(0)
+                handles.append(server.submit(r))
+                continue
+            server.step()
+            steps += 1
+            peak = max(peak, int(server._active_mask().sum()))
+            while pending and pending[0][0] <= steps:
+                handles.append(server.submit(pending.pop(0)[1]))
+        return handles, peak
+
+    # -- concurrency at fixed budget ----------------------------------------
+    base = InferenceServer(model, params, max_slots=base_slots,
+                           max_len=max_len, seed=seed)
+    base_handles, base_peak = drive(base, reqs)
+    ref = {h.uid: list(h.tokens) for h in base_handles}
+    bst = base.stats
+    paged = InferenceServer(model, params, max_slots=n_req + 4,
+                            max_len=max_len, seed=seed,
+                            page_size=page_size, num_pages=num_pages)
+    paged_handles, paged_peak = drive(paged, reqs)
+    pst = paged.stats
+    psum = paged.page_summary()
+    concurrency = {
+        "baseline_peak_concurrent": base_peak,
+        "paged_peak_concurrent": paged_peak,
+        "concurrency_ratio": round(paged_peak / max(base_peak, 1), 2),
+        "tokens_identical": all(list(h.tokens) == ref[h.uid]
+                                for h in paged_handles),
+        "all_finished_length": all(h.finish_reason == "length"
+                                   for h in paged_handles),
+        "cow_copies": psum["cow_copies"],
+        "preemptions": psum["preemptions"],
+        "page_deferrals": psum["page_deferrals"],
+        "peak_page_occupancy": psum["peak_page_occupancy"],
+        "baseline_tokens_per_s": round(
+            bst.tokens_emitted / max(bst.decode_seconds, 1e-9), 1),
+        "paged_tokens_per_s": round(
+            pst.tokens_emitted / max(pst.decode_seconds, 1e-9), 1),
+        "baseline_decode_steps": bst.decode_steps,
+        "paged_decode_steps": pst.decode_steps,
+    }
+
+    # -- shared-prefix CoW divergence ---------------------------------------
+    base_prompt = rng.integers(0, 128, 12).astype(np.int32)   # partial page 2
+    fork_reqs = [
+        Request(uid=100, prompt=base_prompt, max_new_tokens=new_tokens),
+        Request(uid=101,
+                prompt=np.concatenate([base_prompt, [7]]).astype(np.int32),
+                max_new_tokens=new_tokens),
+        Request(uid=102,
+                prompt=np.concatenate([base_prompt, [9, 3]]).astype(np.int32),
+                max_new_tokens=new_tokens),
+    ]
+    ref_srv = InferenceServer(model, params, max_slots=len(fork_reqs),
+                              max_len=max_len, seed=seed)
+    fork_ref, _ = drive(ref_srv, fork_reqs)
+    fork_expect = {h.uid: list(h.tokens) for h in fork_ref}
+    fork_srv = InferenceServer(model, params, max_slots=len(fork_reqs),
+                               max_len=max_len, seed=seed,
+                               page_size=page_size, num_pages=num_pages)
+    # submit the parent alone, decode two steps, then fork the children off
+    # its live pages — the partial last page diverges via copy-on-write
+    fork_handles, _ = drive(fork_srv, fork_reqs[:1],
+                            staged=[(2, fork_reqs[1]), (2, fork_reqs[2])])
+    fsum = fork_srv.page_summary()
+    shared_prefix = {
+        "tokens_identical": all(list(h.tokens) == fork_expect[h.uid]
+                                for h in fork_handles),
+        "cow_copies": fsum["cow_copies"],
+        "pages_shared": fsum["pages_shared"],
+        "prefix_hits": fsum["prefix_hits"],
+        "preemptions": fsum["preemptions"],
+    }
+
+    # -- page pressure: overcommit + preemption + reclamation ---------------
+    p_size, p_pages = 4, 10
+    press_reqs = [Request(uid=200 + i,
+                          prompt=rng.integers(0, 128, 6).astype(np.int32),
+                          max_new_tokens=10) for i in range(6)]
+    ref_srv = InferenceServer(model, params, max_slots=len(press_reqs),
+                              max_len=max_len, seed=seed)
+    press_ref, _ = drive(ref_srv, press_reqs)
+    press_expect = {h.uid: list(h.tokens) for h in press_ref}
+    press_srv = InferenceServer(model, params, max_slots=4, max_len=max_len,
+                                seed=seed, page_size=p_size, num_pages=p_pages,
+                                page_overcommit=True)
+    press_handles, _ = drive(press_srv, press_reqs)
+    pool = press_srv._pool
+    pool.clear_prefix_cache()
+    pool.check()
+    ssum = press_srv.page_summary()
+    finished = [h for h in press_handles if h.finish_reason == "length"]
+    preempted = [h for h in press_handles if h.finish_reason == "preempted"]
+    pressure = {
+        "preemptions": ssum["preemptions"],
+        "page_deferrals": ssum["page_deferrals"],
+        "n_finished": len(finished),
+        "n_preempted": len(preempted),
+        "finished_identical": all(list(h.tokens) == press_expect[h.uid]
+                                  for h in finished),
+        "partial_prefix_identical": all(
+            list(h.tokens) == press_expect[h.uid][:len(h.tokens)]
+            for h in preempted),
+        "pages_reclaimed": pool.n_free == p_pages,
+        "alloc_freed_balanced":
+            pool.stats.pages_allocated == pool.stats.pages_freed,
+    }
+
+    return {
+        "budget": {
+            "kv_positions": num_pages * page_size,
+            "page_size": page_size, "num_pages": num_pages,
+            "contiguous_slots": base_slots, "contiguous_max_len": max_len,
+        },
+        "concurrency": concurrency,
+        "shared_prefix": shared_prefix,
+        "pressure": pressure,
+        "meta": {
+            "arch": "opt-350m (reduced, d_model=64)",
+            "prompt_len": prompt_len, "new_tokens": new_tokens,
+            "n_requests": n_req, "quick": quick,
+        },
+    }
+
+
 def bench_placement_search(quick: bool = False) -> dict:
     """Offline placement search: reference per-edge greedy loop vs the
     batched array-native implementation (bit-identical placements asserted
@@ -581,6 +769,12 @@ def main() -> None:
                          "hot path against glue creep; loose because shared "
                          "CI runners overlap far worse than the committed "
                          "dedicated-host run)")
+    ap.add_argument("--paged-concurrency-floor", type=float, default=4.0,
+                    help="--check fails unless the paged-KV server sustains "
+                         "at least this many times the concurrent requests "
+                         "of the contiguous-slot baseline at the same KV "
+                         "memory budget (deterministic: counts slots, not "
+                         "wall-clock)")
     ap.add_argument("--out", default="BENCH_prefetch.json")
     ap.add_argument("--serving-out", default="BENCH_serving.json")
     args = ap.parse_args()
@@ -603,6 +797,7 @@ def main() -> None:
     }
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     serving = dict(bench_continuous_batching(quick=args.quick),
+                   paged_kv=bench_paged_kv(quick=args.quick),
                    quick=args.quick)
     pathlib.Path(args.serving_out).write_text(
         json.dumps(serving, indent=2) + "\n")
@@ -642,6 +837,37 @@ def main() -> None:
         print(f"serving gate OK: continuous {cont:.1f} tok/s vs "
               f"length-grouped {grp:.1f} ({serving['speedup']}x on the "
               f"mixed-length Poisson workload)")
+        pk = serving["paged_kv"]
+        conc, sp, pr = pk["concurrency"], pk["shared_prefix"], pk["pressure"]
+        if conc["concurrency_ratio"] < args.paged_concurrency_floor:
+            sys.exit(f"paged KV concurrency below floor: "
+                     f"{conc['concurrency_ratio']}x < "
+                     f"{args.paged_concurrency_floor}x at a "
+                     f"{pk['budget']['kv_positions']}-position budget")
+        if not (conc["tokens_identical"] and conc["all_finished_length"]):
+            sys.exit("paged KV decode is not token-identical to the "
+                     "contiguous-slot baseline")
+        if conc["cow_copies"] != 0 or conc["preemptions"] != 0:
+            sys.exit(f"paged clean path is not free: "
+                     f"{conc['cow_copies']} CoW copies, "
+                     f"{conc['preemptions']} preemptions on the "
+                     f"unshared workload")
+        if not sp["tokens_identical"] or sp["cow_copies"] < 1:
+            sys.exit(f"shared-prefix CoW arm failed: identical="
+                     f"{sp['tokens_identical']}, cow={sp['cow_copies']} "
+                     f"(fork must diverge via copy-on-write)")
+        if not (pr["preemptions"] > 0 and pr["finished_identical"]
+                and pr["partial_prefix_identical"]
+                and pr["pages_reclaimed"] and pr["alloc_freed_balanced"]):
+            sys.exit(f"paged pressure arm failed: {pr}")
+        print(f"paged KV gate OK: {conc['paged_peak_concurrent']} vs "
+              f"{conc['baseline_peak_concurrent']} concurrent requests "
+              f"({conc['concurrency_ratio']}x) at the same "
+              f"{pk['budget']['kv_positions']}-position KV budget, "
+              f"token-identical, clean counters zero; CoW fork identical "
+              f"({sp['cow_copies']} copies); pressure arm preempted "
+              f"{pr['n_preempted']} with exact partial prefixes and full "
+              f"page reclamation")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import numpy as np
 from repro.kernels.coact import coact_accumulate_kernel
 from repro.kernels.sparse_ffn import (_apply_act, sparse_ffn_segments_fused_kernel,
                                       sparse_ffn_segments_kernel)
-from repro.kernels.swa_decode import swa_decode_kernel
+from repro.kernels.swa_decode import paged_decode_kernel, swa_decode_kernel
 
 
 def _on_cpu() -> bool:
@@ -192,3 +192,77 @@ def swa_decode_attention(
         jnp.reshape(cur_pos.astype(jnp.int32), (1,)),
         window=window, block_w=block_w, interpret=interpret)
     return out.reshape(B, H, hd)
+
+
+@jax.jit
+def _paged_decode_xla(q, k_pages, v_pages, page_tables, cur_pos,
+                      k_scale, v_scale):
+    """Pure-XLA gather twin of `paged_decode_kernel` for the CPU serving path.
+
+    Gathers each row's pages into the contiguous [B, S, KV, hd] layout and
+    runs the exact `attend_full_cache` math (`gqa_attend` with positional
+    causal masking) — same masking, same contraction order — so its output is
+    bitwise identical to contiguous-cache decode attention; the Pallas
+    kernel's online-softmax accumulation is equivalent to tolerance and is
+    exercised through the interpret-mode oracle in tests."""
+    from repro.models.layers import gqa_attend
+    B, H, hd = q.shape
+    P = k_pages.shape[1]
+    S = page_tables.shape[1] * P
+    gather = lambda a: a[page_tables].reshape((B, S) + a.shape[2:])
+    k, v = gather(k_pages), gather(v_pages)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * gather(k_scale)[..., None].astype(jnp.float32)
+        v = v.astype(jnp.float32) * gather(v_scale)[..., None].astype(jnp.float32)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out = gqa_attend(q[:, None].astype(k.dtype), k, v,
+                     cur_pos.astype(jnp.int32)[:, None], k_pos, causal=True)
+    return out[:, 0].reshape(B, H, hd).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode_pallas(q, k_pages, v_pages, page_tables, cur_pos,
+                         k_scale, v_scale, *, interpret: bool):
+    B, H, hd = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    kt = jnp.swapaxes(k_pages, 1, 2)       # [num_pages+1, KV, page_size, hd]
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    ks = None if k_scale is None else jnp.swapaxes(k_scale, 1, 2).astype(jnp.float32)
+    vs = None if v_scale is None else jnp.swapaxes(v_scale, 1, 2).astype(jnp.float32)
+    out = paged_decode_kernel(
+        qg.astype(jnp.float32) if k_scale is not None else qg,
+        kt, vt, page_tables.astype(jnp.int32), cur_pos.astype(jnp.int32),
+        ks, vs, interpret=interpret)
+    return out.reshape(B, H, hd)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,              # [B, H, hd] query for ONE new token
+    k_pages: jnp.ndarray,        # [num_pages + 1, page_size, KV, hd] arena
+    v_pages: jnp.ndarray,        #   (the trailing page is the null page)
+    page_tables: jnp.ndarray,    # [B, max_pages] int32
+    cur_pos: jnp.ndarray,        # [B] int32 current (query) position per row
+    k_scale: Optional[jnp.ndarray] = None,  # [num_pages + 1, page_size, KV]
+    v_scale: Optional[jnp.ndarray] = None,  # (int8 arenas only)
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Paged-attention decode over a page arena; returns [B, H, hd] fp32.
+
+    interpret=None routes CPU to the fused-XLA gather twin (bitwise identical
+    to `attend_full_cache` on the equivalent contiguous layout; the Pallas
+    interpreter is far too slow for the decode hot loop) and elsewhere to the
+    Pallas kernel; interpret=True forces the in-kernel oracle (tests). On a
+    real TPU the page_size should be a multiple of the dtype's sublane tile
+    (8 for fp32, 32 for int8) so each page is a legal block."""
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    if interpret is None:
+        if _on_cpu():
+            return _paged_decode_xla(q, k_pages, v_pages, page_tables,
+                                     cur_pos, k_scale, v_scale)
+        interpret = False
+    return _paged_decode_pallas(q, k_pages, v_pages, page_tables, cur_pos,
+                                k_scale, v_scale, interpret=interpret)

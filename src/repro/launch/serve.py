@@ -6,7 +6,8 @@ sparse FFN from flash bundles, with double-buffered I/O-compute overlap).
       --requests 8 --prompt-len 32 --new-tokens 16 \
       [--mode offload] [--slots 4] [--arrival-rate 2.0] [--burst 4] \
       [--queue-limit 16] [--ttft-slo 2.0] [--itl-slo 0.25] [--stream] \
-      [--no-overlap] [--no-placement] [--kv-quant]
+      [--no-overlap] [--no-placement] [--kv-quant] \
+      [--page-size 16 --num-pages 256 [--page-overcommit]]
 
 `--slots N` fixes the decode-slot pool (default: one slot per request — the
 one-shot batch). `--arrival-rate R` draws Poisson request arrivals at R req/s
@@ -90,9 +91,26 @@ def main() -> None:
                          "pack's per-bundle CRC32 table (format v2); a "
                          "detected corrupt read is re-read, not served")
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (requires "
+                         "--num-pages; 0 = contiguous per-slot caches). All "
+                         "KV memory lives in one shared page arena; requests "
+                         "map only the pages they fill, matched prompt "
+                         "prefixes share pages copy-on-write, and admission "
+                         "is gated by free pages instead of slot count")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged KV cache: total pages in the pool "
+                         "(KV budget = num_pages * page_size positions)")
+    ap.add_argument("--page-overcommit", action="store_true",
+                    help="gate admission on the immediate prompt need only "
+                         "(more concurrency; page pressure may preempt the "
+                         "lowest-priority request, finish_reason='preempted') "
+                         "instead of the strict worst-case reservation")
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if bool(args.page_size) != bool(args.num_pages):
+        raise SystemExit("pass both --page-size and --num-pages, or neither")
     mode = "offload" if args.offload else args.mode
     if args.pack is not None:
         if mode != "offload":
@@ -163,7 +181,10 @@ def main() -> None:
         prefetch=args.prefetch, seed=args.seed,
         queue_limit=args.queue_limit or None,
         ttft_slo_s=args.ttft_slo or None,
-        itl_slo_s=args.itl_slo or None)
+        itl_slo_s=args.itl_slo or None,
+        page_size=args.page_size or None,
+        num_pages=args.num_pages or None,
+        page_overcommit=args.page_overcommit)
     handles = []
     t0 = time.perf_counter()
     try:
@@ -209,6 +230,21 @@ def main() -> None:
                     "finish=%s -> %s...",
                     r.uid, r.prefill_seconds * 1e3, r.decode_seconds * 1e3,
                     r.io_seconds * 1e3, r.finish_reason, r.tokens[:6])
+
+    pg = server.page_summary()
+    if pg is not None:
+        logger.info("paged KV: %d pages x %d tokens (%d KV positions, "
+                    "quant=%s), peak occupancy %d pages; %d allocated / %d "
+                    "freed over the run", pg["num_pages"], pg["page_size"],
+                    pg["kv_positions"], pg["quantized"],
+                    pg["peak_page_occupancy"], pg["pages_allocated"],
+                    pg["pages_freed"])
+        logger.info("  prefix sharing: %d hits, %d pages shared, %d CoW "
+                    "copies, %d registry entries live (%d evicted); "
+                    "pressure: %d page deferrals, %d preemptions",
+                    pg["prefix_hits"], pg["pages_shared"], pg["cow_copies"],
+                    pg["registry_entries"], pg["prefix_evictions"],
+                    pg["page_deferrals"], pg["preemptions"])
 
     if mode == "offload":
         s = offload.io_summary()

@@ -32,6 +32,38 @@ class SWACache(NamedTuple):
     pos: jnp.ndarray
 
 
+class PagedKVCache(NamedTuple):
+    """Paged arena (vLLM-style): physical page p, offset o holds one KV row.
+
+    There is no batch axis — requests own disjoint sets of pages through
+    per-request page tables (`serving/paging.py`), so one arena serves every
+    slot. The LAST physical page (index num_pages) is the reserved null page:
+    page-table entries of inactive slots / unallocated logical pages point at
+    it, so garbage decode writes land somewhere harmless instead of clobbering
+    a live page."""
+    k: jnp.ndarray   # [num_pages + 1, page_size, KV, hd]
+    v: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+class PagedQuantKVCache(NamedTuple):
+    """int8 paged arena with per-page-row scales (the `QuantKVCache` layout
+    re-cut along page boundaries): quantisation is per (page, offset, head),
+    identical math to `quant_kv_write_rows`, so paged int8 decode is
+    bit-identical to the contiguous int8 path."""
+    k: jnp.ndarray        # int8 [num_pages + 1, page_size, KV, hd]
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # [num_pages + 1, page_size, KV]
+    v_scale: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
 def init_kv_cache(batch: int, max_len: int, cfg: ModelConfig, dtype=None) -> KVCache:
     dtype = dtype or cfg.dtype()
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
@@ -52,6 +84,24 @@ def init_quant_kv_cache(batch: int, max_len: int, cfg: ModelConfig,
                         scale_dtype=jnp.bfloat16) -> QuantKVCache:
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
     return QuantKVCache(
+        k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+        k_scale=jnp.zeros(shape[:3], scale_dtype),
+        v_scale=jnp.zeros(shape[:3], scale_dtype),
+    )
+
+
+def init_paged_kv_cache(num_pages: int, page_size: int, cfg: ModelConfig,
+                        dtype=None) -> PagedKVCache:
+    """Arena with `num_pages` allocatable pages + the trailing null page."""
+    dtype = dtype or cfg.dtype()
+    shape = (num_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def init_paged_quant_kv_cache(num_pages: int, page_size: int, cfg: ModelConfig,
+                              scale_dtype=jnp.bfloat16) -> PagedQuantKVCache:
+    shape = (num_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return PagedQuantKVCache(
         k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
         k_scale=jnp.zeros(shape[:3], scale_dtype),
         v_scale=jnp.zeros(shape[:3], scale_dtype),
@@ -169,3 +219,87 @@ def attend_swa_cache(q: jnp.ndarray, cache: SWACache, q_pos: jnp.ndarray,
     valid = cache.pos >= 0
     return gqa_attend(q, cache.k, cache.v, q_pos, cache.pos,
                       k_valid=valid, causal=True, window=window)
+
+
+# -- paged writes / attention --------------------------------------------------
+
+def _paged_targets(positions: jnp.ndarray, page_tables: jnp.ndarray,
+                   page_size: int):
+    """(physical page, offset) write target per batch row for a one-token
+    decode write at `positions[b]`. Inactive rows' page tables point every
+    logical page at the null page, so their (garbage) writes collide there
+    harmlessly instead of hitting a live page."""
+    pos = positions.astype(jnp.int32)
+    rows = jnp.arange(page_tables.shape[0], dtype=jnp.int32)
+    phys = page_tables[rows, pos // page_size]
+    return phys, pos % page_size
+
+
+def paged_kv_write_rows(cache: PagedKVCache, k_new: jnp.ndarray,
+                        v_new: jnp.ndarray, positions: jnp.ndarray,
+                        page_tables: jnp.ndarray) -> PagedKVCache:
+    """Page-scatter decode write: [B, 1, KV, hd] at positions[b], routed
+    through the per-request page tables [B, max_pages]. The paged twin of
+    `kv_write_rows` (T == 1: continuous-batching decode writes one row per
+    slot per step; prompt pages are block-copied by `PagePool.write_prompt`)."""
+    assert k_new.shape[1] == 1, "paged decode writes one token per step"
+    phys, off = _paged_targets(positions, page_tables, cache.page_size)
+    return PagedKVCache(
+        k=cache.k.at[phys, off].set(k_new[:, 0].astype(cache.k.dtype)),
+        v=cache.v.at[phys, off].set(v_new[:, 0].astype(cache.v.dtype)),
+    )
+
+
+def paged_quant_kv_write_rows(cache: PagedQuantKVCache, k_new: jnp.ndarray,
+                              v_new: jnp.ndarray, positions: jnp.ndarray,
+                              page_tables: jnp.ndarray) -> PagedQuantKVCache:
+    """Paged twin of `quant_kv_write_rows`: same per-row symmetric int8
+    quantisation, scattered to (page, offset) instead of (row, slot)."""
+    assert k_new.shape[1] == 1, "paged decode writes one token per step"
+    kq, ks = _quantize(k_new)
+    vq, vs = _quantize(v_new)
+    phys, off = _paged_targets(positions, page_tables, cache.page_size)
+    return PagedQuantKVCache(
+        k=cache.k.at[phys, off].set(kq[:, 0]),
+        v=cache.v.at[phys, off].set(vq[:, 0]),
+        k_scale=cache.k_scale.at[phys, off].set(
+            ks[:, 0].astype(cache.k_scale.dtype)),
+        v_scale=cache.v_scale.at[phys, off].set(
+            vs[:, 0].astype(cache.v_scale.dtype)),
+    )
+
+
+def paged_gather_kv(cache, page_tables: jnp.ndarray):
+    """Gather each row's pages into a contiguous [B, S, KV, hd] view, where
+    S = max_pages * page_size and slot s holds position s — the same layout
+    `attend_full_cache` sees, so identical attention math applies. Gathered
+    rows past a request's current position hold whatever the page last held
+    (null-page trash for unallocated logical pages); causal masking hides
+    them exactly as it hides stale contiguous-cache slots."""
+    B = page_tables.shape[0]
+    P = cache.page_size
+    gather = lambda a: a[page_tables].reshape((B, page_tables.shape[1] * P)
+                                              + a.shape[2:])
+    if isinstance(cache, PagedQuantKVCache):
+        return (gather(cache.k), gather(cache.v),
+                gather(cache.k_scale), gather(cache.v_scale))
+    return gather(cache.k), gather(cache.v)
+
+
+def attend_paged_cache(q: jnp.ndarray, cache, q_pos: jnp.ndarray,
+                       page_tables: jnp.ndarray) -> jnp.ndarray:
+    """Paged twin of `attend_full_cache`: gather pages, then the identical
+    causal GQA math (same masking, same einsum contraction order), so a paged
+    layout reproduces the contiguous cache bitwise. Accepts PagedKVCache or
+    PagedQuantKVCache (dequant applied post-gather, pre-attention, exactly as
+    the contiguous quant path does)."""
+    B = q.shape[0]
+    S = page_tables.shape[1] * cache.page_size
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if isinstance(cache, PagedQuantKVCache):
+        k, v, ks, vs = paged_gather_kv(cache, page_tables)
+        k = k.astype(q.dtype) * ks[..., None].astype(q.dtype)
+        v = v.astype(q.dtype) * vs[..., None].astype(q.dtype)
+        return gqa_attend(q, k, v, q_pos, k_pos, causal=True)
+    k, v = paged_gather_kv(cache, page_tables)
+    return gqa_attend(q, k, v, q_pos, k_pos, causal=True)

@@ -180,6 +180,16 @@ class Model:
                                              swa=swa, dtype=dtype)
         return transformer.init_stack_cache(cfg, batch, max_len, swa=swa, dtype=dtype)
 
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         dtype=None) -> Any:
+        """Paged KV arena (decoder-only, attention-only stacks; see
+        `transformer.init_paged_stack_cache` for the layout and the
+        ValueError surface)."""
+        if self.cfg.is_encdec:
+            raise ValueError("paged KV cache covers decoder-only stacks")
+        return transformer.init_paged_stack_cache(self.cfg, num_pages,
+                                                  page_size, dtype=dtype)
+
     def prefill(self, params: Params, batch: Dict[str, jnp.ndarray], cache: Any,
                 window: int = 0) -> Tuple[jnp.ndarray, Any]:
         cfg = self.cfg
@@ -201,18 +211,25 @@ class Model:
         return logits, cache
 
     def decode_step(self, params: Params, tokens: jnp.ndarray, position: jnp.ndarray,
-                    cache: Any, window: int = 0) -> Tuple[jnp.ndarray, Any]:
+                    cache: Any, window: int = 0,
+                    page_tables: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, Any]:
         """tokens: [B, 1]; position: scalar int32 shared by the batch, or a
         [B] int32 vector of per-slot positions (continuous-batching decode,
-        decoder-only stacks only — the encdec path takes the shared scalar)."""
+        decoder-only stacks only — the encdec path takes the shared scalar).
+        `page_tables` [B, max_pages] routes a paged cache pytree (from
+        `init_paged_cache`) through per-request page tables."""
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens, cfg)
         if cfg.is_encdec:
+            if page_tables is not None:
+                raise ValueError("paged KV cache covers decoder-only stacks")
             h, cache = encdec.decoder_decode_step(params["decoder"], x, position,
                                                   cache, cfg, window=window)
         else:
             h, cache = transformer.stack_decode_step(params["stack"], x, position,
-                                                     cache, cfg, window=window)
+                                                     cache, cfg, window=window,
+                                                     page_tables=page_tables)
             h = apply_norm(params["final_norm"], h, cfg)
         logits = unembed(params["embed"], h, cfg)
         return logits, cache

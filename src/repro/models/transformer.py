@@ -16,12 +16,16 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_lib
 from repro.models import ssm
-from repro.models.kvcache import (KVCache, QuantKVCache, SWACache,
-                                  attend_full_cache, attend_swa_cache,
-                                  init_kv_cache, init_quant_kv_cache,
-                                  init_swa_cache, kv_write, kv_write_rows,
-                                  quant_kv_write, quant_kv_write_rows,
-                                  swa_write)
+from repro.models.kvcache import (KVCache, PagedKVCache, PagedQuantKVCache,
+                                  QuantKVCache, SWACache, attend_full_cache,
+                                  attend_paged_cache, attend_swa_cache,
+                                  init_kv_cache, init_paged_kv_cache,
+                                  init_paged_quant_kv_cache,
+                                  init_quant_kv_cache, init_swa_cache,
+                                  kv_write, kv_write_rows,
+                                  paged_kv_write_rows,
+                                  paged_quant_kv_write_rows, quant_kv_write,
+                                  quant_kv_write_rows, swa_write)
 from repro.models.layers import (apply_norm, attention_forward, ffn_forward,
                                  init_attention, init_ffn, init_ffn_predictor,
                                  init_norm, rope, sparse_ffn_decode)
@@ -185,6 +189,51 @@ def init_stack_cache(
     return cache
 
 
+def init_paged_stack_cache(
+    cfg: ModelConfig,
+    num_pages: int,
+    page_size: int,
+    dtype=None,
+) -> Params:
+    """Paged cache pytree: per attention sublayer, a page arena stacked
+    [G, num_pages + 1, page_size, KV, hd] (the trailing null page absorbs
+    inactive-slot writes). One set of `num_pages` logical pages serves every
+    layer — a page table entry indexes all G x P arenas at once, vLLM-style —
+    so allocator accounting stays per-request, not per-layer.
+
+    Raises ValueError for stacks the paged layout cannot represent (SSM
+    sublayers keep per-slot recurrent state, not positional KV) — no silent
+    fallback to a contiguous cache."""
+    if num_pages < 1 or page_size < 1:
+        raise ValueError(f"paged cache needs num_pages >= 1 and page_size >= 1, "
+                         f"got num_pages={num_pages} page_size={page_size}")
+    kinds = cfg.layer_kinds()
+    if any(k != "attn" for k in kinds):
+        raise ValueError(
+            f"paged KV cache covers attention-only stacks; config "
+            f"{cfg.arch_id!r} has layer kinds {sorted(set(kinds))} (SSM "
+            f"sublayers carry per-slot recurrent state, which pages cannot "
+            f"represent)")
+    P = stack_period(cfg)
+    G = cfg.n_layers // P
+    dtype = dtype or cfg.dtype()
+
+    def stacked(make_one):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (G,) + a.shape).copy(), one)
+
+    cache: Params = {}
+    for j in range(P):
+        if cfg.kv_quant:
+            cache[f"sub_{j}"] = stacked(
+                lambda: init_paged_quant_kv_cache(num_pages, page_size, cfg))
+        else:
+            cache[f"sub_{j}"] = stacked(
+                lambda: init_paged_kv_cache(num_pages, page_size, cfg, dtype))
+    return cache
+
+
 # -- prefill ----------------------------------------------------------------------
 
 def _attn_seq_with_cache(sp, normed, positions, cfg, cache, window):
@@ -275,13 +324,18 @@ def _decode_positions(position: jnp.ndarray, B: int) -> jnp.ndarray:
 
 def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
                   position: jnp.ndarray, cfg: ModelConfig, kind: str,
-                  window: int) -> Tuple[jnp.ndarray, Any]:
+                  window: int,
+                  page_tables: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Any]:
     """One sublayer's mixer for a single decode token: (mix [B,1,d], new cache).
 
     Shared by the jit'd scan path (stack_decode_step) and the host-driven
     layerwise path (stack_decode_step_layerwise) so both run identical math.
     `position` is a shared scalar or a per-slot [B] vector; the full-cache
-    writes pick the matching (slice vs per-row scatter) variant.
+    writes pick the matching (slice vs per-row scatter) variant. Paged caches
+    additionally route the write/attend through `page_tables` [B, max_pages]
+    (per-slot positions required — the paged layout exists for the
+    continuous-batching server).
     """
     per_row = jnp.asarray(position).ndim == 1
     normed = apply_norm(sp["norm1"], h, cfg)
@@ -290,7 +344,18 @@ def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
         q, k, v = _project_qkv(sp["mixer"], normed, normed, cfg)
         q = rope(q, pos_arr, cfg.rope_theta)
         k = rope(k, pos_arr, cfg.rope_theta)
-        if isinstance(cj, SWACache):
+        if isinstance(cj, (PagedKVCache, PagedQuantKVCache)):
+            if page_tables is None:
+                raise ValueError("paged KV cache decode needs page_tables")
+            if not per_row:
+                raise ValueError("paged KV cache decode needs per-slot [B] "
+                                 "positions (continuous batching)")
+            if isinstance(cj, PagedQuantKVCache):
+                cj = paged_quant_kv_write_rows(cj, k, v, position, page_tables)
+            else:
+                cj = paged_kv_write_rows(cj, k, v, position, page_tables)
+            mix = attend_paged_cache(q, cj, pos_arr, page_tables)
+        elif isinstance(cj, SWACache):
             cj = swa_write(cj, k, v, pos_arr)
             mix = attend_swa_cache(q, cj, pos_arr, window or cfg.sliding_window)
         elif isinstance(cj, QuantKVCache):
@@ -318,6 +383,7 @@ def stack_decode_step(
     cache: Params,
     cfg: ModelConfig,
     window: int = 0,
+    page_tables: Optional[jnp.ndarray] = None,  # [B, max_pages] (paged caches)
 ) -> Tuple[jnp.ndarray, Params]:
     P = stack_period(cfg)
     kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
@@ -332,7 +398,8 @@ def stack_decode_step(
             sp = group_params[f"sub_{j}"]
             cj = group_cache[f"sub_{j}"]
             kind, ffn = kinds[j], ffns[j]
-            mix, cj = _mixer_decode(sp, cj, h, pos_arr, position, cfg, kind, window)
+            mix, cj = _mixer_decode(sp, cj, h, pos_arr, position, cfg, kind,
+                                    window, page_tables=page_tables)
             h = h + mix
             if ffn != "none":
                 normed2 = apply_norm(sp["norm2"], h, cfg)
@@ -375,6 +442,7 @@ def stack_decode_step_layerwise(
     cfg: ModelConfig,
     window: int = 0,
     ffn_override=None,         # (dense_layer_idx, normed2 [B,1,d]) -> y [B,1,d]
+    page_tables: Optional[jnp.ndarray] = None,  # [B, max_pages] (paged caches)
 ) -> Tuple[jnp.ndarray, List[Params]]:
     """Python-loop decode step over unstacked layer groups.
 
@@ -385,6 +453,8 @@ def stack_decode_step_layerwise(
     `dense_layer_idx` counts dense FFN sublayers in (group, sublayer) order —
     the same order `stack_forward(capture_activations=True)` stacks
     `ffn_pre_act`, so calibration traces and serving agree on layer ids.
+    `page_tables` routes attention sublayers through a paged arena exactly as
+    in `stack_decode_step` — the one page table serves every layer group.
     """
     P = stack_period(cfg)
     kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
@@ -399,7 +469,8 @@ def stack_decode_step_layerwise(
             sp = group_params[f"sub_{j}"]
             cj = group_cache[f"sub_{j}"]
             kind, ffn = kinds[j], ffns[j]
-            mix, cj = _mixer_decode(sp, cj, h, pos_arr, position, cfg, kind, window)
+            mix, cj = _mixer_decode(sp, cj, h, pos_arr, position, cfg, kind,
+                                    window, page_tables=page_tables)
             h = h + mix
             if ffn != "none":
                 normed2 = apply_norm(sp["norm2"], h, cfg)

@@ -1,0 +1,502 @@
+"""Paged KV cache: page pool, page tables, and copy-on-write prefix sharing.
+
+The `InferenceServer` used to preallocate one full-`max_len` KV region per
+decode slot, so concurrency was bounded by WORST-CASE sequence length: a slot
+serving a 20-token request still pinned `max_len` positions of KV in DRAM —
+exactly the waste vLLM-style PagedAttention eliminates, and the scarce-DRAM
+premise of the paper makes it the dominant waste on device. This module owns
+all KV memory instead:
+
+  * `PagePool` holds the arena — per attention sublayer, physical pages of
+    `page_size` KV rows stacked `[G, num_pages + 1, page_size, KV, hd]`
+    (float or the int8 `QuantKVCache` layout with per-page-row scales; the
+    trailing null page absorbs inactive-slot garbage writes). ONE set of
+    logical pages serves every layer: a page-table entry indexes all layers'
+    arenas at once, so allocator accounting is per request, not per layer.
+  * a free-list allocator with refcounted pages: `num_pages` pages, LIFO
+    free list (deterministic), refcount per page; a page returns to the free
+    list exactly when its last reference drops.
+  * per-request `PageTable`s grow ONE page at a time during decode
+    (`prepare_append`), and every retirement path releases through one choke
+    point (`release`) — length/stop/timeout/error/rejected/preempted/abort
+    all reclaim deterministically.
+  * prefix sharing, hash-matched at admission (`plan_admit`/`admit`):
+      - the PREFIX REGISTRY maps page-aligned prompt-prefix byte strings to
+        the full pages holding their KV. Registered pages are immutable by
+        construction (appends never land in a full page), so registry hits
+        share without ever copying; entries hold their own refcounts and are
+        evicted FIFO under page pressure (`prefix_evictions`).
+      - LIVE-PROMPT FORKING: a new prompt extending (or equal to) a live
+        request's full prompt maps the live request's pages — including a
+        partially-filled final page — until divergence. A write into a page
+        with refcount > 1 triggers copy-on-write (`cow_copies`): the writer
+        allocates a fresh page, copies, and drops its shared reference, so
+        the other sharers (and the registry) keep the original bytes.
+    Identity is byte-exact, not probabilistic: match keys are the raw prompt
+    bytes, so hash collisions cannot alias different prompts.
+  * admission accounting: `plan_admit` prices a candidate's worst-case page
+    need (prompt pages + decode growth + pending CoW, minus shared-forever
+    full pages); `can_admit` gates on free + registry-evictable pages minus
+    the outstanding commitments of active tables. In the default strict mode
+    an admitted request can therefore ALWAYS grow to completion — the pool
+    never runs dry mid-decode and preemption stays at exactly zero. With
+    `overcommit=True` only the immediate prompt need is gated, admitting more
+    concurrency at the cost of possible page-pressure preemption upstream
+    (the server's `_grow_page_tables` hook retires the lowest-priority
+    request when `prepare_append` finds the pool dry).
+
+Everything here is host-side numpy/python bookkeeping; the only jnp work is
+page block copies (prompt writes, CoW) against the arenas, which the decode
+step then indexes through `[B, max_pages]` page-table arrays
+(`models/kvcache.py` paged writes + `kernels/ops.paged_decode_attention`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.kvcache import PagedKVCache, PagedQuantKVCache
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class PagePoolStats:
+    """Lifetime counters (mirrored into `ServerStats` by the server)."""
+    pages_allocated: int = 0       # every successful page allocation
+    pages_freed: int = 0           # refcount reached zero, page back on the list
+    pages_shared: int = 0          # pages mapped shared at admission (prefix hits)
+    prefix_hits: int = 0           # admissions that matched a shared prefix
+    cow_copies: int = 0            # copy-on-write page copies (divergence)
+    prefix_evictions: int = 0      # registry entries dropped under pressure
+    peak_page_occupancy: int = 0   # max pages simultaneously referenced
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """Priced admission for one candidate prompt (nothing allocated yet)."""
+    shared_len: int         # matched prefix length in tokens (0 = no match)
+    n_shared: int           # pages mapped shared (incl. a partial final page)
+    shared_full: int        # full shared pages — never written again, ever
+    new_now: int            # pages allocated during admission itself
+    budget: int             # worst-case lifetime allocations for this request
+    extra_parent: int       # +1 when forking a live partial page (parent may CoW)
+    parent: Optional["PageTable"] = None   # live fork source, if any
+    shared_pages: Tuple[int, ...] = ()
+
+    @property
+    def worst_case(self) -> int:
+        return self.budget + self.extra_parent
+
+
+class PageTable:
+    """One request's logical-to-physical page mapping."""
+    __slots__ = ("uid", "pages", "length", "prompt_len", "budget",
+                 "allocated", "prompt_key", "released")
+
+    def __init__(self, uid: int, prompt_len: int, budget: int,
+                 prompt_key: bytes):
+        self.uid = uid
+        self.pages: List[int] = []
+        self.length = 0            # KV rows written (prompt + generated)
+        self.prompt_len = prompt_len
+        self.budget = budget       # worst-case allocations (commit accounting)
+        self.allocated = 0         # allocations so far (<= budget, strict mode)
+        self.prompt_key = prompt_key
+        self.released = False
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages)
+
+
+class PagePool:
+    """Owner of all paged KV memory: arenas + allocator + prefix sharing.
+
+    `layout="stacked"` keeps the arena pytree `{sub_j: [G, ...]}` for the
+    jitted resident decode scan; `layout="groups"` keeps a list of G
+    per-group pytrees for the host-driven layerwise (offload) decode. Arena
+    mutation (prompt writes, CoW copies) handles either.
+
+    Construction raises `ValueError` — never silently degrades — for layouts
+    pages cannot represent: non-attention sublayers (SSM state is per-slot,
+    not positional) and sliding-window caches are rejected by
+    `init_paged_stack_cache` / the server; the int8 `QuantKVCache` layout is
+    fully supported (per-page-row scales ride in the arena pytree).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
+                 max_len: int, layout: str = "stacked",
+                 overcommit: bool = False, dtype=None):
+        if layout not in ("stacked", "groups"):
+            raise ValueError(f"unknown pool layout {layout!r}")
+        if max_len < 1:
+            raise ValueError("max_len must be >= 1")
+        # init_paged_stack_cache validates num_pages/page_size/layer kinds and
+        # picks the float vs int8 arena from cfg.kv_quant
+        cache = transformer.init_paged_stack_cache(cfg, num_pages, page_size,
+                                                   dtype=dtype)
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.null_page = num_pages           # arena row reserved for garbage
+        self.max_len = max_len
+        self.max_pages_per_seq = cdiv(max_len, page_size)
+        self.layout = layout
+        self.overcommit = overcommit
+        self.quant = bool(cfg.kv_quant)
+        if layout == "stacked":
+            self.cache = cache
+            self.cache_groups = None
+        else:
+            self.cache = None
+            self.cache_groups = transformer.unstack_groups(cache, cfg)
+        # -- allocator state --------------------------------------------------
+        self._refc = np.zeros(num_pages, dtype=np.int64)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))  # pop() -> 0
+        # -- prefix sharing ---------------------------------------------------
+        self._registry: "OrderedDict[bytes, Tuple[int, Tuple[int, ...]]]" = \
+            OrderedDict()
+        self._registry_refc = np.zeros(num_pages, dtype=np.int64)
+        self._live_prompts: Dict[bytes, PageTable] = {}
+        self._active: List[PageTable] = []
+        self.stats = PagePoolStats()
+
+    # -- allocator ------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def n_evictable(self) -> int:
+        """Pages held ONLY by the prefix registry — freeable on demand."""
+        return int(np.sum((self._refc > 0)
+                          & (self._refc == self._registry_refc)))
+
+    def _alloc_page(self) -> Optional[int]:
+        """Pop a free page, evicting registry prefixes FIFO if the list is
+        dry. None means genuinely out of memory (caller preempts/defers)."""
+        while not self._free and self._registry:
+            self._evict_one_prefix()
+        if not self._free:
+            return None
+        p = self._free.pop()
+        assert self._refc[p] == 0, f"page {p} on free list with refc>0"
+        self._refc[p] = 1
+        self.stats.pages_allocated += 1
+        self.stats.peak_page_occupancy = max(self.stats.peak_page_occupancy,
+                                             self.n_live)
+        return p
+
+    def _incref(self, p: int) -> None:
+        assert self._refc[p] > 0, f"incref on free page {p}"
+        self._refc[p] += 1
+
+    def _decref(self, p: int) -> None:
+        assert self._refc[p] > 0, f"decref on free page {p}"
+        self._refc[p] -= 1
+        if self._refc[p] == 0:
+            self._free.append(p)
+            self.stats.pages_freed += 1
+
+    def check(self) -> None:
+        """Allocator invariants (the property tests drive this after every
+        operation): refcounts conserve, the free list is duplicate-free and
+        disjoint from live pages, registry refs never exceed total refs."""
+        free = self._free
+        assert len(set(free)) == len(free), "duplicate pages on the free list"
+        assert all(self._refc[p] == 0 for p in free), \
+            "live page on the free list"
+        n_live = int(np.sum(self._refc > 0))
+        assert n_live + len(free) == self.num_pages, \
+            f"page conservation violated: {n_live} live + {len(free)} free " \
+            f"!= {self.num_pages}"
+        assert np.all(self._registry_refc <= self._refc), \
+            "registry holds refs on pages it does not reference"
+        assert np.all(self._refc >= 0)
+
+    # -- admission ------------------------------------------------------------
+    def _match_registry(self, prompt: np.ndarray) -> Tuple[int, Tuple[int, ...]]:
+        """Longest registered page-aligned prefix of `prompt` (exact bytes)."""
+        T = len(prompt)
+        P = self.page_size
+        for L in range((T // P) * P, 0, -P):
+            hit = self._registry.get(prompt[:L].tobytes())
+            if hit is not None:
+                return hit
+        return 0, ()
+
+    def _match_live(self, prompt: np.ndarray) -> Tuple[int, Optional[PageTable]]:
+        """Longest live request whose FULL prompt is a byte-prefix of
+        `prompt` (the copy-on-write fork source)."""
+        T = len(prompt)
+        best_len, best = 0, None
+        for key, table in self._live_prompts.items():
+            L = table.prompt_len
+            if L <= best_len or L > T or table.length < L or table.released:
+                continue
+            if prompt[:L].tobytes() == key:
+                best_len, best = L, table
+        return best_len, best
+
+    def plan_admit(self, prompt: np.ndarray, max_new_tokens: int) -> AdmitPlan:
+        """Price an admission without touching allocator state."""
+        prompt = np.asarray(prompt, dtype=np.int32)
+        T = len(prompt)
+        P = self.page_size
+        L_reg, reg_pages = self._match_registry(prompt)
+        L_live, parent = self._match_live(prompt)
+        if L_live > L_reg:
+            L, shared = L_live, tuple(parent.pages[:cdiv(L_live, P)])
+        else:
+            L, shared, parent = L_reg, reg_pages, None
+        partial = L % P != 0
+        n_shared = len(shared)
+        shared_full = L // P
+        total_prompt_pages = cdiv(T, P)
+        # a shared partial page is CoW-replaced the moment this request writes
+        # into it: immediately if the prompt extends past L, else on the first
+        # decode append
+        new_now = total_prompt_pages - n_shared + (1 if partial and T > L else 0)
+        budget = cdiv(T + max_new_tokens, P) - shared_full
+        return AdmitPlan(shared_len=L, n_shared=n_shared,
+                         shared_full=shared_full, new_now=new_now,
+                         budget=budget, extra_parent=1 if partial else 0,
+                         parent=parent, shared_pages=shared)
+
+    def committed_outstanding(self) -> int:
+        """Pages the pool has promised active tables but not yet handed out."""
+        return sum(max(t.budget - t.allocated, 0) for t in self._active
+                   if not t.released)
+
+    def can_admit(self, plan: AdmitPlan) -> bool:
+        """Strict mode reserves the candidate's worst case against everyone
+        else's outstanding commitments (admitted => can always finish);
+        overcommit gates only the immediate prompt need."""
+        available = self.n_free + self.n_evictable()
+        if self.overcommit:
+            return plan.new_now <= available
+        return plan.worst_case <= available - self.committed_outstanding()
+
+    def admit(self, prompt: np.ndarray, max_new_tokens: int, uid: int
+              ) -> Tuple[Optional[PageTable], AdmitPlan]:
+        """Build a page table for `prompt`: map the matched shared prefix,
+        CoW-replace a shared partial page the prompt extends past, allocate
+        the rest. Returns (None, plan) only when the pool is dry mid-admission
+        (possible in overcommit mode); every partial allocation is rolled
+        back, so a failed admit leaves no residue."""
+        prompt = np.asarray(prompt, dtype=np.int32)
+        T = len(prompt)
+        P = self.page_size
+        plan = self.plan_admit(prompt, max_new_tokens)
+        table = PageTable(uid=uid, prompt_len=T, budget=plan.budget,
+                          prompt_key=prompt.tobytes())
+        for p in plan.shared_pages:
+            self._incref(p)
+            table.pages.append(p)
+        if plan.shared_len > 0:
+            self.stats.prefix_hits += 1
+            self.stats.pages_shared += plan.n_shared
+        if plan.parent is not None and plan.extra_parent:
+            plan.parent.budget += plan.extra_parent
+        partial_idx = plan.shared_len // P if plan.shared_len % P else -1
+        if partial_idx >= 0 and T > plan.shared_len:
+            # the prompt extends into the shared partial page: diverge NOW
+            if not self._cow(table, partial_idx):
+                self._rollback(table)
+                return None, plan
+        for _ in range(len(table.pages), cdiv(T, P)):
+            p = self._alloc_page()
+            if p is None:
+                self._rollback(table)
+                return None, plan
+            table.pages.append(p)
+            table.allocated += 1
+        table.length = T
+        self._active.append(table)
+        self._live_prompts.setdefault(table.prompt_key, table)
+        return table, plan
+
+    def _rollback(self, table: PageTable) -> None:
+        for p in table.pages:
+            self._decref(p)
+        table.pages.clear()
+
+    # -- arena mutation --------------------------------------------------------
+    def _map_arenas(self, fn) -> None:
+        """Apply `fn(arena_namedtuple) -> arena_namedtuple` to every paged
+        leaf group in whichever layout the pool holds."""
+        leaf_types = (PagedKVCache, PagedQuantKVCache)
+        if self.layout == "stacked":
+            self.cache = {sub: fn(arena) for sub, arena in self.cache.items()
+                          if isinstance(arena, leaf_types)}
+        else:
+            self.cache_groups = [
+                {sub: fn(arena) for sub, arena in group.items()
+                 if isinstance(arena, leaf_types)}
+                for group in self.cache_groups]
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Copy one physical page across every layer's arena (CoW)."""
+        if self.layout == "stacked":
+            cp = lambda a: type(a)(*[leaf.at[:, dst].set(leaf[:, src])
+                                     for leaf in a])
+        else:
+            cp = lambda a: type(a)(*[leaf.at[dst].set(leaf[src])
+                                     for leaf in a])
+        self._map_arenas(cp)
+
+    def _cow(self, table: PageTable, page_idx: int) -> bool:
+        """Replace table.pages[page_idx] with a private copy (the page is
+        shared — refcount > 1). Sharers and the registry keep the original."""
+        src = table.pages[page_idx]
+        dst = self._alloc_page()
+        if dst is None:
+            return False
+        self._copy_page(src, dst)
+        self._decref(src)
+        table.pages[page_idx] = dst
+        table.allocated += 1
+        self.stats.cow_copies += 1
+        return True
+
+    def write_prompt(self, table: PageTable, small_cache: Any) -> None:
+        """Block-copy a freshly prefilled B=1 contiguous cache into the
+        request's pages, skipping pages mapped shared (their bytes are
+        identical by construction — same prompt prefix, same deterministic
+        prefill). `small_cache` is the stacked `{sub_j: KVCache|QuantKVCache
+        [G, 1, S, KV, hd]}` pytree `Model.init_cache(1, ...)` produced."""
+        T = table.prompt_len
+        P = self.page_size
+        n_pages = cdiv(T, P)
+        # first page this request owns (refcount 1): shared full pages and a
+        # still-shared partial page (exact-match fork) must not be written
+        first = 0
+        while first < n_pages and self._refc[table.pages[first]] > 1:
+            first += 1
+        for i in range(first, n_pages):
+            lo, hi = i * P, min(T, (i + 1) * P)
+            phys = table.pages[i]
+            if self.layout == "stacked":
+                self.cache = {
+                    sub: type(arena)(*[
+                        leaf.at[:, phys, :hi - lo].set(
+                            s[:, 0, lo:hi].astype(leaf.dtype))
+                        for leaf, s in zip(arena, small_cache[sub])])
+                    for sub, arena in self.cache.items()}
+            else:
+                self.cache_groups = [
+                    {sub: type(arena)(*[
+                        leaf.at[phys, :hi - lo].set(
+                            s[g_idx, 0, lo:hi].astype(leaf.dtype))
+                        for leaf, s in zip(arena, small_cache[sub])])
+                     for sub, arena in group.items()}
+                    for g_idx, group in enumerate(self.cache_groups)]
+
+    def register_prefixes(self, prompt: np.ndarray, table: PageTable) -> None:
+        """Register every page-aligned prefix of a just-written prompt in the
+        prefix registry (full pages only — registered pages are immutable, so
+        later sharers never force a copy). Entries hold their own refs and
+        outlive the request; `clear_prefix_cache` / FIFO eviction releases
+        them."""
+        prompt = np.asarray(prompt, dtype=np.int32)
+        P = self.page_size
+        for L in range(P, len(prompt) + 1, P):
+            key = prompt[:L].tobytes()
+            if key in self._registry:
+                continue
+            pages = tuple(table.pages[:L // P])
+            for p in pages:
+                self._incref(p)
+                self._registry_refc[p] += 1
+            self._registry[key] = (L, pages)
+
+    # -- decode growth ---------------------------------------------------------
+    def prepare_append(self, table: PageTable, position: int) -> bool:
+        """Make `position` writable for this request before the decode step:
+        grow the table by one page at a page boundary, CoW a shared page at a
+        divergence point. False = pool dry even after prefix eviction (the
+        server's page-pressure hook preempts and retries)."""
+        idx = position // self.page_size
+        if idx >= len(table.pages):
+            assert idx == len(table.pages), \
+                "page tables grow one page at a time"
+            p = self._alloc_page()
+            if p is None:
+                return False
+            table.pages.append(p)
+            table.allocated += 1
+        elif self._refc[table.pages[idx]] > 1:
+            if not self._cow(table, idx):
+                return False
+        table.length = max(table.length, position + 1)
+        return True
+
+    def page_table_row(self, table: Optional[PageTable],
+                       out: np.ndarray) -> None:
+        """Fill one row of the [B, max_pages] page-table array (null-page
+        padded; a None table — free slot — stays all-null)."""
+        out[:] = self.null_page
+        if table is not None:
+            out[:len(table.pages)] = table.pages
+
+    # -- reclamation -----------------------------------------------------------
+    def release(self, table: PageTable) -> None:
+        """Drop every reference a retired request holds. Idempotent; shared
+        pages survive through their other holders (registry included)."""
+        if table.released:
+            return
+        table.released = True
+        for p in table.pages:
+            self._decref(p)
+        table.pages.clear()
+        if self._live_prompts.get(table.prompt_key) is table:
+            del self._live_prompts[table.prompt_key]
+        if table in self._active:
+            self._active.remove(table)
+
+    def _evict_one_prefix(self) -> None:
+        key, (_, pages) = self._registry.popitem(last=False)   # FIFO
+        for p in pages:
+            self._registry_refc[p] -= 1
+            self._decref(p)
+        self.stats.prefix_evictions += 1
+
+    def clear_prefix_cache(self) -> int:
+        """Release every registry entry (end-of-run reclamation; the property
+        tests assert the free list is full afterwards)."""
+        n = len(self._registry)
+        while self._registry:
+            self._evict_one_prefix()
+        return n
+
+    def summary(self) -> Dict[str, Any]:
+        """io_summary-style reporting surface (launch/serve.py prints it)."""
+        s = self.stats
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "kv_positions": self.num_pages * self.page_size,
+            "quantized": self.quant,
+            "overcommit": self.overcommit,
+            "n_free": self.n_free,
+            "n_live": self.n_live,
+            "registry_entries": len(self._registry),
+            "pages_allocated": s.pages_allocated,
+            "pages_freed": s.pages_freed,
+            "pages_shared": s.pages_shared,
+            "prefix_hits": s.prefix_hits,
+            "cow_copies": s.cow_copies,
+            "prefix_evictions": s.prefix_evictions,
+            "peak_page_occupancy": s.peak_page_occupancy,
+        }

@@ -65,6 +65,21 @@ not bad reads — see ROADMAP open item 2):
   * bounded memory: `finished_high_water` auto-releases the oldest delivered
     results past the mark (`ServerStats.results_released` counts them;
     caller-held handles stay valid).
+
+Paged KV cache (`page_size=`/`num_pages=`, see `serving/paging.py`): instead
+of one full-`max_len` contiguous KV region per slot, all KV memory lives in a
+shared page arena and each request maps exactly the pages it has filled, so
+the SAME memory budget serves several times the concurrency (a slot pins
+ceil(len/page_size) pages, not max_len positions). Admission is gated by page
+availability (`ServerStats.page_deferrals`) on top of the I/O gate; matched
+prompt prefixes share pages copy-on-write (`prefix_hits`/`cow_copies`);
+retirement on EVERY path — length/stop/timeout/error/rejected/preempted/abort
+— releases the request's pages deterministically; and under page pressure
+(`page_overcommit=True`) the decode-growth hook preempts the lowest-priority
+active request (`finish_reason="preempted"`, partial tokens preserved) rather
+than deadlocking. Decoded logits are bitwise identical to the contiguous
+layout — the paged attend gathers pages into the same [B, S, KV, hd] view and
+runs the identical causal GQA math.
 """
 from __future__ import annotations
 
@@ -86,6 +101,7 @@ from repro.models.layers import apply_norm, embed_tokens, unembed
 from repro.models.model import Model
 from repro.serving.engine import (OffloadedFFNRuntime, Request, Result,
                                   request_key)
+from repro.serving.paging import PagePool, cdiv
 
 
 class RequestState(enum.Enum):
@@ -111,7 +127,8 @@ class RequestHandle:
     request: Request
     state: RequestState = RequestState.QUEUED
     tokens: List[int] = dataclasses.field(default_factory=list)
-    # "length" | "stop" | "error" | "timeout" | "rejected" once FINISHED
+    # "length" | "stop" | "error" | "timeout" | "rejected" | "preempted"
+    # once FINISHED
     finish_reason: Optional[str] = None
     result: Optional[Result] = None
     error: Optional[BaseException] = None    # set iff finish_reason=="error"
@@ -176,6 +193,15 @@ class ServerStats:
     results_released: int = 0         # finished handles auto-released past
     #                                   the finished_high_water mark
     peak_queue_depth: int = 0         # max QUEUED depth ever observed
+    # -- paged-KV counters (mirrors of PagePoolStats; zero unless paged) ------
+    pages_allocated: int = 0          # page allocations over the run
+    pages_shared: int = 0             # pages mapped shared at admission
+    prefix_hits: int = 0              # admissions that matched a shared prefix
+    cow_copies: int = 0               # copy-on-write page copies
+    peak_page_occupancy: int = 0      # max pages simultaneously referenced
+    prefix_evictions: int = 0         # registry entries evicted under pressure
+    page_deferrals: int = 0           # admissions deferred by the page gate
+    preemptions: int = 0              # active requests retired for pages
 
     @property
     def occupancy(self) -> float:
@@ -225,7 +251,10 @@ class InferenceServer:
                  io_admission: bool = True, io_headroom: float = 1.0,
                  stall_limit: int = 256,
                  finished_high_water: Optional[int] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 page_overcommit: bool = False):
         """`decode_fn` / `prefill_fn` let a long-lived caller (ServingEngine)
         share one jitted resident decode / admission prefill across servers;
         by default the server jits its own (prefill compiles once per prompt
@@ -248,7 +277,15 @@ class InferenceServer:
         no-progress iterations raise `ServerStalledError`;
         `finished_high_water` bounds retained finished handles (oldest
         auto-released past the mark); `clock` injects a monotonic clock for
-        deterministic deadline tests (default `time.monotonic`)."""
+        deterministic deadline tests (default `time.monotonic`).
+
+        Paged KV: set BOTH `page_size` and `num_pages` to replace the
+        per-slot contiguous caches with a shared page arena
+        (`serving/paging.py`) — decoder-only attention stacks, no `swa`.
+        `page_overcommit=False` (strict) admits only requests whose
+        worst-case page need is covered, so decode growth never runs dry;
+        True gates on the immediate prompt need only, trading possible
+        page-pressure preemption for higher admitted concurrency."""
         if mode not in ("resident", "offload"):
             raise ValueError(f"unknown serving mode {mode!r}")
         cfg = model.cfg
@@ -270,6 +307,11 @@ class InferenceServer:
             raise ValueError(f"unknown lookahead mode {lookahead!r}")
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if (page_size is None) != (num_pages is None):
+            raise ValueError("pass both page_size and num_pages, or neither")
+        if page_size is not None and swa:
+            raise ValueError("paged KV cache does not combine with swa "
+                             "(sliding-window rings are per-slot, not paged)")
         if queue_limit is not None and queue_limit < 1:
             raise ValueError("queue_limit must be >= 1 (or None = unbounded)")
         if stall_limit < 1:
@@ -315,13 +357,32 @@ class InferenceServer:
         self._slot_handle: List[Optional[RequestHandle]] = [None] * max_slots
         self._slot_pos = np.zeros(max_slots, dtype=np.int32)
         self._cur = np.zeros(max_slots, dtype=np.int32)
+        # paged KV: the pool owns ALL KV memory; per-uid page tables map each
+        # request onto exactly the pages it has filled
+        self._pool: Optional[PagePool] = None
+        self._tables: Dict[int, Any] = {}
+        if page_size is not None:
+            # PagePool/init_paged_stack_cache validate page geometry and
+            # reject non-attention (SSM) sublayers with a ValueError — paged
+            # serving never silently falls back
+            self._pool = PagePool(
+                cfg, num_pages=num_pages, page_size=page_size,
+                max_len=max_len, overcommit=page_overcommit,
+                layout="stacked" if mode == "resident" else "groups")
         if mode == "resident":
-            self._cache = model.init_cache(max_slots, max_len, swa=swa)
-            self._decode_fn = decode_fn or jax.jit(
-                lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+            if self._pool is not None:
+                self._cache = None        # the arena replaces per-slot caches
+                self._decode_fn = decode_fn or jax.jit(
+                    lambda p, t, pos, c, pt: model.decode_step(
+                        p, t, pos, c, page_tables=pt))
+            else:
+                self._cache = model.init_cache(max_slots, max_len, swa=swa)
+                self._decode_fn = decode_fn or jax.jit(
+                    lambda p, t, pos, c: model.decode_step(p, t, pos, c))
         else:
-            self._cache_groups = transformer.unstack_groups(
-                model.init_cache(max_slots, max_len, swa=swa), cfg)
+            self._cache_groups = (
+                None if self._pool is not None else transformer.unstack_groups(
+                    model.init_cache(max_slots, max_len, swa=swa), cfg))
             self._param_groups = transformer.unstack_groups(
                 params["stack"], cfg)
             self._w_ups = _oracle_w_ups(model, params) if oracle else None
@@ -381,6 +442,14 @@ class InferenceServer:
                 f"request {request.uid}: prompt ({T} tokens) + max_new_tokens "
                 f"({request.max_new_tokens}) exceeds the server's max_len "
                 f"({self.max_len}); shorten the request or raise max_len")
+        if self._pool is not None:
+            need = cdiv(T + request.max_new_tokens, self._pool.page_size)
+            if need > self._pool.num_pages:
+                raise ValueError(
+                    f"request {request.uid}: prompt + max_new_tokens needs "
+                    f"{need} pages of {self._pool.page_size}, but the pool "
+                    f"has only {self._pool.num_pages}; shorten the request "
+                    f"or grow the pool")
         if request.uid in self._handles:
             raise ValueError(f"duplicate request uid {request.uid}")
         handle = RequestHandle(request=request, on_token=on_token,
@@ -488,9 +557,14 @@ class InferenceServer:
         self._expire_queued(now)
         while self._queue and None in self._slot_handle:
             cand = self._next_admission()
-            if cand is None:               # I/O-aware gate said "not yet"
+            if cand is None:               # an admission gate said "not yet"
                 break
             emitted += self._admit(cand)
+        if self._pool is not None:
+            # make every active row's next position writable BEFORE the
+            # batched decode: page-boundary growth, CoW at divergence points,
+            # and — pool dry even after prefix eviction — preemption
+            self._grow_page_tables()
         if any(h is not None for h in self._slot_handle):
             try:
                 emitted += self._decode_iteration()
@@ -500,6 +574,8 @@ class InferenceServer:
                 for h in list(self._slot_handle):
                     if h is not None:
                         self._fail_request(h, e)
+        if self._pool is not None:
+            self._sync_page_stats()
         progress = (emitted + (self.stats.retired - retired0)
                     + (self.stats.admitted - admitted0))
         if progress == 0 and self.has_work:
@@ -561,11 +637,31 @@ class InferenceServer:
         best = min(self._queue,
                    key=lambda h: (-h.request.priority, _deadline_or_inf(h),
                                   h._order))
+        if self._page_defers(best):
+            self.stats.page_deferrals += 1
+            return None
         if self._io_defers(best):
             self.stats.io_deferrals += 1
             return None
         self._queue.remove(best)
         return best
+
+    def _page_defers(self, candidate: RequestHandle) -> bool:
+        """Page-availability admission gate (paged KV only): True when the
+        pool cannot cover the candidate — its worst-case lifetime page need
+        in strict mode, its immediate prompt need under `page_overcommit` —
+        out of free + registry-evictable pages net of the commitments already
+        promised to active requests. Never defers an empty batch: `submit`
+        bounded the request to the pool, and with nothing active every
+        non-free page is registry-evictable, so the candidate always fits."""
+        if self._pool is None:
+            return False
+        if not any(h is not None for h in self._slot_handle):
+            return False
+        r = candidate.request
+        plan = self._pool.plan_admit(np.asarray(r.prompt, dtype=np.int32),
+                                     r.max_new_tokens)
+        return not self._pool.can_admit(plan)
 
     def _io_defers(self, candidate: RequestHandle) -> bool:
         """Flash-I/O-aware admission gate: True when the UFS model predicts
@@ -684,7 +780,21 @@ class InferenceServer:
             handle.prefill_seconds = time.perf_counter() - t0
             self.stats.prefill_seconds += handle.prefill_seconds
             self.stats.admitted += 1
-            self._write_slot(slot, small)
+            if self._pool is not None:
+                prompt_np = np.asarray(r.prompt, dtype=np.int32)
+                table, _ = self._pool.admit(prompt_np, r.max_new_tokens,
+                                            uid=r.uid)
+                if table is None:
+                    raise RuntimeError(
+                        f"page pool dry while admitting request {r.uid} "
+                        f"(the admission gate approved it)")
+                # registered before the writes so any failure below releases
+                # the pages through the normal _retire path
+                self._tables[r.uid] = table
+                self._pool.write_prompt(table, small)
+                self._pool.register_prefixes(prompt_np, table)
+            else:
+                self._write_slot(slot, small)
             self._slot_handle[slot] = handle
             self._slot_pos[slot] = T
             handle.state = RequestState.DECODE
@@ -757,6 +867,12 @@ class InferenceServer:
             self._slot_handle[handle.slot] = None   # may never have held a
             handle.slot = None                      # slot; freed rows leave
         self._handles.pop(handle.uid, None)         # every future mask union
+        if self._pool is not None:
+            # deterministic page reclamation on EVERY retirement path —
+            # length/stop/timeout/error/rejected/preempted/abort all land here
+            table = self._tables.pop(handle.uid, None)
+            if table is not None:
+                self._pool.release(table)
         self._finished.append(handle)
         self.stats.retired += 1
         hw = self.finished_high_water
@@ -778,6 +894,74 @@ class InferenceServer:
         logger.warning("request %d failed (%r); retiring with "
                        "finish_reason='error'", handle.uid, exc)
         self._retire(handle, "error", error=exc)
+
+    # -- paged-KV growth / preemption -----------------------------------------
+    def _grow_page_tables(self) -> None:
+        """Pre-decode growth pass: every active row's next write position
+        gets a resident, privately-owned page (boundary alloc / CoW). In
+        strict admission mode the pool can never be dry here — admission
+        reserved every request's worst case. Under `page_overcommit` a dry
+        pool preempts: the registry is already drained by the allocator, so
+        the lowest-priority active request (latest deadline, newest — the
+        `_shed_victim` key) retires with `finish_reason="preempted"`, its
+        partial tokens intact and its pages released, and the needer
+        retries. The needer can be its own victim."""
+        for slot in range(self.max_slots):
+            while True:
+                h = self._slot_handle[slot]
+                if h is None:
+                    break
+                table = self._tables.get(h.uid)
+                if table is None or \
+                        self._pool.prepare_append(table,
+                                                  int(self._slot_pos[slot])):
+                    break
+                victim = min(
+                    (a for a in self._slot_handle if a is not None),
+                    key=lambda a: (a.request.priority, -_deadline_or_inf(a),
+                                   -a._order))
+                self.stats.preemptions += 1
+                logger.warning(
+                    "page pool dry growing request %d (pos %d): preempting "
+                    "request %d (priority %d, %d tokens) with "
+                    "finish_reason='preempted'", h.uid,
+                    int(self._slot_pos[slot]), victim.uid,
+                    victim.request.priority, len(victim.tokens))
+                self._retire(victim, "preempted")
+
+    def _page_tables_np(self) -> np.ndarray:
+        """[max_slots, max_pages] physical-page array for the decode step;
+        free slots (and every unallocated logical page) point at the null
+        page, so their garbage writes cannot touch a live page."""
+        pool = self._pool
+        pt = np.full((self.max_slots, pool.max_pages_per_seq),
+                     pool.null_page, dtype=np.int32)
+        for slot, h in enumerate(self._slot_handle):
+            if h is not None:
+                table = self._tables.get(h.uid)
+                if table is not None:
+                    pool.page_table_row(table, pt[slot])
+        return pt
+
+    def _sync_page_stats(self) -> None:
+        ps = self._pool.stats
+        s = self.stats
+        s.pages_allocated = ps.pages_allocated
+        s.pages_shared = ps.pages_shared
+        s.prefix_hits = ps.prefix_hits
+        s.cow_copies = ps.cow_copies
+        s.peak_page_occupancy = ps.peak_page_occupancy
+        s.prefix_evictions = ps.prefix_evictions
+
+    def page_summary(self) -> Optional[Dict[str, Any]]:
+        """Pool configuration + lifetime counters (io_summary-style surface;
+        None when the server is not paged)."""
+        if self._pool is None:
+            return None
+        out = self._pool.summary()
+        out["page_deferrals"] = self.stats.page_deferrals
+        out["preemptions"] = self.stats.preemptions
+        return out
 
     # -- sampling (per-request streams) ---------------------------------------
     def _sample_row(self, handle: RequestHandle, row: np.ndarray) -> int:
@@ -829,9 +1013,15 @@ class InferenceServer:
 
     def _decode_resident(self):
         t0 = time.perf_counter()
-        logits, self._cache = self._decode_fn(
-            self.params, jnp.asarray(self._cur)[:, None],
-            jnp.asarray(self._slot_pos), self._cache)
+        if self._pool is not None:
+            logits, self._pool.cache = self._decode_fn(
+                self.params, jnp.asarray(self._cur)[:, None],
+                jnp.asarray(self._slot_pos), self._pool.cache,
+                jnp.asarray(self._page_tables_np()))
+        else:
+            logits, self._cache = self._decode_fn(
+                self.params, jnp.asarray(self._cur)[:, None],
+                jnp.asarray(self._slot_pos), self._cache)
         rows = np.asarray(logits[:, 0], dtype=np.float32)   # the per-token sync
         wall = time.perf_counter() - t0
         return rows, wall, np.zeros(self.max_slots), 0.0
@@ -910,9 +1100,17 @@ class InferenceServer:
         x = embed_tokens(self.params["embed"],
                          jnp.asarray(self._cur)[:, None], cfg)
         self.scheduler.begin_token()
-        h, self._cache_groups = transformer.stack_decode_step_layerwise(
+        paged = self._pool is not None
+        cache_groups = self._pool.cache_groups if paged else self._cache_groups
+        h, cache_groups = transformer.stack_decode_step_layerwise(
             self._param_groups, x, jnp.asarray(self._slot_pos),
-            self._cache_groups, cfg, ffn_override=ffn_override)
+            cache_groups, cfg, ffn_override=ffn_override,
+            page_tables=(jnp.asarray(self._page_tables_np()) if paged
+                         else None))
+        if paged:
+            self._pool.cache_groups = cache_groups
+        else:
+            self._cache_groups = cache_groups
         h = apply_norm(self.params["final_norm"], h, cfg)
         logits = unembed(self.params["embed"], h, cfg)
         rows = np.asarray(logits[:, 0], dtype=np.float32)   # ONE sync per token

@@ -1,0 +1,443 @@
+"""Paged KV cache: PagePool allocator invariants, copy-on-write prefix
+sharing, paged-attention kernel equivalence, and server-level token identity.
+
+The contract under test (ISSUE 9 acceptance): decoded tokens through the
+paged path are BYTE-FOR-BYTE identical to the contiguous per-slot layout —
+including requests sharing a prompt prefix that diverges after forking
+(copy-on-write) and the int8 quantised cache; the allocator conserves pages
+across any admit/fork/retire interleaving (no double allocation, refcounts
+balance, the free list refills after release + registry clear); preemption
+and CoW counters are exactly zero when the pool is unconstrained and prompts
+are unique; and page pressure under `page_overcommit` preempts rather than
+corrupts or deadlocks.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.kernels.ops import paged_decode_attention
+from repro.models import build_model
+from repro.models.kvcache import KVCache, QuantKVCache, attend_full_cache
+from repro.serving.engine import Request, build_offload_runtime
+from repro.serving.paging import PagePool, cdiv
+from repro.serving.server import InferenceServer
+
+
+def _setup(seed=0, vocab=128, arch="opt-350m", **overrides):
+    cfg = get_config(arch, reduced=True, d_model=64, d_ff=256, n_layers=2,
+                     vocab_size=vocab, **overrides)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _tiny_cfg(**overrides):
+    """Smallest geometry that still builds real arenas (allocator tests)."""
+    return get_config("opt-350m", reduced=True, d_model=16, d_ff=32,
+                      n_layers=1, vocab_size=32, **overrides)
+
+
+def _serve(model, params, reqs, max_slots=4, max_len=48, **kw):
+    server = InferenceServer(model, params, max_slots=max_slots,
+                             max_len=max_len, **kw)
+    try:
+        for r in reqs:
+            server.submit(r)
+        results = {res.uid: res for res in server.drain()}
+    finally:
+        server.close()
+    return results, server
+
+
+def _clone(reqs):
+    return [dataclasses.replace(r, prompt=list(r.prompt)) for r in reqs]
+
+
+# -- allocator unit tests ------------------------------------------------------
+
+def test_pool_admit_release_roundtrip():
+    pool = PagePool(_tiny_cfg(), num_pages=8, page_size=4, max_len=32)
+    t, plan = pool.admit(np.arange(6, dtype=np.int32), 4, uid=0)
+    assert t is not None and len(t.pages) == 2 and plan.new_now == 2
+    assert pool.n_free == 6 and pool.stats.pages_allocated == 2
+    assert pool.prepare_append(t, 6)      # offset 2 of page 1: no growth
+    assert len(t.pages) == 2
+    assert pool.prepare_append(t, 8)      # page boundary: one new page
+    assert len(t.pages) == 3
+    pool.check()
+    pool.release(t)
+    pool.release(t)                       # idempotent
+    pool.check()
+    assert pool.n_free == 8
+    assert pool.stats.pages_allocated == pool.stats.pages_freed == 3
+
+
+def test_registry_shares_full_pages_only_and_evicts_fifo():
+    pool = PagePool(_tiny_cfg(), num_pages=6, page_size=4, max_len=32)
+    prompt = np.arange(10, dtype=np.int32)          # 2 full pages + 2 tokens
+    a, _ = pool.admit(prompt, 4, uid=0)
+    pool.register_prefixes(prompt, a)
+    pool.release(a)
+    # registry pins the two ALIGNED prefixes' pages (4- and 8-token); the
+    # partial third page went back to the free list at release
+    assert pool.n_free == 4 and pool.n_evictable() == 2
+    b, plan = pool.admit(prompt, 4, uid=1)          # registry hit at 8 tokens
+    assert plan.shared_len == 8 and plan.n_shared == 2 and plan.new_now == 1
+    assert b.pages[:2] == list(a.pages[:2]) if a.pages else True
+    assert pool.stats.prefix_hits == 1 and pool.stats.cow_copies == 0
+    pool.release(b)
+    # pressure: allocating everything forces FIFO registry eviction
+    c, _ = pool.admit(np.arange(100, 124, dtype=np.int32), 1, uid=2)
+    assert c is not None and len(c.pages) == 6
+    assert pool.stats.prefix_evictions == 2 and pool.n_evictable() == 0
+    pool.release(c)
+    pool.check()
+    assert pool.n_free == 6
+
+
+def test_live_fork_cow_on_partial_page():
+    pool = PagePool(_tiny_cfg(), num_pages=8, page_size=4, max_len=32)
+    prompt = np.arange(6, dtype=np.int32)           # page 1 is partial
+    a, _ = pool.admit(prompt, 4, uid=0)
+    b, plan = pool.admit(prompt.copy(), 4, uid=1)   # live fork: shares BOTH
+    assert plan.shared_len == 6 and b.pages == a.pages
+    assert pool.stats.pages_shared == 2
+    # first writer into the shared partial page pays the copy
+    assert pool.prepare_append(b, 6)
+    assert b.pages[0] == a.pages[0] and b.pages[1] != a.pages[1]
+    assert pool.stats.cow_copies == 1
+    # the original page is A's alone now: A appends in place, no second copy
+    assert pool.prepare_append(a, 6)
+    assert pool.stats.cow_copies == 1
+    pool.release(a)
+    pool.release(b)
+    pool.check()
+    assert pool.n_free == 8
+
+
+def test_commitment_gate_strict_vs_overcommit():
+    cfg = _tiny_cfg()
+    prompt = np.arange(4, dtype=np.int32)
+    strict = PagePool(cfg, num_pages=4, page_size=4, max_len=32)
+    a, _ = strict.admit(prompt, 12, uid=0)          # budget 4: whole pool
+    plan = strict.plan_admit(np.arange(50, 54, dtype=np.int32), 12)
+    assert not strict.can_admit(plan)               # nothing left to promise
+    over = PagePool(cfg, num_pages=4, page_size=4, max_len=32,
+                    overcommit=True)
+    over.admit(prompt, 12, uid=0)
+    plan = over.plan_admit(np.arange(50, 54, dtype=np.int32), 12)
+    assert over.can_admit(plan)                     # immediate need only
+
+
+def test_pool_rejects_ssm_stacks():
+    cfg = get_config("jamba-1.5-large-398b", reduced=True)
+    with pytest.raises(ValueError):
+        PagePool(cfg, num_pages=8, page_size=4, max_len=32)
+
+
+# -- allocator property test ---------------------------------------------------
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=25, deadline=None)
+def test_pool_invariants_under_random_interleaving(seed):
+    """Random admit/fork/append/retire sequences: after EVERY operation the
+    allocator conserves pages (live + free == num_pages, free list
+    duplicate-free, registry refs <= total refs); after releasing everything
+    and clearing the registry the free list is full again and allocations
+    balance frees exactly."""
+    rng = np.random.default_rng(seed)
+    P, NP = 4, 12
+    pool = PagePool(_tiny_cfg(), num_pages=NP, page_size=P, max_len=32,
+                    overcommit=True)
+    live = []
+    prompts = []
+    uid = 0
+    for _ in range(40):
+        op = rng.integers(0, 3)
+        if op == 0:                                  # admit (maybe a fork)
+            if prompts and rng.random() < 0.4:
+                base = prompts[rng.integers(len(prompts))]
+                extra = rng.integers(0, 3)
+                prompt = np.concatenate(
+                    [base, rng.integers(0, 32, extra)]).astype(np.int32)
+            else:
+                prompt = rng.integers(
+                    0, 32, rng.integers(1, 12)).astype(np.int32)
+            max_new = int(rng.integers(1, 8))
+            if cdiv(len(prompt) + max_new, P) > NP:
+                continue
+            t, _ = pool.admit(prompt, max_new, uid=uid)
+            uid += 1
+            if t is not None:
+                pool.register_prefixes(prompt, t)
+                live.append(t)
+                prompts.append(prompt)
+        elif op == 1 and live:                       # grow one table
+            t = live[rng.integers(len(live))]
+            pool.prepare_append(t, t.length)         # may fail dry: fine
+        elif op == 2 and live:                       # retire one table
+            t = live.pop(rng.integers(len(live)))
+            pool.release(t)
+        pool.check()
+    for t in live:
+        pool.release(t)
+        pool.check()
+    pool.clear_prefix_cache()
+    pool.check()
+    assert pool.n_free == NP
+    assert pool.stats.pages_allocated == pool.stats.pages_freed
+    assert pool.n_evictable() == 0
+
+
+# -- kernel equivalence --------------------------------------------------------
+
+def _page_arena(rng, B, S, KV, hd, P, quant):
+    """A contiguous [B, S, KV, hd] cache and its page-arena twin (row b maps
+    pages b*S/P .. ), plus the page tables."""
+    MP = S // P
+    NP = B * MP
+    k_all = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v_all = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    pt = (np.arange(B * MP, dtype=np.int32).reshape(B, MP))
+    reshape = lambda a: jnp.concatenate(
+        [a.reshape((NP, P) + a.shape[2:]),
+         jnp.zeros((1, P) + a.shape[2:], a.dtype)])
+    if not quant:
+        return (KVCache(k=k_all, v=v_all),
+                (reshape(k_all), reshape(v_all), None, None),
+                jnp.asarray(pt))
+    sc_k = jnp.maximum(jnp.abs(k_all).max(-1), 1e-6) / 127.0
+    sc_v = jnp.maximum(jnp.abs(v_all).max(-1), 1e-6) / 127.0
+    ki = jnp.clip(jnp.round(k_all / sc_k[..., None]), -127, 127).astype(jnp.int8)
+    vi = jnp.clip(jnp.round(v_all / sc_v[..., None]), -127, 127).astype(jnp.int8)
+    return (QuantKVCache(k=ki, v=vi, k_scale=sc_k, v_scale=sc_v),
+            (reshape(ki), reshape(vi), reshape(sc_k), reshape(sc_v)),
+            jnp.asarray(pt))
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_paged_decode_attention_matches_contiguous(quant):
+    """The XLA gather twin is bitwise identical to `attend_full_cache`; the
+    Pallas kernel body (interpret-mode oracle) matches to fp32 online-softmax
+    tolerance. Rows at different positions exercise the causal mask over
+    partially-filled and null pages."""
+    rng = np.random.default_rng(3)
+    B, KV, G, hd, P, S = 3, 2, 2, 16, 8, 32
+    H = KV * G
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    cur = jnp.asarray([5, 17, 31], jnp.int32)
+    cont, (ka, va, ksa, vsa), pt = _page_arena(rng, B, S, KV, hd, P, quant)
+    ref = np.asarray(attend_full_cache(q, cont, cur[:, None]))
+    ref = ref.reshape(B, H, hd)
+    out_xla = np.asarray(paged_decode_attention(
+        q[:, 0], ka, va, pt, cur, k_scale=ksa, v_scale=vsa))
+    assert np.array_equal(out_xla, ref)
+    out_pallas = np.asarray(paged_decode_attention(
+        q[:, 0], ka, va, pt, cur, k_scale=ksa, v_scale=vsa, interpret=True))
+    np.testing.assert_allclose(out_pallas, ref, atol=2e-6, rtol=2e-6)
+
+
+def test_paged_decode_attention_scale_pairing():
+    rng = np.random.default_rng(0)
+    _, (ka, va, ksa, vsa), pt = _page_arena(rng, 1, 8, 2, 16, 8, True)
+    q = jnp.zeros((1, 4, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        paged_decode_attention(q, ka, va, pt, jnp.zeros(1, jnp.int32),
+                               k_scale=ksa, v_scale=None)
+
+
+# -- server-level token identity -----------------------------------------------
+
+def _identity_requests(rng, vocab=128):
+    """Mixed lengths + two shared-prefix pairs: one exact duplicate (live
+    fork, CoW divergence through temperature sampling), one extension of
+    another prompt (registry/fork hit at admission)."""
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, vocab - 1,
+                                        int(rng.integers(4, 14))).tolist(),
+                    max_new_tokens=int(rng.integers(3, 8)), temperature=0.8)
+            for i in range(6)]
+    reqs.append(Request(uid=6, prompt=list(reqs[0].prompt),
+                        max_new_tokens=5, temperature=0.8))
+    reqs.append(Request(uid=7, prompt=list(reqs[1].prompt) + [9, 9, 9],
+                        max_new_tokens=4, temperature=0.8))
+    return reqs
+
+
+def test_paged_server_tokens_identical_resident(rng):
+    """Paged vs contiguous resident serving: byte-for-byte identical tokens
+    for every request, shared-prefix forks included; prefix sharing engaged;
+    everything reclaimed at drain."""
+    cfg, model, params = _setup()
+    reqs = _identity_requests(rng)
+    base, _ = _serve(model, params, _clone(reqs), max_slots=3)
+    paged, server = _serve(model, params, _clone(reqs), max_slots=3,
+                           page_size=4, num_pages=36, seed=0)
+    for uid, res in base.items():
+        assert paged[uid].tokens == res.tokens, uid
+        assert paged[uid].finish_reason == res.finish_reason
+    assert server.stats.prefix_hits >= 1
+    assert server.stats.preemptions == 0
+    pool = server._pool
+    assert pool.n_live == pool.n_evictable()   # only the registry holds pages
+    pool.clear_prefix_cache()
+    pool.check()
+    assert pool.n_free == pool.num_pages
+
+
+def test_paged_server_tokens_identical_offload(rng):
+    """The same identity through the offload (layerwise, groups-layout) path
+    under the ReLU oracle."""
+    cfg, model, params = _setup(seed=1)
+    reqs = _identity_requests(rng)[:5]
+    rt = build_offload_runtime(model, params, rng=np.random.default_rng(1))
+    base, _ = _serve(model, params, _clone(reqs), max_slots=2,
+                     mode="offload", offload=rt)
+    rt2 = build_offload_runtime(model, params, rng=np.random.default_rng(1))
+    paged, server = _serve(model, params, _clone(reqs), max_slots=2,
+                           mode="offload", offload=rt2,
+                           page_size=4, num_pages=36)
+    for uid, res in base.items():
+        assert paged[uid].tokens == res.tokens, uid
+    assert server.stats.preemptions == 0
+
+
+def test_paged_server_quant_cache_identity(rng):
+    """int8 `QuantKVCache` through the paged arena (per-page scales) matches
+    the contiguous quant path bitwise — no silent float fallback."""
+    cfg, model, params = _setup(seed=2, kv_quant=True)
+    assert cfg.kv_quant
+    reqs = _identity_requests(rng)
+    base, _ = _serve(model, params, _clone(reqs), max_slots=3)
+    paged, server = _serve(model, params, _clone(reqs), max_slots=3,
+                           page_size=4, num_pages=36)
+    for uid, res in base.items():
+        assert paged[uid].tokens == res.tokens, uid
+    assert server._pool.quant          # arena really is the int8 layout
+
+
+def test_live_fork_divergence_identity(rng):
+    """An exact-duplicate prompt submitted while its twin is mid-decode forks
+    the live pages (partial page included) and diverges through CoW; both
+    requests still match their solo references exactly."""
+    cfg, model, params = _setup()
+    prompt = rng.integers(1, 127, 10).tolist()
+    r0 = Request(uid=0, prompt=list(prompt), max_new_tokens=8, temperature=0.7)
+    r1 = Request(uid=1, prompt=list(prompt), max_new_tokens=8, temperature=0.7)
+
+    solo = {}
+    for r in (r0, r1):
+        res, _ = _serve(model, params,
+                        [dataclasses.replace(r, prompt=list(prompt))],
+                        max_slots=1)
+        solo[r.uid] = res[r.uid].tokens
+
+    server = InferenceServer(model, params, max_slots=2, max_len=48,
+                             page_size=4, num_pages=24)
+    try:
+        server.submit(r0)
+        server.step()                   # r0 admitted and decoding
+        server.submit(r1)               # forks r0's live pages mid-flight
+        results = {r.uid: r for r in server.drain()}
+    finally:
+        server.close()
+    assert results[0].tokens == solo[0]
+    assert results[1].tokens == solo[1]
+    assert server.stats.prefix_hits >= 1
+    assert server.stats.pages_shared >= 2      # incl. the partial page
+    assert server.stats.cow_copies >= 1        # the divergence paid one copy
+
+
+def test_clean_path_counters_exactly_zero(rng):
+    """Unique prompts on an unconstrained pool: zero CoW copies, zero
+    preemptions, zero page deferrals — sharing machinery must not fire."""
+    cfg, model, params = _setup()
+    reqs = [Request(uid=i, prompt=rng.integers(1, 127, 6 + i).tolist(),
+                    max_new_tokens=4) for i in range(4)]
+    _, server = _serve(model, params, reqs, max_slots=4,
+                       page_size=4, num_pages=48)
+    assert server.stats.cow_copies == 0
+    assert server.stats.preemptions == 0
+    assert server.stats.page_deferrals == 0
+
+
+# -- pressure: deferral, preemption, reclamation --------------------------------
+
+def test_strict_gate_defers_and_never_preempts(rng):
+    """Strict admission on a pool that cannot hold everyone at once: requests
+    wait (page_deferrals) but every admitted request runs to completion."""
+    cfg, model, params = _setup()
+    reqs = [Request(uid=i, prompt=rng.integers(1, 127, 8).tolist(),
+                    max_new_tokens=16) for i in range(4)]
+    results, server = _serve(model, params, reqs, max_slots=4,
+                             page_size=4, num_pages=10)
+    assert all(r.finish_reason == "length" for r in results.values())
+    assert server.stats.preemptions == 0
+    assert server.stats.page_deferrals >= 1
+
+
+def test_overcommit_preempts_lowest_priority(rng):
+    """Overcommitted pool under decode growth: the lowest-priority request is
+    preempted (partial tokens preserved), the high-priority one finishes, and
+    every page is reclaimed."""
+    cfg, model, params = _setup()
+    reqs = [Request(uid=i, prompt=rng.integers(1, 127, 8).tolist(),
+                    max_new_tokens=16, priority=1 if i == 0 else 0)
+            for i in range(4)]
+    results, server = _serve(model, params, reqs, max_slots=4,
+                             page_size=4, num_pages=10, page_overcommit=True)
+    assert results[0].finish_reason == "length"
+    preempted = [r for r in results.values() if r.finish_reason == "preempted"]
+    assert preempted and server.stats.preemptions == len(preempted)
+    assert all(len(r.tokens) >= 1 for r in preempted)
+    pool = server._pool
+    pool.clear_prefix_cache()
+    pool.check()
+    assert pool.n_free == pool.num_pages
+
+
+def test_abort_releases_pages(rng):
+    cfg, model, params = _setup()
+    server = InferenceServer(model, params, max_slots=2, max_len=48,
+                             page_size=4, num_pages=24)
+    try:
+        for i in range(3):
+            server.submit(Request(uid=i,
+                                  prompt=rng.integers(1, 127, 9).tolist(),
+                                  max_new_tokens=8))
+        server.step()
+        assert server._pool.n_live > server._pool.n_evictable()
+        n = server.abort()
+        assert n == 3
+    finally:
+        server.close()
+    pool = server._pool
+    assert pool.n_live == pool.n_evictable()   # only registry refs remain
+    pool.clear_prefix_cache()
+    pool.check()
+    assert pool.n_free == pool.num_pages
+
+
+# -- constructor / submit validation -------------------------------------------
+
+def test_paged_constructor_validation():
+    cfg, model, params = _setup()
+    with pytest.raises(ValueError, match="both page_size and num_pages"):
+        InferenceServer(model, params, max_len=32, page_size=4)
+    with pytest.raises(ValueError, match="swa"):
+        InferenceServer(model, params, max_len=32, swa=True,
+                        page_size=4, num_pages=8)
+
+
+def test_paged_submit_rejects_oversized_request():
+    cfg, model, params = _setup()
+    server = InferenceServer(model, params, max_slots=2, max_len=64,
+                             page_size=4, num_pages=8)   # 32 KV positions
+    with pytest.raises(ValueError, match="pages"):
+        server.submit(Request(uid=0, prompt=list(range(1, 30)),
+                              max_new_tokens=10))
