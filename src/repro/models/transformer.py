@@ -16,9 +16,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_lib
 from repro.models import ssm
+from repro.kernels import ops
 from repro.models.kvcache import (KVCache, PagedKVCache, PagedQuantKVCache,
                                   QuantKVCache, SWACache, attend_full_cache,
-                                  attend_paged_cache, attend_swa_cache,
+                                  attend_swa_cache,
                                   init_kv_cache, init_paged_kv_cache,
                                   init_paged_quant_kv_cache,
                                   init_quant_kv_cache, init_swa_cache,
@@ -333,9 +334,10 @@ def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
     layerwise path (stack_decode_step_layerwise) so both run identical math.
     `position` is a shared scalar or a per-slot [B] vector; the full-cache
     writes pick the matching (slice vs per-row scatter) variant. Paged caches
-    additionally route the write/attend through `page_tables` [B, max_pages]
-    (per-slot positions required — the paged layout exists for the
-    continuous-batching server).
+    scatter the write through `page_tables` [B, max_pages] and attend via
+    `kernels/ops.paged_decode_attention` — the XLA gather twin on CPU, the
+    Pallas paged-attention kernel elsewhere (per-slot positions required —
+    the paged layout exists for the continuous-batching server).
     """
     per_row = jnp.asarray(position).ndim == 1
     normed = apply_norm(sp["norm1"], h, cfg)
@@ -350,11 +352,21 @@ def _mixer_decode(sp: Params, cj: Any, h: jnp.ndarray, pos_arr: jnp.ndarray,
             if not per_row:
                 raise ValueError("paged KV cache decode needs per-slot [B] "
                                  "positions (continuous batching)")
+            cur_pos = jnp.asarray(position).astype(jnp.int32)
             if isinstance(cj, PagedQuantKVCache):
                 cj = paged_quant_kv_write_rows(cj, k, v, position, page_tables)
+                out = ops.paged_decode_attention(
+                    q[:, 0], cj.k, cj.v, page_tables, cur_pos,
+                    k_scale=cj.k_scale, v_scale=cj.v_scale)
             else:
                 cj = paged_kv_write_rows(cj, k, v, position, page_tables)
-            mix = attend_paged_cache(q, cj, pos_arr, page_tables)
+                out = ops.paged_decode_attention(q[:, 0], cj.k, cj.v,
+                                                 page_tables, cur_pos)
+            # the kernel dispatcher (XLA gather twin on CPU, Pallas paged
+            # kernel elsewhere) returns [B, H, hd] fp32; fold back to the
+            # [B, 1, H*hd] residual layout at the model dtype
+            B, H, hd = out.shape
+            mix = out.reshape(B, 1, H * hd).astype(q.dtype)
         elif isinstance(cj, SWACache):
             cj = swa_write(cj, k, v, pos_arr)
             mix = attend_swa_cache(q, cj, pos_arr, window or cfg.sliding_window)

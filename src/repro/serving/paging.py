@@ -25,7 +25,9 @@ all KV memory instead:
         the full pages holding their KV. Registered pages are immutable by
         construction (appends never land in a full page), so registry hits
         share without ever copying; entries hold their own refcounts and are
-        evicted FIFO under page pressure (`prefix_evictions`).
+        evicted oldest-first under page pressure (`prefix_evictions`),
+        skipping entries whose pages are all pinned by live tables (evicting
+        those frees nothing).
       - LIVE-PROMPT FORKING: a new prompt extending (or equal to) a live
         request's full prompt maps the live request's pages — including a
         partially-filled final page — until divergence. A write into a page
@@ -36,8 +38,10 @@ all KV memory instead:
     bytes, so hash collisions cannot alias different prompts.
   * admission accounting: `plan_admit` prices a candidate's worst-case page
     need (prompt pages + decode growth + pending CoW, minus shared-forever
-    full pages); `can_admit` gates on free + registry-evictable pages minus
-    the outstanding commitments of active tables. In the default strict mode
+    full pages) AND the registry-only shared pages it would pin — pinned
+    shares stop being evictable, so they count as consumed availability;
+    `can_admit` gates on free + registry-evictable pages net of that pin,
+    minus the outstanding commitments of active tables. In the default strict mode
     an admitted request can therefore ALWAYS grow to completion — the pool
     never runs dry mid-decode and preemption stays at exactly zero. With
     `overcommit=True` only the immediate prompt need is gated, admitting more
@@ -88,6 +92,10 @@ class AdmitPlan:
     new_now: int            # pages allocated during admission itself
     budget: int             # worst-case lifetime allocations for this request
     extra_parent: int       # +1 when forking a live partial page (parent may CoW)
+    # shared pages currently held ONLY by the registry: admitting pins them
+    # (incref), which removes them from the evictable set — they must be
+    # priced as consumed availability or the gate over-admits
+    n_shared_evictable: int = 0
     parent: Optional["PageTable"] = None   # live fork source, if any
     shared_pages: Tuple[int, ...] = ()
 
@@ -183,11 +191,28 @@ class PagePool:
         return int(np.sum((self._refc > 0)
                           & (self._refc == self._registry_refc)))
 
+    def _evictable_entry_key(self) -> Optional[bytes]:
+        """Oldest (FIFO) registry entry holding at least one registry-only
+        page. Evicting such entries makes progress toward a free page (each
+        eviction strictly reduces total registry refs, and a registry-only
+        page's refs are ALL registry refs); entries whose pages are all
+        pinned by live tables would free nothing and are skipped — evicting
+        them only throws away future sharing."""
+        for key, (_, pages) in self._registry.items():
+            if any(self._refc[p] == self._registry_refc[p] for p in pages):
+                return key
+        return None
+
     def _alloc_page(self) -> Optional[int]:
         """Pop a free page, evicting registry prefixes FIFO if the list is
-        dry. None means genuinely out of memory (caller preempts/defers)."""
-        while not self._free and self._registry:
-            self._evict_one_prefix()
+        dry — skipping entries that cannot free a page, and stopping once no
+        remaining entry can. None means genuinely out of memory (caller
+        preempts/defers)."""
+        while not self._free:
+            key = self._evictable_entry_key()
+            if key is None:
+                break
+            self._evict_one_prefix(key)
         if not self._free:
             return None
         p = self._free.pop()
@@ -269,9 +294,12 @@ class PagePool:
         # decode append
         new_now = total_prompt_pages - n_shared + (1 if partial and T > L else 0)
         budget = cdiv(T + max_new_tokens, P) - shared_full
+        n_shared_evictable = sum(
+            1 for p in shared if self._refc[p] == self._registry_refc[p])
         return AdmitPlan(shared_len=L, n_shared=n_shared,
                          shared_full=shared_full, new_now=new_now,
                          budget=budget, extra_parent=1 if partial else 0,
+                         n_shared_evictable=n_shared_evictable,
                          parent=parent, shared_pages=shared)
 
     def committed_outstanding(self) -> int:
@@ -282,8 +310,16 @@ class PagePool:
     def can_admit(self, plan: AdmitPlan) -> bool:
         """Strict mode reserves the candidate's worst case against everyone
         else's outstanding commitments (admitted => can always finish);
-        overcommit gates only the immediate prompt need."""
-        available = self.n_free + self.n_evictable()
+        overcommit gates only the immediate prompt need.
+
+        Shared pages currently held only by the registry stop being
+        evictable the instant this candidate pins them (incref), so they are
+        subtracted from availability up front — otherwise the gate approves
+        admissions the allocator cannot serve, and in strict mode the pinned
+        pages would silently invalidate the worst-case reservations already
+        promised to active requests."""
+        available = (self.n_free + self.n_evictable()
+                     - plan.n_shared_evictable)
         if self.overcommit:
             return plan.new_now <= available
         return plan.worst_case <= available - self.committed_outstanding()
@@ -307,8 +343,6 @@ class PagePool:
         if plan.shared_len > 0:
             self.stats.prefix_hits += 1
             self.stats.pages_shared += plan.n_shared
-        if plan.parent is not None and plan.extra_parent:
-            plan.parent.budget += plan.extra_parent
         partial_idx = plan.shared_len // P if plan.shared_len % P else -1
         if partial_idx >= 0 and T > plan.shared_len:
             # the prompt extends into the shared partial page: diverge NOW
@@ -323,6 +357,10 @@ class PagePool:
             table.pages.append(p)
             table.allocated += 1
         table.length = T
+        if plan.parent is not None and plan.extra_parent:
+            # charge the parent's possible CoW only once the admit is final —
+            # a rolled-back admit must leave the parent's commitment intact
+            plan.parent.budget += plan.extra_parent
         self._active.append(table)
         self._live_prompts.setdefault(table.prompt_key, table)
         return table, plan
@@ -460,13 +498,22 @@ class PagePool:
         for p in table.pages:
             self._decref(p)
         table.pages.clear()
-        if self._live_prompts.get(table.prompt_key) is table:
-            del self._live_prompts[table.prompt_key]
         if table in self._active:
             self._active.remove(table)
+        if self._live_prompts.get(table.prompt_key) is table:
+            del self._live_prompts[table.prompt_key]
+            # a still-live duplicate of the same prompt is just as good a
+            # fork source — re-point instead of losing the sharing
+            for t in self._active:
+                if t.prompt_key == table.prompt_key:
+                    self._live_prompts[table.prompt_key] = t
+                    break
 
-    def _evict_one_prefix(self) -> None:
-        key, (_, pages) = self._registry.popitem(last=False)   # FIFO
+    def _evict_one_prefix(self, key: Optional[bytes] = None) -> None:
+        if key is None:
+            key, (_, pages) = self._registry.popitem(last=False)   # FIFO
+        else:
+            _, pages = self._registry.pop(key)
         for p in pages:
             self._registry_refc[p] -= 1
             self._decref(p)

@@ -559,7 +559,10 @@ class InferenceServer:
             cand = self._next_admission()
             if cand is None:               # an admission gate said "not yet"
                 break
-            emitted += self._admit(cand)
+            got = self._admit(cand)
+            if got is None:                # pool dry mid-admission: requeued
+                break
+            emitted += got
         if self._pool is not None:
             # make every active row's next position writable BEFORE the
             # batched decode: page-boundary growth, CoW at divergence points,
@@ -651,9 +654,11 @@ class InferenceServer:
         pool cannot cover the candidate — its worst-case lifetime page need
         in strict mode, its immediate prompt need under `page_overcommit` —
         out of free + registry-evictable pages net of the commitments already
-        promised to active requests. Never defers an empty batch: `submit`
-        bounded the request to the pool, and with nothing active every
-        non-free page is registry-evictable, so the candidate always fits."""
+        promised to active requests and of the registry pages the candidate
+        itself would pin. Never defers an empty batch: `submit` bounded the
+        request to the pool, and with nothing active every non-free page is
+        either registry-evictable or a prefix the candidate shares, so even
+        after pinning its shares the candidate always fits."""
         if self._pool is None:
             return False
         if not any(h is not None for h in self._slot_handle):
@@ -760,13 +765,33 @@ class InferenceServer:
         self.close()
 
     # -- admission / retirement ----------------------------------------------
-    def _admit(self, handle: RequestHandle) -> int:
+    def _admit(self, handle: RequestHandle) -> Optional[int]:
         """Prefill one queued request into a free slot. Failure-isolated: an
         exception anywhere in admission (prefill, slot write, the first
         token's `on_token` callback) retires THIS request with
-        `finish_reason="error"` and leaves the rest of the server intact."""
+        `finish_reason="error"` and leaves the rest of the server intact.
+
+        Returns the number of tokens emitted (0 or 1), or None when the page
+        pool ran dry mid-admission: the request goes BACK to the queue
+        (counted as a page deferral, nothing to unwind — the table is built
+        before the prefill), and the caller stops admitting this step."""
         slot = self._slot_handle.index(None)
         r = handle.request
+        table = prompt_np = None
+        if self._pool is not None:
+            prompt_np = np.asarray(r.prompt, dtype=np.int32)
+            table, _ = self._pool.admit(prompt_np, r.max_new_tokens,
+                                        uid=r.uid)
+            if table is None:
+                # the gate prices pinned shares, so this should not happen —
+                # but a dry pool defers rather than killing the request (the
+                # stall watchdog catches a gate that never opens)
+                logger.warning("page pool dry while admitting request %d; "
+                               "deferring it back to the queue", r.uid)
+                self.stats.page_deferrals += 1
+                self._queue.append(handle)
+                return None
+            self._tables[r.uid] = table
         handle.state = RequestState.PREFILL
         handle.slot = slot
         handle.admitted_at = self._clock()
@@ -781,16 +806,8 @@ class InferenceServer:
             self.stats.prefill_seconds += handle.prefill_seconds
             self.stats.admitted += 1
             if self._pool is not None:
-                prompt_np = np.asarray(r.prompt, dtype=np.int32)
-                table, _ = self._pool.admit(prompt_np, r.max_new_tokens,
-                                            uid=r.uid)
-                if table is None:
-                    raise RuntimeError(
-                        f"page pool dry while admitting request {r.uid} "
-                        f"(the admission gate approved it)")
-                # registered before the writes so any failure below releases
-                # the pages through the normal _retire path
-                self._tables[r.uid] = table
+                # the table was registered in _tables before the prefill, so
+                # any failure below releases the pages via the _retire path
                 self._pool.write_prompt(table, small)
                 self._pool.register_prefixes(prompt_np, table)
             else:

@@ -134,6 +134,102 @@ def test_commitment_gate_strict_vs_overcommit():
     assert over.can_admit(plan)                     # immediate need only
 
 
+def test_gate_prices_pinned_shared_pages():
+    """Registry-only pages a candidate would share stop being evictable the
+    moment it pins them, so the gate must not count them as available: with
+    the whole free list consumed by the shares' sibling, an extending prompt
+    that shares both registry pages cannot cover its one new page."""
+    pool = PagePool(_tiny_cfg(), num_pages=2, page_size=4, max_len=32,
+                    overcommit=True)
+    a = np.arange(8, dtype=np.int32)                # exactly 2 full pages
+    t, _ = pool.admit(a, 1, uid=0)
+    pool.register_prefixes(a, t)
+    pool.release(t)
+    assert pool.n_free == 0 and pool.n_evictable() == 2
+    ext = np.concatenate([a, np.arange(100, 104)]).astype(np.int32)
+    plan = pool.plan_admit(ext, 1)                  # shares 2, needs 1 more
+    assert plan.n_shared == 2 and plan.new_now == 1
+    assert plan.n_shared_evictable == 2
+    assert not pool.can_admit(plan)                 # 0 free after the pin
+    # once the registry is dropped, a prompt that fits the pool outright
+    # (2 pages, nothing pinned) admits again
+    pool.clear_prefix_cache()
+    assert pool.can_admit(pool.plan_admit(a, 1))
+
+
+def test_strict_reservations_survive_pinned_shares():
+    """Strict mode: admitting a prefix-sharing candidate must not invalidate
+    an active request's worst-case reservation by pinning the evictable pages
+    that reservation counted on (admitted requests provably finish)."""
+    pool = PagePool(_tiny_cfg(), num_pages=4, page_size=4, max_len=32)
+    x = np.arange(8, dtype=np.int32)
+    t, _ = pool.admit(x, 1, uid=0)
+    pool.register_prefixes(x, t)
+    pool.release(t)                                 # registry pins 2 pages
+    a, _ = pool.admit(np.arange(50, 54, dtype=np.int32), 8, uid=1)
+    assert a is not None                            # worst case 3: covered
+    plan_b = pool.plan_admit(x, 4)                  # shares both registry pages
+    assert plan_b.n_shared_evictable == 2
+    # pre-fix gate said yes (1 <= free 1 + evictable 2 - committed 2); the
+    # pin would have starved A's reserved growth mid-decode
+    assert not pool.can_admit(plan_b)
+    pool.release(a)
+    assert pool.can_admit(pool.plan_admit(x, 4))    # A gone: B fits
+    pool.check()
+
+
+def test_dry_alloc_skips_pinned_registry_entries():
+    """A dry allocation must not drain registry entries whose pages are
+    pinned by live tables — evicting them frees nothing and only destroys
+    future sharing."""
+    pool = PagePool(_tiny_cfg(), num_pages=2, page_size=4, max_len=32,
+                    overcommit=True)
+    a = np.arange(8, dtype=np.int32)
+    t, _ = pool.admit(a, 1, uid=0)
+    pool.register_prefixes(a, t)                    # t AND registry hold both
+    assert not pool.prepare_append(t, 8)            # dry: no page to evict
+    assert pool.stats.prefix_evictions == 0
+    assert pool.summary()["registry_entries"] == 2  # registry intact
+    pool.release(t)
+    pool.check()
+
+
+def test_failed_admit_leaves_parent_budget_intact():
+    """A rolled-back live fork must not leave the parent's budget inflated
+    (the +1 CoW charge applies only to admits that complete)."""
+    pool = PagePool(_tiny_cfg(), num_pages=2, page_size=4, max_len=32,
+                    overcommit=True)
+    prompt = np.arange(6, dtype=np.int32)           # 2 pages, second partial
+    a, _ = pool.admit(prompt, 1, uid=0)
+    budget0 = a.budget
+    ext = np.concatenate([prompt, [30, 31]]).astype(np.int32)
+    b, _ = pool.admit(ext, 1, uid=1)                # CoW of the partial page
+    assert b is None                                # pool dry: rolled back
+    assert a.budget == budget0
+    pool.check()
+    pool.release(a)
+    assert pool.n_free == pool.num_pages
+
+
+def test_live_prompt_repoints_to_surviving_duplicate():
+    """When the table holding the live-prompt entry retires, a still-live
+    duplicate of the same prompt takes over as the fork source."""
+    pool = PagePool(_tiny_cfg(), num_pages=8, page_size=4, max_len=32)
+    prompt = np.arange(6, dtype=np.int32)
+    a, _ = pool.admit(prompt, 4, uid=0)
+    b, _ = pool.admit(prompt.copy(), 4, uid=1)      # duplicate forks a
+    pool.release(a)
+    ext = np.concatenate([prompt, [30]]).astype(np.int32)
+    c, plan = pool.admit(ext, 4, uid=2)
+    assert plan.shared_len == 6 and plan.parent is b
+    assert c.pages[0] == b.pages[0]
+    for t in (b, c):
+        pool.release(t)
+    pool.clear_prefix_cache()
+    pool.check()
+    assert pool.n_free == pool.num_pages
+
+
 def test_pool_rejects_ssm_stacks():
     cfg = get_config("jamba-1.5-large-398b", reduced=True)
     with pytest.raises(ValueError):
@@ -249,6 +345,32 @@ def test_paged_decode_attention_scale_pairing():
     with pytest.raises(ValueError):
         paged_decode_attention(q, ka, va, pt, jnp.zeros(1, jnp.int32),
                                k_scale=ksa, v_scale=None)
+
+
+def test_server_decode_routes_through_paged_kernel(monkeypatch):
+    """The serving decode path must attend through the paged-attention
+    kernel dispatcher (`ops.paged_decode_attention` — XLA gather twin on
+    CPU, the Pallas kernel elsewhere), not a full-arena XLA gather of its
+    own: one call per attention sublayer per decode trace."""
+    rng = np.random.default_rng(17)  # local: keep the session stream intact
+    from repro.kernels import ops as kops
+    calls = []
+    real = kops.paged_decode_attention
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(kops, "paged_decode_attention", spy)
+    cfg, model, params = _setup()
+    reqs = [Request(uid=0, prompt=rng.integers(1, 127, 6).tolist(),
+                    max_new_tokens=3)]
+    results, _ = _serve(model, params, reqs, max_slots=2,
+                        page_size=4, num_pages=16)
+    assert results[0].finish_reason == "length"
+    # the jitted decode step traces once; the scanned attention sublayer
+    # routes through the dispatcher during that trace
+    assert calls, "paged decode did not route through the kernel dispatcher"
 
 
 # -- server-level token identity -----------------------------------------------
