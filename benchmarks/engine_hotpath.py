@@ -62,6 +62,9 @@ from repro.core.cache import ArrayLinkingAlignedCache, LinkingAlignedCache
 from repro.core.engine import EngineConfig, OffloadEngine
 from repro.core.placement import PlacementResult
 from repro.core.trace import SyntheticTraceConfig, synthetic_masks
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+log = get_logger("bench.hotpath")
 
 
 def _workload(quick: bool):
@@ -308,7 +311,9 @@ def main() -> None:
                          "sequential-replay fallbacks (the CI gate — "
                          "deterministic, unlike wall-clock)")
     ap.add_argument("--out", default="BENCH_hotpath.json")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure_logging(args.verbose)
     repeats = 1 if args.quick else 3
     w = _workload(args.quick)
 
@@ -357,8 +362,8 @@ def main() -> None:
         if ffn_kernel["auto_selected"] != "segments":
             sys.exit(f"auto did not promote segments on the linked layout: "
                      f"{ffn_kernel['auto_reason']}")
-        print("counter gate OK: array hot path ran fully vectorized; "
-              "ffn kernel equivalence OK")
+        log.info("counter gate OK: array hot path ran fully vectorized; "
+                 "ffn kernel equivalence OK")
 
 
 if __name__ == "__main__":

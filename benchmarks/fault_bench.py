@@ -55,6 +55,9 @@ from repro.models import build_model
 from repro.serving.engine import OffloadedFFNRuntime, Request, ServingEngine
 from repro.store import (FaultEvent, FaultPlan, RetryPolicy, build_pack,
                          seeded_layer_plans)
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+log = get_logger("bench.faults")
 
 RETRY = RetryPolicy(backoff_s=1e-4)     # real backoff shape, bench-friendly
 
@@ -219,7 +222,9 @@ def main() -> None:
                          "matching the injected plans, and supervision "
                          "surviving the worker death")
     ap.add_argument("--out", default="BENCH_faults.json")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure_logging(args.verbose)
 
     report = run(args.quick)
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
@@ -228,7 +233,7 @@ def main() -> None:
         bad = [k for k, ok in report["gates"].items() if not ok]
         if bad:
             sys.exit(f"fault-tolerance gates failed: {', '.join(bad)}")
-        print("fault gates OK: " + ", ".join(report["gates"]))
+        log.info("fault gates OK: %s", ", ".join(report["gates"]))
 
 
 if __name__ == "__main__":

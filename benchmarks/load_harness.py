@@ -82,8 +82,12 @@ import jax
 from repro.configs import get_config
 from repro.core import EngineConfig
 from repro.models import build_model
+from repro.obs import enable_tracing
 from repro.serving.engine import Request, build_offload_runtime
 from repro.serving.server import InferenceServer
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+log = get_logger("bench.load")
 
 MODES = ("resident", "offload")
 MAX_SLOTS = 4
@@ -509,7 +513,13 @@ def main() -> None:
                     help="allowed ratio of fresh p99_itl_steps to the "
                          "committed value (machine-normalized)")
     ap.add_argument("--out", default="BENCH_slo.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a Perfetto timeline of the whole sweep and "
+                         "write it to PATH (open at https://ui.perfetto.dev)")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure_logging(args.verbose)
+    tracer = enable_tracing() if args.trace_out else None
 
     out = pathlib.Path(args.out)
     committed = None
@@ -522,12 +532,17 @@ def main() -> None:
     report = run(args.quick, itl_tolerance=args.itl_tolerance,
                  committed=committed)
     out.write_text(json.dumps(report, indent=2) + "\n")
-    print(json.dumps(report, indent=2))
+    if tracer is not None:
+        events = tracer.export(args.trace_out)
+        log.info("trace: %d events (%d dropped) -> %s; open it at "
+                 "https://ui.perfetto.dev", len(events), tracer.dropped,
+                 args.trace_out)
+    print(json.dumps(report, indent=2))     # machine-parseable surface
     if args.check:
         bad = [k for k, ok in report["gates"].items() if not ok]
         if bad:
             sys.exit(f"SLO load gates failed: {', '.join(bad)}")
-        print("SLO load gates OK: " + ", ".join(report["gates"]))
+        log.info("SLO load gates OK: %s", ", ".join(report["gates"]))
 
 
 if __name__ == "__main__":

@@ -51,6 +51,9 @@ from repro.core.engine import EngineConfig, OffloadEngine
 from repro.core.placement import identity_placement, search_placement
 from repro.core.trace import SyntheticTraceConfig, synthetic_masks
 from repro.store import FileNeuronStore, write_pack
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+log = get_logger("bench.pack")
 
 
 def _workload(quick: bool):
@@ -173,7 +176,9 @@ def main() -> None:
                          "file store's modeled stats matched the in-memory "
                          "store (both deterministic, unlike wall-clock)")
     ap.add_argument("--out", default="BENCH_pack.json")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure_logging(args.verbose)
 
     report = run(args.quick)
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
@@ -186,8 +191,8 @@ def main() -> None:
         if li > ident:
             sys.exit(f"linked layout issued MORE real file extents than "
                      f"identity ({li} > {ident}) — placement regressed")
-        print(f"extent gate OK: linked {li} <= identity {ident} real reads "
-              f"(x{report['extent_ratio']} fewer)")
+        log.info("extent gate OK: linked %d <= identity %d real reads "
+                 "(x%s fewer)", li, ident, report["extent_ratio"])
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fault_bench, kernel_bench, load_harness,
-                            moe_expert_bench, pack_io, paper_figures,
-                            roofline, serving_pipeline)
+                            moe_expert_bench, obs_overhead, pack_io,
+                            paper_figures, roofline, serving_pipeline)
 
     suites = [
         ("fig4_bandwidth", paper_figures.fig4_bandwidth),
@@ -36,6 +36,7 @@ def main() -> None:
         ("pack_io", pack_io.pack_io),
         ("fault_bench", fault_bench.fault_bench),
         ("load_harness", load_harness.load_harness),
+        ("obs_overhead", obs_overhead.obs_overhead),
         ("kernels", kernel_bench.kernel_bench),
         ("moe_expert", moe_expert_bench.moe_expert_bench),
         ("roofline", roofline.rows_for_run),

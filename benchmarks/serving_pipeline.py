@@ -59,6 +59,10 @@ if __package__ in (None, ""):                     # standalone script mode
 from benchmarks.common import (N_SIM_LAYERS, Row, build_sim_model, make_engines,
                                model_geometry)
 from repro.core.pipeline import IOScheduler
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+log = get_logger("bench.serving")
+
 
 MODEL_ID = "opt-350m"       # smallest paper model: keeps the sweep fast
 CPU_GFLOPS = 8.0            # effective smartphone big-core FP16 GEMV throughput
@@ -777,7 +781,9 @@ def main() -> None:
                          "wall-clock)")
     ap.add_argument("--out", default="BENCH_prefetch.json")
     ap.add_argument("--serving-out", default="BENCH_serving.json")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure_logging(args.verbose)
 
     # read the committed baseline BEFORE the fresh run overwrites --out
     committed_eff = None
@@ -822,21 +828,21 @@ def main() -> None:
                 sys.exit(f"overlap efficiency regressed: {fresh_eff:.3f} < "
                          f"{args.efficiency_tolerance} x committed "
                          f"({committed_eff:.3f})")
-        print(f"prefetch gate OK: pipelined {el['pipelined_tokens_per_s']} "
-              f"tok/s vs serial {el['serial_tokens_per_s']} "
-              f"({el['improvement']}x, emulated device latency, "
-              f"ffn_kernel={el['ffn_kernel']}), oracle + kernel "
-              f"token-identical e2e, overlap efficiency {fresh_eff:.3f}"
-              + (f" vs committed {committed_eff:.3f}"
-                 if committed_eff is not None else ""))
+        log.info("prefetch gate OK: pipelined %s tok/s vs serial %s "
+                 "(%sx, emulated device latency, ffn_kernel=%s), oracle + "
+                 "kernel token-identical e2e, overlap efficiency %.3f%s",
+                 el["pipelined_tokens_per_s"], el["serial_tokens_per_s"],
+                 el["improvement"], el["ffn_kernel"], fresh_eff,
+                 (f" vs committed {committed_eff:.3f}"
+                  if committed_eff is not None else ""))
         cont = serving["continuous"]["tokens_per_s"]
         grp = serving["grouped"]["tokens_per_s"]
         if cont < args.serving_tolerance * grp:
             sys.exit(f"continuous batching regressed: {cont:.1f} tok/s < "
                      f"{args.serving_tolerance} x grouped ({grp:.1f})")
-        print(f"serving gate OK: continuous {cont:.1f} tok/s vs "
-              f"length-grouped {grp:.1f} ({serving['speedup']}x on the "
-              f"mixed-length Poisson workload)")
+        log.info("serving gate OK: continuous %.1f tok/s vs "
+                 "length-grouped %.1f (%sx on the mixed-length Poisson "
+                 "workload)", cont, grp, serving["speedup"])
         pk = serving["paged_kv"]
         conc, sp, pr = pk["concurrency"], pk["shared_prefix"], pk["pressure"]
         if conc["concurrency_ratio"] < args.paged_concurrency_floor:
@@ -860,14 +866,14 @@ def main() -> None:
                 and pr["partial_prefix_identical"]
                 and pr["pages_reclaimed"] and pr["alloc_freed_balanced"]):
             sys.exit(f"paged pressure arm failed: {pr}")
-        print(f"paged KV gate OK: {conc['paged_peak_concurrent']} vs "
-              f"{conc['baseline_peak_concurrent']} concurrent requests "
-              f"({conc['concurrency_ratio']}x) at the same "
-              f"{pk['budget']['kv_positions']}-position KV budget, "
-              f"token-identical, clean counters zero; CoW fork identical "
-              f"({sp['cow_copies']} copies); pressure arm preempted "
-              f"{pr['n_preempted']} with exact partial prefixes and full "
-              f"page reclamation")
+        log.info("paged KV gate OK: %s vs %s concurrent requests (%sx) "
+                 "at the same %s-position KV budget, token-identical, clean "
+                 "counters zero; CoW fork identical (%s copies); pressure "
+                 "arm preempted %s with exact partial prefixes and full "
+                 "page reclamation", conc["paged_peak_concurrent"],
+                 conc["baseline_peak_concurrent"],
+                 conc["concurrency_ratio"], pk["budget"]["kv_positions"],
+                 sp["cow_copies"], pr["n_preempted"])
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.cache import make_linking_aligned_cache
 from repro.core.placement import PlacementResult
 from repro.core.storage import IOStats, ManagedReader, NeuronStore, UFSDevice
+from repro.obs import get_tracer
 
 
 @dataclasses.dataclass
@@ -235,15 +236,21 @@ class OffloadEngine:
         reader, but does NOT admit or append history — that is the
         complete-phase (`_admit_and_record`), so a background worker can run
         this ahead of time."""
-        hit_mask = self.cache.lookup_mask(union)
-        miss_mask = ~hit_mask
-        misses = union[miss_mask]
+        tracer = get_tracer()
+        with tracer.span("probe") as sp:
+            hit_mask = self.cache.lookup_mask(union)
+            miss_mask = ~hit_mask
+            misses = union[miss_mask]
+            sp.set(n_union=int(union.size), n_misses=int(misses.size))
         io = IOStats()
         io.run_lengths = np.zeros(0, dtype=np.int64)
         if misses.size:
-            _, io = self.reader.read(misses, fetch_payload=False)
-            if self.cfg.emulate_read_latency:
-                time.sleep(io.seconds)
+            with tracer.span("read") as sp:
+                _, io = self.reader.read(misses, fetch_payload=False)
+                if self.cfg.emulate_read_latency:
+                    time.sleep(io.seconds)
+                sp.set(n_misses=int(misses.size), extents=int(io.n_ops),
+                       modeled_s=io.seconds, measured_s=io.measured_seconds)
         return miss_mask, io
 
     def predict_read_seconds(self, union: np.ndarray) -> float:
@@ -272,7 +279,8 @@ class OffloadEngine:
                         n_hits=n_activated - n_misses, n_misses=n_misses,
                         io=io, run_lengths=run_lengths)
         if misses.size:
-            self.cache.admit(misses, self.placement.physical_of(misses))
+            with get_tracer().span("admit", n_misses=int(misses.size)):
+                self.cache.admit(misses, self.placement.physical_of(misses))
         self.history.append(ts)
         return ts
 
@@ -396,9 +404,14 @@ class OffloadEngine:
                 topup_miss = extra[~hit2]
                 n_extra_hits = int(np.count_nonzero(hit2))
                 if topup_miss.size:              # synchronous top-up read
-                    _, io2 = self.reader.read(topup_miss, fetch_payload=False)
-                    if self.cfg.emulate_read_latency:
-                        time.sleep(io2.seconds)
+                    with get_tracer().span("topup") as sp:
+                        _, io2 = self.reader.read(topup_miss,
+                                                  fetch_payload=False)
+                        if self.cfg.emulate_read_latency:
+                            time.sleep(io2.seconds)
+                        sp.set(n_topup=int(topup_miss.size),
+                               extents=int(io2.n_ops), modeled_s=io2.seconds,
+                               measured_s=io2.measured_seconds)
                     io = dataclasses.replace(io)  # don't mutate the pending copy
                     io.add(io2)
                     run_lengths = np.concatenate([run_lengths, io2.run_lengths])

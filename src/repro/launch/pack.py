@@ -20,7 +20,9 @@ import jax
 from repro.configs import ASSIGNED_CONFIGS, get_config
 from repro.models import build_model
 from repro.store.packer import build_pack
-from repro.utils import logger
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+logger = get_logger("launch.pack")
 
 
 def main(argv=None) -> None:
@@ -52,7 +54,9 @@ def main(argv=None) -> None:
     ap.add_argument("--n-layers", type=int, default=None)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    add_verbosity_flag(ap)
     args = ap.parse_args(argv)
+    configure_logging(args.verbose)
 
     overrides = dict(vocab_size=args.vocab, activation="relu")
     for key in ("d_model", "d_ff", "n_layers"):

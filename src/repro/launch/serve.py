@@ -26,9 +26,12 @@ import numpy as np
 from repro.configs import ASSIGNED_CONFIGS, get_config
 from repro.core import EngineConfig, IOScheduler
 from repro.models import build_model
+from repro.obs import enable_tracing
 from repro.serving.engine import Request, build_offload_runtime
 from repro.serving.server import InferenceServer
-from repro.utils import logger
+from repro.utils import add_verbosity_flag, configure_logging, get_logger
+
+logger = get_logger("launch.serve")
 
 
 def main() -> None:
@@ -108,7 +111,15 @@ def main() -> None:
                          "instead of the strict worst-case reservation")
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a Chrome trace-event / Perfetto timeline of "
+                         "the whole run (server steps, engine reads, prefetch "
+                         "worker, per-request lanes) and write it to PATH; "
+                         "open it at https://ui.perfetto.dev")
+    add_verbosity_flag(ap)
     args = ap.parse_args()
+    configure_logging(args.verbose)
+    tracer = enable_tracing() if args.trace_out else None
     if bool(args.page_size) != bool(args.num_pages):
         raise SystemExit("pass both --page-size and --num-pages, or neither")
     mode = "offload" if args.offload else args.mode
@@ -283,6 +294,11 @@ def main() -> None:
                         p["measured_overlap_efficiency"] * 100)
     if offload is not None:
         offload.close()     # releases FileNeuronStore fds for --pack runs
+    if tracer is not None:
+        events = tracer.export(args.trace_out)
+        logger.info("trace: %d events (%d dropped) -> %s; open it at "
+                    "https://ui.perfetto.dev", len(events), tracer.dropped,
+                    args.trace_out)
 
 
 if __name__ == "__main__":

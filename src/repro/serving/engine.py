@@ -59,6 +59,7 @@ from repro.core.sparse_ffn import sparse_ffn_from_bundles
 from repro.core.storage import NeuronStore, UFSDevice
 from repro.models import transformer
 from repro.models.model import Model
+from repro.obs import get_tracer
 
 
 @dataclasses.dataclass
@@ -212,9 +213,13 @@ class PrefetchWorker:
                 return
             layer, masks = job
             try:
-                t0 = time.perf_counter()
-                staged = self._runtime._stage_layer(layer, masks)
-                staged.io_host_seconds = time.perf_counter() - t0
+                # span lands on the worker's own thread track, so the exported
+                # trace shows layer k+1's read overlapping layer k's compute
+                with get_tracer().span("prefetch", layer=layer) as sp:
+                    t0 = time.perf_counter()
+                    staged = self._runtime._stage_layer(layer, masks)
+                    staged.io_host_seconds = time.perf_counter() - t0
+                    sp.set(n_staged=staged.k_spec)
                 self._results.put(("ok", layer, staged))
             except Exception as e:  # noqa: BLE001 — re-raised at wait();
                 # BaseException (FatalFault & co.) deliberately falls
@@ -555,6 +560,7 @@ class OffloadedFFNRuntime:
         which must not be clobbered. Output is exact: the payload comes
         from the same store reads the serial path would issue."""
         t0 = time.perf_counter()
+        get_tracer().instant("degraded_layer", layer=layer)
         masks = np.atleast_2d(np.asarray(true_masks))
         res = self.engines[layer].step_masks(masks, fetch_payload=False)
         y = self._ffn_compute(layer, h, res.ids, staging_slot="degraded")
@@ -581,7 +587,8 @@ class OffloadedFFNRuntime:
             return self._complete_degraded(layer, h, true_masks)
         t0 = time.perf_counter()
         try:
-            pf = self._worker.wait(layer)
+            with get_tracer().span("prefetch_wait", layer=layer):
+                pf = self._worker.wait(layer)
         except Exception as e:
             from repro.utils import logger
             self._inflight.discard(layer)

@@ -65,6 +65,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 from repro.models.kvcache import PagedKVCache, PagedQuantKVCache
+from repro.obs import get_tracer
 
 
 def cdiv(a: int, b: int) -> int:
@@ -218,6 +219,7 @@ class PagePool:
         p = self._free.pop()
         assert self._refc[p] == 0, f"page {p} on free list with refc>0"
         self._refc[p] = 1
+        get_tracer().instant("page_alloc", page=p, free=len(self._free))
         self.stats.pages_allocated += 1
         self.stats.peak_page_occupancy = max(self.stats.peak_page_occupancy,
                                              self.n_live)
@@ -405,6 +407,7 @@ class PagePool:
         self._decref(src)
         table.pages[page_idx] = dst
         table.allocated += 1
+        get_tracer().instant("cow_copy", uid=table.uid, src=src, dst=dst)
         self.stats.cow_copies += 1
         return True
 
@@ -517,6 +520,7 @@ class PagePool:
         for p in pages:
             self._registry_refc[p] -= 1
             self._decref(p)
+        get_tracer().instant("prefix_evict", n_pages=len(pages))
         self.stats.prefix_evictions += 1
 
     def clear_prefix_cache(self) -> int:

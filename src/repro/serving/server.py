@@ -95,6 +95,8 @@ import numpy as np
 
 from repro.core.pipeline import IOScheduler
 from repro.core.predictor import PredictorParams, predict_mask
+from repro.obs import get_metrics, get_tracer
+from repro.obs import request_timeline as _build_request_timeline
 from repro.utils import logger
 from repro.models import transformer
 from repro.models.layers import apply_norm, embed_tokens, unembed
@@ -399,6 +401,7 @@ class InferenceServer:
                 offload.lookahead = la
                 offload._lookahead_np = None
             self._la_params = la
+            self.scheduler.register_metrics()
             if prefetch and la is not None and \
                     cfg.activation not in ("relu", "relu2"):
                 # speculative lookahead OVER-predicts by design; both FFN
@@ -412,6 +415,33 @@ class InferenceServer:
                     f"prefetch with speculative lookahead is exact only for "
                     f"relu/relu2 activations, not {cfg.activation!r}; use "
                     f"lookahead='oracle' or serve serially")
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Expose live server state through the global `MetricsRegistry` —
+        gauge callables reading `ServerStats` and the queue/slot pool, so the
+        registry and the legacy stats surface agree by construction. The
+        registry keeps only the most recently constructed server per name
+        (re-registration re-points the gauge)."""
+        reg = get_metrics()
+        reg.register_gauge("server.queue_depth", lambda: len(self._queue))
+        reg.register_gauge("server.n_active", lambda: self.n_active)
+        for field in ("tokens_emitted", "decode_steps", "admitted", "retired",
+                      "rejected", "shed", "timeouts", "io_deferrals",
+                      "page_deferrals", "preemptions", "prefill_seconds",
+                      "decode_seconds"):
+            reg.register_gauge(f"server.{field}",
+                               lambda f=field: getattr(self.stats, f))
+        reg.register_gauge("server.occupancy", lambda: self.stats.occupancy)
+        self._step_hist = reg.histogram("server.step_seconds")
+
+    def request_timeline(self, handle: RequestHandle) -> Dict[str, Any]:
+        """Per-request timeline for SLO debugging: phase breakdown
+        (queued/prefill/decode) from the handle's monotonic lifecycle stamps,
+        per-token inter-token gaps, resolved SLOs and whether each was met,
+        plus — when tracing is enabled — the trace spans tagged with this
+        request's uid (`repro.obs.request_timeline`)."""
+        return _build_request_timeline(handle)
 
     # -- submission ----------------------------------------------------------
     def submit(self, request: Request,
@@ -471,6 +501,8 @@ class InferenceServer:
                 logger.warning("queue full (%d): rejecting request %d "
                                "(priority %d)", len(self._queue),
                                request.uid, request.priority)
+                get_tracer().instant("reject", uid=request.uid,
+                                     priority=request.priority)
                 self.stats.rejected += 1
                 self._retire(handle, "rejected")
                 return handle
@@ -479,6 +511,8 @@ class InferenceServer:
                            len(self._queue), victim.uid,
                            victim.request.priority, request.uid,
                            request.priority)
+            get_tracer().instant("shed", uid=victim.uid,
+                                 for_uid=request.uid)
             self._queue.remove(victim)
             self.stats.shed += 1
             self._retire(victim, "rejected")
@@ -551,6 +585,11 @@ class InferenceServer:
         A `stall_limit` run of no-progress iterations with work pending
         raises `ServerStalledError`."""
         retired0, admitted0 = self.stats.retired, self.stats.admitted
+        with get_tracer().span("step", queued=len(self._queue),
+                               active=self.n_active):
+            return self._step_inner(retired0, admitted0)
+
+    def _step_inner(self, retired0: int, admitted0: int) -> int:
         emitted = 0
         now = self._clock()
         self._expire_active(now)
@@ -641,9 +680,11 @@ class InferenceServer:
                    key=lambda h: (-h.request.priority, _deadline_or_inf(h),
                                   h._order))
         if self._page_defers(best):
+            get_tracer().instant("defer", uid=best.uid, gate="page")
             self.stats.page_deferrals += 1
             return None
         if self._io_defers(best):
+            get_tracer().instant("defer", uid=best.uid, gate="io")
             self.stats.io_deferrals += 1
             return None
         self._queue.remove(best)
@@ -798,11 +839,19 @@ class InferenceServer:
         try:
             T = len(r.prompt)
             prompt = jnp.asarray(np.asarray(r.prompt, dtype=np.int32)[None])
+            tr = get_tracer()
+            t0u = tr.now()
             t0 = time.perf_counter()
             small = self.model.init_cache(1, self.max_len, swa=self.swa)
             logits, small = self._prefill_fn(self.params, prompt, small)
             row = np.asarray(logits[0, -1], dtype=np.float32)  # forces the sync
             handle.prefill_seconds = time.perf_counter() - t0
+            t1u = tr.now()
+            tr.complete("prefill", t0u, t1u, uid=r.uid, prompt_len=T,
+                        slot=slot)
+            # mirrored onto the request's own lane, so one Perfetto row shows
+            # the request's whole life (prefill + every decode span)
+            tr.complete("prefill", t0u, t1u, track=f"req {r.uid}", uid=r.uid)
             self.stats.prefill_seconds += handle.prefill_seconds
             self.stats.admitted += 1
             if self._pool is not None:
@@ -818,6 +867,12 @@ class InferenceServer:
             tok = self._sample_row(handle, row)
             self._cur[slot] = tok
             self._emit(handle, tok)
+            # the first token comes out of the prefill forward pass; give it
+            # its decode span too so "one decode span per emitted token"
+            # holds exactly over a whole run
+            t2u = tr.now()
+            tr.complete("decode", t1u, t2u, track=f"req {r.uid}", uid=r.uid,
+                        tok=tok, n_tokens=1, from_prefill=True)
         except Exception as e:  # noqa: BLE001 — per-request isolation
             self._fail_request(handle, e)
             return 0
@@ -869,6 +924,8 @@ class InferenceServer:
 
     def _retire(self, handle: RequestHandle, reason: str,
                 error: Optional[BaseException] = None) -> None:
+        get_tracer().instant("retire", uid=handle.uid, finish_reason=reason,
+                             n_tokens=len(handle.tokens))
         handle.finish_reason = reason
         handle.error = error
         handle.state = RequestState.FINISHED
@@ -938,6 +995,9 @@ class InferenceServer:
                     key=lambda a: (a.request.priority, -_deadline_or_inf(a),
                                    -a._order))
                 self.stats.preemptions += 1
+                get_tracer().instant("preempt", uid=victim.uid,
+                                     for_uid=h.uid,
+                                     priority=victim.request.priority)
                 logger.warning(
                     "page pool dry growing request %d (pos %d): preempting "
                     "request %d (priority %d, %d tokens) with "
@@ -997,10 +1057,16 @@ class InferenceServer:
 
     def _decode_iteration(self) -> int:
         active = self._active_mask()
+        tr = get_tracer()
+        t0u = tr.now()
         if self.mode == "resident":
             logits_rows, token_wall, req_io, over = self._decode_resident()
         else:
             logits_rows, token_wall, req_io, over = self._decode_offload(active)
+        t1u = tr.now()
+        tr.complete("decode_step", t0u, t1u, batch=int(active.sum()),
+                    step=self.stats.decode_steps)
+        self._step_hist.observe(token_wall)
         self.stats.decode_seconds += token_wall
         self.stats.decode_steps += 1
         self.stats.slot_steps_active += int(active.sum())
@@ -1024,6 +1090,11 @@ class InferenceServer:
                 self._cur[slot] = tok
                 self._emit(handle, tok)             # may free the slot
                 emitted += 1
+                # one decode span per emitted token on the request's own
+                # lane; the duration is the shared batched step's wall
+                tr.complete("decode", t0u, t1u, track=f"req {handle.uid}",
+                            uid=handle.uid, tok=tok,
+                            n_tokens=len(handle.tokens))
             except Exception as e:  # noqa: BLE001
                 self._fail_request(handle, e)
         return emitted

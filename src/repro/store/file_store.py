@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.collapse import Extent
 from repro.core.storage import IOStats, NeuronStore, UFSDevice
+from repro.obs import get_tracer
 from repro.store.faults import (CorruptExtentError, FatalFault, FaultPlan,
                                 RetryPolicy, TransientIOError, is_retryable)
 from repro.store.format import NeuronPack, dequantize_int8
@@ -296,32 +297,42 @@ class FileNeuronStore(NeuronStore):
         read_index = next(self._read_counter)
         policy = self.retry
         attempt = 0
-        while True:
-            try:
-                buf = self._read_extent_attempt(start, length, read_index,
-                                                attempt)
-                if self._row_crcs is not None:
-                    self._verify_extent(buf, start, length, read_index)
-                return np.frombuffer(buf, dtype=self._stored_dtype).reshape(
-                    length, self.bundle_width)
-            except (_ChecksumMismatch, OSError) as e:
-                corrupt = isinstance(e, _ChecksumMismatch)
-                if corrupt and stats is not None:
-                    stats.corrupt_extents += 1
-                if not corrupt and not is_retryable(e):
-                    raise
-                if attempt >= policy.max_retries:
+        tracer = get_tracer()
+        with tracer.span("pread", start=int(start),
+                         length=int(length)) as sp:
+            while True:
+                try:
+                    buf = self._read_extent_attempt(start, length, read_index,
+                                                    attempt)
+                    if self._row_crcs is not None:
+                        self._verify_extent(buf, start, length, read_index)
+                    sp.set(attempts=attempt + 1)
+                    return np.frombuffer(
+                        buf, dtype=self._stored_dtype).reshape(
+                            length, self.bundle_width)
+                except (_ChecksumMismatch, OSError) as e:
+                    corrupt = isinstance(e, _ChecksumMismatch)
+                    if corrupt and stats is not None:
+                        stats.corrupt_extents += 1
                     if corrupt:
-                        raise CorruptExtentError(
-                            f"{e} — still corrupt after "
-                            f"{policy.max_retries} re-reads")
-                    raise
-                if stats is not None:
-                    stats.retries += 1
-                delay = policy.backoff(attempt)
-                if delay > 0:
-                    time.sleep(delay)
-                attempt += 1
+                        tracer.instant("corrupt_extent", start=int(start),
+                                       attempt=attempt)
+                    if not corrupt and not is_retryable(e):
+                        raise
+                    if attempt >= policy.max_retries:
+                        if corrupt:
+                            raise CorruptExtentError(
+                                f"{e} — still corrupt after "
+                                f"{policy.max_retries} re-reads")
+                        raise
+                    if stats is not None:
+                        stats.retries += 1
+                    tracer.instant("read_retry", start=int(start),
+                                   attempt=attempt)
+                    delay = policy.backoff(attempt)
+                    if delay > 0:
+                        time.sleep(delay)
+                    attempt += 1
 
     def _serve_extents(self, extents: List[Extent], phys: np.ndarray,
                        fetch_payload: bool,

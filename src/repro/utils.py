@@ -5,6 +5,7 @@ import contextlib
 import dataclasses
 import json
 import logging
+import os
 import time
 from typing import Any, Dict, Iterator
 
@@ -14,9 +15,41 @@ import numpy as np
 logger = logging.getLogger("repro")
 if not logger.handlers:
     _h = logging.StreamHandler()
-    _h.setFormatter(logging.Formatter("[%(asctime)s %(levelname)s] %(message)s", "%H:%M:%S"))
+    _h.setFormatter(logging.Formatter(
+        "[%(asctime)s %(levelname)s %(name)s] %(message)s", "%H:%M:%S"))
     logger.addHandler(_h)
-    logger.setLevel(logging.INFO)
+    logger.setLevel(os.environ.get("REPRO_LOG_LEVEL", "INFO").upper())
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    """A child of the shared `repro` logger (handler + level configured
+    above, overridable via the REPRO_LOG_LEVEL env var). Pass a bare
+    component name ("bench.load") or a fully-qualified one
+    ("repro.serving"); both land under the `repro` hierarchy so
+    `set_log_level` / `--verbose` control everything at once."""
+    if name != "repro" and not name.startswith("repro."):
+        name = f"repro.{name}"
+    return logging.getLogger(name)
+
+
+def set_log_level(level: int | str) -> None:
+    """Set the level of the whole `repro` logger hierarchy (the `--verbose`
+    flag implementation: CLIs call `set_log_level("DEBUG")`)."""
+    logger.setLevel(level.upper() if isinstance(level, str) else level)
+
+
+def add_verbosity_flag(parser) -> None:
+    """Attach the shared `-v/--verbose` argparse flag (repeatable)."""
+    parser.add_argument(
+        "-v", "--verbose", action="count", default=0,
+        help="increase log verbosity (-v: DEBUG); default level INFO, "
+             "or the REPRO_LOG_LEVEL env var")
+
+
+def configure_logging(verbose: int = 0) -> None:
+    """Apply a parsed `--verbose` count to the shared logger."""
+    if verbose > 0:
+        set_log_level(logging.DEBUG)
 
 
 @contextlib.contextmanager
